@@ -1,0 +1,120 @@
+"""Shared benchmark scaffolding: a tiny-but-real transformer training setup
+(reduced transformer-wmt — the paper's own WMT workload family) driven by
+each distributed algorithm on CPU, with per-superstep wire-byte accounting."""
+from __future__ import annotations
+
+import sys
+import time
+from dataclasses import dataclass
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.algorithms import make_algorithm  # noqa: E402
+from repro.algorithms.sgp import sgp_init_prev  # noqa: E402
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.core import (SwarmConfig, make_graph, make_swarm_step,  # noqa: E402
+                        sample_matching, swarm_init)
+from repro.core.swarm import SwarmState, sample_h_counts  # noqa: E402
+from repro.data import DataConfig, SyntheticLMDataset, make_node_batches  # noqa: E402
+from repro.models import init_params, loss_fn as model_loss  # noqa: E402
+from repro.optim import make_optimizer  # noqa: E402
+from repro.quant.schemes import ModularQuantConfig, payload_bytes  # noqa: E402
+
+
+@dataclass
+class BenchSetup:
+    n_nodes: int = 8
+    H: int = 2
+    seq: int = 64
+    batch: int = 2          # per node per local step
+    lr: float = 0.08
+    d_model: int = 128
+    layers: int = 2
+    seed: int = 0
+    graph: str = "complete"
+
+
+def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
+          h_mode="fixed"):
+    cfg = reduced(get_config("transformer-wmt"), n_layers=setup.layers,
+                  d_model=setup.d_model, vocab=512)
+    graph = make_graph(setup.graph, setup.n_nodes)
+    opt = make_optimizer("sgd", lr=setup.lr, momentum=0.9)
+    lf = lambda p, mb: model_loss(cfg, p, mb)  # noqa: E731
+    lr_fn = lambda s: setup.lr  # noqa: E731
+    if algo == "swarm":
+        scfg = SwarmConfig(n_nodes=setup.n_nodes, H=setup.H, h_mode=h_mode,
+                           quantize=quantize, nonblocking=nonblocking,
+                           quant=ModularQuantConfig(safety=16.0))
+        step = make_swarm_step(scfg, lf, opt.update, lr_fn)
+    else:
+        kw = dict(loss_fn=lf, opt_update=opt.update, lr_fn=lr_fn,
+                  n_nodes=setup.n_nodes)
+        if algo == "localsgd":
+            kw["H"] = setup.H
+        if algo == "dpsgd":
+            kw["graph"] = graph
+        step = make_algorithm(algo, **kw)
+        scfg = SwarmConfig(n_nodes=setup.n_nodes,
+                           H=setup.H if algo in ("localsgd",) else 1)
+    state = swarm_init(jax.random.PRNGKey(setup.seed), scfg,
+                       lambda k: init_params(k, cfg), opt.init)
+    if algo == "sgp":
+        state = SwarmState(state.params, state.opt,
+                           sgp_init_prev(setup.n_nodes), state.step)
+    ds = SyntheticLMDataset(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=setup.seq,
+                   seed=setup.seed), n_nodes=setup.n_nodes)
+    return cfg, graph, scfg, jax.jit(step), state, ds
+
+
+def run_steps(setup, algo, steps, **kw):
+    cfg, graph, scfg, step, state, ds = build(setup, algo, **kw)
+    rng_np = np.random.default_rng(setup.seed)
+    key = jax.random.PRNGKey(setup.seed + 1)
+    h_max = scfg.h_max if scfg.h_mode == "geometric" else scfg.H
+    losses, gammas, times = [], [], []
+    for t in range(steps):
+        nb = make_node_batches(ds, t, setup.batch * h_max)
+        batch = {k: jnp.asarray(v.reshape(setup.n_nodes, h_max, setup.batch,
+                                          setup.seq))
+                 for k, v in nb.items()}
+        perm = jnp.asarray(sample_matching(graph, rng_np))
+        h = jnp.asarray(sample_h_counts(scfg, rng_np))
+        key, sub = jax.random.split(key)
+        t0 = time.time()
+        state, m = step(state, batch, perm, h, sub)
+        m = jax.device_get(m)
+        times.append(time.time() - t0)
+        losses.append(float(m["loss"]))
+        gammas.append(float(m.get("gamma", 0.0)))
+    return {"loss": losses, "gamma": gammas,
+            "us_per_step": float(np.mean(times[2:]) * 1e6),
+            "n_params": sum(x.size for x in jax.tree.leaves(state.params)) //
+            setup.n_nodes}
+
+
+def comm_bytes_per_superstep(algo: str, n_nodes: int, n_params: int,
+                             H: int, quantize=False) -> float:
+    """Wire bytes PER NODE per superstep (fp32 payload accounting, matching
+    the paper's Fig. 4 communication-cost comparison)."""
+    P = 4 * n_params
+    if quantize:
+        P = payload_bytes(ModularQuantConfig(), n_params)
+    if algo == "swarm":
+        return P  # one pairwise exchange every H local steps (per superstep)
+    if algo == "adpsgd":
+        return P * H  # pairwise exchange EVERY step
+    if algo == "dpsgd":
+        return P * H * 4  # r=4 regular graph: every neighbor, every step
+    if algo == "sgp":
+        return P * H  # one out-push per step
+    if algo == "localsgd":
+        return 2 * P  # ring all-reduce per superstep
+    if algo == "allreduce":
+        return 2 * P * H  # ring all-reduce every step
+    raise ValueError(algo)

@@ -1,0 +1,26 @@
+"""Extension 3: 8-bit modular-quantized gossip (paper Fig. 8) — convergence
+parity with fp32 exchange at ~4x wire compression.
+
+  PYTHONPATH=src python examples/quantized_swarm.py
+"""
+import sys
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import numpy as np
+
+from benchmarks.common import BenchSetup, comm_bytes_per_superstep, run_steps
+
+setup = BenchSetup(n_nodes=8, H=2)
+fp = run_steps(setup, "swarm", 50)
+q8 = run_steps(setup, "swarm", 50, quantize=True)
+b_fp = comm_bytes_per_superstep("swarm", 8, fp["n_params"], 2)
+b_q8 = comm_bytes_per_superstep("swarm", 8, q8["n_params"], 2, quantize=True)
+print(f"fp32 gossip: final loss {np.mean(fp['loss'][-5:]):.4f}, "
+      f"{b_fp / 1e6:.2f} MB/node/superstep")
+print(f"int8 gossip: final loss {np.mean(q8['loss'][-5:]):.4f}, "
+      f"{b_q8 / 1e6:.2f} MB/node/superstep "
+      f"({b_fp / b_q8:.2f}x compression)")
+print(f"Γ (fp32) {np.mean(fp['gamma'][-5:]):.5f} vs "
+      f"Γ (int8) {np.mean(q8['gamma'][-5:]):.5f} — the distance-bounded "
+      "quantizer keeps the swarm concentrated.")

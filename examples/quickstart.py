@@ -1,0 +1,53 @@
+"""Quickstart: SwarmSGD in ~40 lines.
+
+Eight decentralized nodes train a small transformer with 2 local SGD steps
+between pairwise gossip interactions (Algorithm 1), on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import SwarmConfig, make_graph, make_swarm_step, sample_matching, swarm_init
+from repro.core.swarm import sample_h_counts
+from repro.data import DataConfig, SyntheticLMDataset, make_node_batches
+from repro.models import init_params, loss_fn
+from repro.optim import make_optimizer
+
+N_NODES, H, SEQ, BATCH, STEPS = 8, 2, 64, 2, 40
+
+# 1. model (reduced transformer-wmt: the paper's NMT workload family)
+cfg = reduced(get_config("transformer-wmt"), n_layers=2, d_model=128)
+
+# 2. interaction graph + swarm protocol config
+graph = make_graph("complete", N_NODES)
+scfg = SwarmConfig(n_nodes=N_NODES, H=H)
+opt = make_optimizer("sgd", lr=0.08, momentum=0.9)
+
+# 3. the jitted superstep: H local steps per node, then pairwise averaging
+step = jax.jit(make_swarm_step(
+    scfg, lambda p, mb: loss_fn(cfg, p, mb), opt.update, lambda s: 0.08))
+state = swarm_init(jax.random.PRNGKey(0), scfg,
+                   lambda k: init_params(k, cfg), opt.init)
+
+# 4. decentralized training loop
+ds = SyntheticLMDataset(DataConfig(cfg.vocab_size, SEQ), n_nodes=N_NODES)
+rng = np.random.default_rng(0)
+key = jax.random.PRNGKey(1)
+for t in range(STEPS):
+    nb = make_node_batches(ds, t, BATCH * H)
+    batch = {k: jnp.asarray(v.reshape(N_NODES, H, BATCH, SEQ))
+             for k, v in nb.items()}
+    perm = jnp.asarray(sample_matching(graph, rng))     # random matching of G
+    h = jnp.asarray(sample_h_counts(scfg, rng))         # local steps per node
+    key, sub = jax.random.split(key)
+    state, m = step(state, batch, perm, h, sub)
+    if t % 10 == 0 or t == STEPS - 1:
+        print(f"superstep {t:3d}  loss {float(m['loss']):.4f}  "
+              f"Γ {float(m['gamma']):.5f}  matched {float(m['matched_frac']):.2f}")
+print("done — models stayed concentrated (Γ small) while training decentralized.")

@@ -1,0 +1,15 @@
+"""Batched serving demo: prefill + KV-cache decode on a reduced Mamba2 (SSM,
+O(1) decode state) and a reduced Gemma3 (sliding-window + global attention).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import subprocess
+import sys
+
+for arch in ["mamba2-780m", "gemma3-4b"]:
+    print(f"=== {arch} (reduced) ===")
+    subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                    "--arch", arch, "--reduced", "--batch", "2",
+                    "--prompt-len", "32", "--gen", "12"],
+                   env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                   check=True)

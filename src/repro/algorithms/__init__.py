@@ -1,0 +1,5 @@
+"""Baseline distributed-SGD algorithms the paper compares against (§5/Table 2),
+implemented as superstep factories over the same node-stacked state as
+SwarmSGD so they share the runtime, data pipeline and benchmarks.
+"""
+from repro.algorithms.registry import ALGORITHMS, make_algorithm  # noqa: F401

@@ -1,0 +1,31 @@
+"""AD-PSGD (Lian et al. [28]): asynchronous pairwise averaging with H=1 —
+one gradient step then average with a random matching partner every step.
+(= SwarmSGD with H=1, blocking; the paper's closest prior art.)"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms.common import Identity, metrics_of, node_grad_step
+from repro.core.swarm import SwarmState, gossip_exact
+
+
+def make_step(loss_fn, opt_update, lr_fn, n_nodes, shard=Identity,
+              track_potential: bool = True):
+    def step(state: SwarmState, batch, perm, h_counts, rng):
+        del h_counts, rng
+        lr = lr_fn(state.step)
+        gs = node_grad_step(loss_fn, opt_update)
+
+        def one(p, o, b):
+            mb = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), b)
+            return gs(p, o, mb, lr)
+
+        params, opt, losses = jax.vmap(one)(state.params, state.opt, batch)
+        matched = perm != jnp.arange(n_nodes)
+        params = gossip_exact(params, perm, matched)
+        params = jax.tree.map(lambda x: shard(x, "param"), params)
+        return (SwarmState(params, opt, state.prev, state.step + 1),
+                metrics_of(params, losses, lr, track_potential,
+                           matched_frac=jnp.mean(matched.astype(jnp.float32))))
+    return step

@@ -1,0 +1,38 @@
+"""Large-batch data-parallel SGD (the paper's LB-SGD baseline, tuned per
+Goyal et al. [16]): every step, gradients are averaged across ALL nodes
+(all-reduce) — the fully synchronous upper bound on communication."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms.common import Identity, metrics_of
+from repro.core.swarm import SwarmState
+
+
+def make_step(loss_fn, opt_update, lr_fn, n_nodes, shard=Identity,
+              track_potential: bool = True):
+    def step(state: SwarmState, batch, perm, h_counts, rng):
+        del perm, h_counts, rng
+        lr = lr_fn(state.step)
+
+        def node_loss(p, b):
+            # every node contributes one microbatch; H slots are folded into
+            # the batch (same tokens/superstep as swarm for fair comparison)
+            mb = jax.tree.map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), b)
+            return loss_fn(p, mb)
+
+        losses, grads = jax.vmap(jax.value_and_grad(node_loss))(
+            state.params, batch)
+        # all-reduce: mean gradient across the node axis, applied everywhere
+        grads = jax.tree.map(
+            lambda g: jnp.broadcast_to(
+                jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True),
+                g.shape).astype(g.dtype), grads)
+        params, opt = jax.vmap(opt_update, in_axes=(0, 0, 0, None))(
+            state.params, grads, state.opt, lr)
+        params = jax.tree.map(lambda x: shard(x, "param"), params)
+        return (SwarmState(params, opt, state.prev, state.step + 1),
+                metrics_of(params, losses, lr, track_potential))
+    return step

@@ -1,0 +1,26 @@
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.potential import gamma_potential
+
+Identity = lambda x, kind: x  # noqa: E731
+
+
+def node_grad_step(loss_fn: Callable, opt_update: Callable):
+    """One vmappable SGD step: (params_i, opt_i, microbatch, lr) -> ..."""
+    def f(params_i, opt_i, mb, lr):
+        loss, g = jax.value_and_grad(loss_fn)(params_i, mb)
+        p, o = opt_update(params_i, g, opt_i, lr)
+        return p, o, loss
+    return f
+
+
+def metrics_of(params, losses, lr, track_potential=True, **extra):
+    m = {"loss": jnp.mean(losses), "lr": lr, **extra}
+    if track_potential:
+        m["gamma"] = gamma_potential(params)
+    return m

@@ -1,0 +1,52 @@
+"""D-PSGD (Lian et al. [27]): one SGD step, then averaging with ALL graph
+neighbors via a doubly-stochastic mixing matrix W (Metropolis weights),
+every step (H=1). The mixing is a dense [n,n] matmul over the node axis."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algorithms.common import Identity, metrics_of, node_grad_step
+from repro.core.graph import Graph
+from repro.core.swarm import SwarmState
+
+
+def metropolis_weights(graph: Graph) -> np.ndarray:
+    n = graph.n
+    W = np.zeros((n, n))
+    deg = np.zeros(n, int)
+    for a, b in graph.edges:
+        deg[a] += 1
+        deg[b] += 1
+    for a, b in graph.edges:
+        w = 1.0 / (max(deg[a], deg[b]) + 1)
+        W[a, b] = W[b, a] = w
+    W[np.arange(n), np.arange(n)] = 1.0 - W.sum(axis=1)
+    return W
+
+
+def make_step(loss_fn, opt_update, lr_fn, n_nodes, graph: Graph,
+              shard=Identity, track_potential: bool = True):
+    W = jnp.asarray(metropolis_weights(graph), jnp.float32)
+
+    def step(state: SwarmState, batch, perm, h_counts, rng):
+        del perm, h_counts, rng
+        lr = lr_fn(state.step)
+        gs = node_grad_step(loss_fn, opt_update)
+
+        def one(p, o, b):
+            mb = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), b)
+            return gs(p, o, mb, lr)
+
+        params, opt, losses = jax.vmap(one, in_axes=(0, 0, 0))(
+            state.params, state.opt, batch)
+        # gossip-matrix mixing: X <- W X (einsum over the node axis)
+        params = jax.tree.map(
+            lambda x: jnp.einsum(
+                "nm,m...->n...", W, x.astype(jnp.float32)).astype(x.dtype),
+            params)
+        params = jax.tree.map(lambda x: shard(x, "param"), params)
+        return (SwarmState(params, opt, state.prev, state.step + 1),
+                metrics_of(params, losses, lr, track_potential))
+    return step

@@ -1,0 +1,38 @@
+"""Local SGD [38, 29]: H local steps, then a FULL global average (the paper's
+Local-SGD baseline, communicating globally every H steps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms.common import Identity, metrics_of
+from repro.core.swarm import SwarmState
+
+
+def make_step(loss_fn, opt_update, lr_fn, n_nodes, H: int = 2,
+              shard=Identity, track_potential: bool = True):
+    def step(state: SwarmState, batch, perm, h_counts, rng):
+        del perm, h_counts, rng
+        lr = lr_fn(state.step)
+
+        def local(params_i, opt_i, batch_i):
+            def body(q, carry):
+                p, o, ls = carry
+                mb = jax.tree.map(lambda x: x[q], batch_i)
+                loss, g = jax.value_and_grad(loss_fn)(p, mb)
+                p, o = opt_update(p, g, o, lr)
+                return (p, o, ls + loss)
+            p, o, ls = jax.lax.fori_loop(
+                0, H, body, (params_i, opt_i, jnp.zeros((), jnp.float32)))
+            return p, o, ls / H
+
+        params, opt, losses = jax.vmap(local)(state.params, state.opt, batch)
+        # periodic global model average (all nodes -> mean)
+        params = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True),
+                x.shape).astype(x.dtype), params)
+        params = jax.tree.map(lambda x: shard(x, "param"), params)
+        return (SwarmState(params, opt, state.prev, state.step + 1),
+                metrics_of(params, losses, lr, track_potential))
+    return step

@@ -1,0 +1,21 @@
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.algorithms import adpsgd, allreduce, dpsgd, localsgd, sgp
+
+ALGORITHMS = {
+    "swarm": None,  # handled by repro.core.swarm (the paper's method)
+    "allreduce": allreduce.make_step,
+    "localsgd": localsgd.make_step,
+    "dpsgd": dpsgd.make_step,
+    "adpsgd": adpsgd.make_step,
+    "sgp": sgp.make_step,
+}
+
+
+def make_algorithm(name: str, **kw) -> Callable:
+    if name not in ALGORITHMS or ALGORITHMS[name] is None:
+        raise ValueError(f"use make_swarm_step for 'swarm'; known baselines: "
+                         f"{[k for k, v in ALGORITHMS.items() if v]}")
+    return ALGORITHMS[name](**kw)

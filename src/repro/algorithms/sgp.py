@@ -1,0 +1,55 @@
+"""Stochastic Gradient Push (Assran et al. [5]): push-sum gossip over a
+directed one-peer exponential graph. Each node maintains (X, w); every step
+it halves both and pushes one half to its out-neighbor (cyclic offset
+2^(t mod log n)); the de-biased model is X/w."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms.common import Identity, metrics_of, node_grad_step
+from repro.core.swarm import SwarmState
+
+
+def make_step(loss_fn, opt_update, lr_fn, n_nodes, shard=Identity,
+              track_potential: bool = True):
+    log_n = max(1, int(math.log2(n_nodes)))
+
+    def step(state: SwarmState, batch, perm, h_counts, rng):
+        del perm, h_counts, rng
+        lr = lr_fn(state.step)
+        gs = node_grad_step(loss_fn, opt_update)
+        # push-sum weight vector rides in state.prev ({"w": [n]})
+        w = state.prev["w"]
+
+        def one(p, o, b, wi):
+            # de-bias before the gradient step (SGP evaluates at X/w)
+            pd = jax.tree.map(lambda x: (x.astype(jnp.float32) / wi).astype(x.dtype), p)
+            mb = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), b)
+            p2, o2, loss = gs(pd, o, mb, lr)
+            # re-bias: keep the push-sum numerator consistent
+            p2 = jax.tree.map(lambda x: (x.astype(jnp.float32) * wi).astype(x.dtype), p2)
+            return p2, o2, loss
+
+        params, opt, losses = jax.vmap(one)(state.params, state.opt, batch, w)
+        # one-peer exponential: send to (i + 2^(t mod log n)) mod n
+        shift = 2 ** (state.step % log_n)
+        idx = jnp.arange(n_nodes)
+        src = (idx - shift) % n_nodes      # who pushed to me
+        params = jax.tree.map(
+            lambda x: ((x.astype(jnp.float32) + x.astype(jnp.float32)[src]) * 0.5
+                       ).astype(x.dtype), params)
+        w = (w + w[src]) * 0.5
+        params = jax.tree.map(lambda x: shard(x, "param"), params)
+        debiased = jax.tree.map(
+            lambda x: (x.astype(jnp.float32) / w.reshape((-1,) + (1,) * (x.ndim - 1))
+                       ).astype(x.dtype), params)
+        return (SwarmState(params, opt, {"w": w}, state.step + 1),
+                metrics_of(debiased, losses, lr, track_potential))
+    return step
+
+
+def sgp_init_prev(n_nodes: int):
+    return {"w": jnp.ones((n_nodes,), jnp.float32)}

@@ -1,0 +1,61 @@
+"""Pytree checkpointing: flat npz of leaves + json tree/shape/dtype metadata.
+
+Device-agnostic: arrays are pulled to host; on restore, leaves are delivered
+as numpy and re-placed by the caller (the training engine re-applies its
+shardings via device_put with the current mesh).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    paths = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [(jax.tree_util.keystr(kp), leaf) for kp, leaf in paths[0]]
+    return leaves, paths[1]
+
+
+def save_checkpoint(path: str, tree: Any, metadata: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = _flatten_with_names(tree)
+    arrays = {}
+    dtypes = {}
+    for i, (_, v) in enumerate(leaves):
+        a = np.asarray(v)
+        dtypes[f"leaf_{i}"] = str(a.dtype)
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            a = a.astype(np.float32)  # store non-native dtypes widened
+        arrays[f"leaf_{i}"] = a
+    np.savez(path + ".npz", **arrays)
+    meta = {
+        "names": [n for n, _ in leaves],
+        "dtypes": dtypes,
+        "treedef": str(treedef),
+        "metadata": metadata or {},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shape/dtype-checked)."""
+    import jax.numpy as jnp
+    data = np.load(path + ".npz")
+    leaves_like, treedef = jax.tree.flatten(like)
+    restored = []
+    for i, ref in enumerate(leaves_like):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {np.shape(ref)}")
+        restored.append(jnp.asarray(arr).astype(jnp.asarray(ref).dtype))
+    return jax.tree.unflatten(treedef, restored)
+
+
+def load_metadata(path: str) -> dict:
+    with open(path + ".json") as f:
+        return json.load(f)["metadata"]

@@ -1,0 +1,248 @@
+"""Model/arch configuration system.
+
+Every assigned architecture is a :class:`ModelConfig` registered under its
+``--arch`` id.  A config fully describes the decoder stack as a *layer
+pattern*: a tuple of ``(mixer, ffn)`` pairs repeated down the stack, where
+
+  mixer ∈ {"attn": global causal attention,
+           "swa":  sliding-window causal attention,
+           "mamba": Mamba2 SSD block}
+  ffn   ∈ {"dense": (gated) MLP, "moe": top-k mixture of experts, "none"}
+
+The stack is built as ``n_full_blocks`` scanned copies of the pattern plus an
+unrolled tail for depths that are not a multiple of the pattern length
+(e.g. gemma3-4b: 34 = 5x(5 swa + 1 attn) + 4 tail layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence, Tuple
+
+Layer = Tuple[str, str]  # (mixer, ffn)
+
+MIXERS = ("attn", "swa", "mamba")
+FFNS = ("dense", "moe", "none")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden size
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # mesh axis (name) the expert dim is sharded over, None -> shard d_ff
+    expert_shard_axis: Optional[str] = "model"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 256
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Stub modality frontend (per assignment carve-out): provides
+    precomputed patch/frame embeddings of the right shape."""
+    kind: str                       # "vision" | "audio"
+    n_prefix: int                   # patches / frames prepended to the text stream
+    d_embed: int                    # embedding dim delivered by the (stubbed) encoder
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                  # dense | moe | ssm | hybrid | vlm | audio
+    source: str                     # paper / model-card citation
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                       # dense-FFN hidden size (0 for attn-free)
+    vocab_size: int
+    pattern: Tuple[Layer, ...]      # repeating unit
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    # --- attention details ---
+    rope_theta: float = 10_000.0
+    rope_theta_local: Optional[float] = None  # gemma3 uses 10k local / 1M global
+    partial_rotary: float = 1.0     # fraction of head_dim rotated (chatglm: 0.5)
+    sliding_window: int = 1024
+    qk_norm: bool = False
+    # --- norms / misc ---
+    norm: str = "rmsnorm"           # rmsnorm | layernorm | nonparam_ln (olmo)
+    act: str = "silu"               # silu | gelu
+    gated_mlp: bool = True
+    tie_embeddings: bool = True
+    logit_softcap: float = 0.0
+    # --- sub-configs ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    # --- numerics / distribution ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+    subquadratic: bool = False      # eligible for long_500k
+    big_model: bool = False         # node = pod (replica needs >16-way sharding)
+    opt_state_dtype: str = "float32"
+    max_seq_len: int = 131_072
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def layers(self) -> Tuple[Layer, ...]:
+        """The full per-layer (mixer, ffn) sequence."""
+        reps = self.n_layers // len(self.pattern)
+        tail = self.n_layers % len(self.pattern)
+        return self.pattern * reps + self.pattern[:tail]
+
+    @property
+    def n_full_blocks(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail_pattern(self) -> Tuple[Layer, ...]:
+        return self.pattern[: self.n_layers % len(self.pattern)]
+
+    def n_params(self) -> int:
+        """Total parameter count (exact, mirrors models.transformer init)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        norm_p = {"rmsnorm": d, "layernorm": 2 * d, "nonparam_ln": 0}[self.norm]
+        total = self.vocab_size * d  # embed (tied head)
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        if self.frontend is not None:
+            total += self.frontend.d_embed * d
+        total += norm_p  # final norm
+        for mixer, ffn in self.layers:
+            total += norm_p  # pre-mixer norm
+            if mixer in ("attn", "swa"):
+                total += d * (self.n_heads * hd)          # q
+                total += 2 * d * (self.n_kv_heads * hd)   # k, v
+                total += (self.n_heads * hd) * d          # o
+                if self.qk_norm:
+                    total += 2 * hd
+            elif mixer == "mamba":
+                s = self.ssm
+                d_in = s.expand * d
+                n_h = d_in // s.head_dim
+                conv_dim = d_in + 2 * s.n_groups * s.d_state
+                total += d * (2 * d_in + 2 * s.n_groups * s.d_state + n_h)  # in_proj
+                total += conv_dim * s.conv_kernel         # conv
+                total += 2 * n_h                          # A_log, D
+                total += n_h                              # dt_bias
+                total += d_in                             # gate norm
+                total += d_in * d                         # out_proj
+            if ffn != "none":
+                total += norm_p  # pre-ffn norm
+            if ffn == "dense":
+                mult = 3 if self.gated_mlp else 2
+                total += mult * d * self.d_ff
+            elif ffn == "moe":
+                m = self.moe
+                mult = 3 if self.gated_mlp else 2
+                total += m.n_experts * mult * d * m.d_ff
+                total += d * m.n_experts                  # router
+        return total
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.n_params()
+        total = self.n_params()
+        m = self.moe
+        mult = 3 if self.gated_mlp else 2
+        n_moe_layers = sum(1 for _, f in self.layers if f == "moe")
+        full = n_moe_layers * m.n_experts * mult * self.d_model * m.d_ff
+        active = n_moe_layers * m.top_k * mult * self.d_model * m.d_ff
+        return total - full + active
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        # import the per-arch modules lazily on first miss
+        from repro import configs as _c  # noqa: F401
+        _c.load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    from repro import configs as _c
+    _c.load_all()
+    return sorted(_REGISTRY)
+
+
+def reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,
+            n_experts: int = 4, vocab: int = 512, seq_cap: int = 4096) -> ModelConfig:
+    """Smoke-test variant of the same family: <=2 layers, d_model<=512, <=4 experts."""
+    d_model = min(d_model, 512)
+    heads = max(1, min(cfg.n_heads, 4))
+    kv = max(1, min(cfg.n_kv_heads, heads))
+    pattern = cfg.pattern[:max(1, min(len(cfg.pattern), n_layers))]
+    changes = dict(
+        n_layers=n_layers, d_model=d_model, n_heads=heads, n_kv_heads=kv,
+        head_dim=d_model // heads if cfg.head_dim is not None else None,
+        d_ff=min(cfg.d_ff, 4 * d_model) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, vocab),
+        pattern=pattern,
+        dtype="float32", opt_state_dtype="float32", remat=False,
+        big_model=False, max_seq_len=seq_cap,
+        sliding_window=min(cfg.sliding_window, 64),
+    )
+    if cfg.moe is not None:
+        # capacity_factor 4.0: effectively dropless at smoke scale, so the
+        # train / prefill+decode paths agree exactly
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=min(cfg.moe.n_experts, n_experts),
+            top_k=min(cfg.moe.top_k, 2), d_ff=min(cfg.moe.d_ff, d_model),
+            capacity_factor=4.0, expert_shard_axis=None)
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=min(cfg.ssm.d_state, 32), head_dim=32, chunk=64)
+    if cfg.frontend is not None:
+        changes["frontend"] = dataclasses.replace(
+            cfg.frontend, n_prefix=min(cfg.frontend.n_prefix, 16), d_embed=d_model)
+    return dataclasses.replace(cfg, **changes)

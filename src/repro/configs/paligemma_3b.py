@@ -1,0 +1,32 @@
+"""paligemma-3b [vlm] — SigLIP vision encoder + gemma decoder.
+
+Source: [arXiv:2407.07726]. Backbone only per the carve-out: the SigLIP ViT
+and projector are a STUB delivering 256 patch embeddings; we implement the
+gemma-2b-style language decoder (MQA: 1 KV head, head_dim 256, d_ff 16384).
+"""
+from repro.configs.base import FrontendConfig, ModelConfig, register
+
+
+@register("paligemma-3b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-3b",
+        arch_type="vlm",
+        source="arXiv:2407.07726 (PaliGemma)",
+        n_layers=18,
+        d_model=2048,
+        n_heads=8,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=16_384,
+        vocab_size=257_216,
+        pattern=(("attn", "dense"),),
+        rope_theta=10_000.0,
+        norm="rmsnorm",
+        act="gelu",
+        gated_mlp=True,
+        tie_embeddings=True,
+        frontend=FrontendConfig(kind="vision", n_prefix=256, d_embed=2048),
+        subquadratic=False,
+        max_seq_len=32_768,
+    )

@@ -1,0 +1,31 @@
+"""transformer-wmt [dense] — the paper's own large NMT transformer.
+
+SwarmSGD's headline experiment (Fig. 1) trains a Transformer-large [42] on
+WMT17 En-De. We register a decoder-only equivalent of Transformer-big
+(d_model 1024, 16 heads, d_ff 4096) as the paper's native architecture so the
+paper's workload is selectable alongside the assigned pool.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("transformer-wmt")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="transformer-wmt",
+        arch_type="dense",
+        source="paper §5 / arXiv:1706.03762 (Transformer-big)",
+        n_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=4096,
+        vocab_size=32_768,
+        pattern=(("attn", "dense"),),
+        rope_theta=10_000.0,
+        norm="layernorm",
+        act="gelu",
+        gated_mlp=False,
+        tie_embeddings=True,
+        subquadratic=False,
+        max_seq_len=4096,
+    )

@@ -1,0 +1,7 @@
+# The paper's primary contribution: SwarmSGD (decentralized SGD with
+# asynchronous pairwise gossip, local steps, and quantized exchange).
+from repro.core.graph import Graph, make_graph, sample_matching  # noqa: F401
+from repro.core.potential import gamma_potential, mean_model  # noqa: F401
+from repro.core.swarm import (  # noqa: F401
+    SwarmConfig, SwarmState, make_swarm_step, swarm_init,
+)

@@ -1,0 +1,159 @@
+"""Interaction graphs for SwarmSGD.
+
+The paper assumes an r-regular graph G with Laplacian spectral gap λ₂
+(second-smallest eigenvalue); the convergence bound carries the factor
+(r²/λ₂² + 1). We provide the standard families (complete, ring, 2-D torus,
+hypercube, random r-regular — supercomputer interconnects approximate
+regular expanders) with exact λ₂, plus the uniform-matching sampler that is
+the superstep-parallel equivalent of the paper's single-edge Poisson clock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Graph:
+    name: str
+    n: int
+    edges: np.ndarray          # [m, 2] int32, i < j
+    r: int                     # degree (regular)
+    lambda2: float             # 2nd smallest Laplacian eigenvalue
+
+    @property
+    def m(self) -> int:
+        return len(self.edges)
+
+
+def _finalize(name: str, n: int, edge_set) -> Graph:
+    edges = np.array(sorted({(min(a, b), max(a, b)) for a, b in edge_set
+                             if a != b}), np.int32)
+    deg = np.zeros(n, np.int64)
+    for a, b in edges:
+        deg[a] += 1
+        deg[b] += 1
+    if not (deg == deg[0]).all():
+        raise ValueError(f"{name}: graph not regular (degrees {set(deg)})")
+    L = np.zeros((n, n))
+    L[np.arange(n), np.arange(n)] = deg
+    for a, b in edges:
+        L[a, b] -= 1
+        L[b, a] -= 1
+    ev = np.linalg.eigvalsh(L)
+    return Graph(name, n, edges, int(deg[0]), float(ev[1]))
+
+
+def complete(n: int) -> Graph:
+    return _finalize("complete", n,
+                     [(i, j) for i in range(n) for j in range(i + 1, n)])
+
+
+def ring(n: int) -> Graph:
+    return _finalize("ring", n, [(i, (i + 1) % n) for i in range(n)])
+
+
+def torus2d(a: int, b: int) -> Graph:
+    es = []
+    for i in range(a):
+        for j in range(b):
+            u = i * b + j
+            es.append((u, i * b + (j + 1) % b))
+            es.append((u, ((i + 1) % a) * b + j))
+    return _finalize(f"torus{a}x{b}", a * b, es)
+
+
+def hypercube(log_n: int) -> Graph:
+    n = 1 << log_n
+    es = [(u, u ^ (1 << k)) for u in range(n) for k in range(log_n)]
+    return _finalize(f"hypercube{log_n}", n, es)
+
+
+def hierarchical(n: int, n_clusters: int, inter_degree: int = 1) -> Graph:
+    """Pod-aware topology: complete graph inside each cluster (pod) plus a
+    regular inter-cluster ring of `inter_degree` matchings — models multi-pod
+    deployments where intra-pod ICI is cheap and cross-pod links scarce.
+    Gossip sampled on this graph does mostly-local averaging with occasional
+    cross-pod mixing; λ₂ quantifies the mixing penalty (Thm 4.1's r²/λ₂²)."""
+    assert n % n_clusters == 0
+    m = n // n_clusters
+    es = []
+    for c in range(n_clusters):
+        base = c * m
+        es += [(base + i, base + j) for i in range(m) for j in range(i + 1, m)]
+    for k in range(inter_degree):
+        for c in range(n_clusters):
+            nc = (c + 1) % n_clusters
+            for i in range(m):
+                es.append((c * m + i, nc * m + (i + k) % m))
+    # note: this graph is regular iff every node gets the same number of
+    # inter-cluster edges, which holds by construction
+    return _finalize(f"hier{n_clusters}x{m}", n, es)
+
+
+def random_regular(n: int, r: int, seed: int = 0) -> Graph:
+    import networkx as nx
+    g = nx.random_regular_graph(r, n, seed=seed)
+    if not nx.is_connected(g):  # resample until connected (a.s. for r>=3)
+        for s in range(seed + 1, seed + 50):
+            g = nx.random_regular_graph(r, n, seed=s)
+            if nx.is_connected(g):
+                break
+    return _finalize(f"rr{r}", n, list(g.edges()))
+
+
+def make_graph(kind: str, n: int, *, r: int = 4, seed: int = 0) -> Graph:
+    if kind == "complete":
+        return complete(n)
+    if kind == "ring":
+        return ring(n)
+    if kind == "torus":
+        a = int(np.sqrt(n))
+        while n % a:
+            a -= 1
+        return torus2d(a, n // a)
+    if kind == "hypercube":
+        log_n = int(np.log2(n))
+        assert (1 << log_n) == n, "hypercube needs power-of-two n"
+        return hypercube(log_n)
+    if kind == "random_regular":
+        return random_regular(n, r, seed)
+    if kind == "hierarchical":
+        return hierarchical(n, n_clusters=max(2, n // 16))
+    raise ValueError(f"unknown graph kind {kind!r}")
+
+
+def sample_matching(graph: Graph, rng: np.random.Generator,
+                    fraction: float = 1.0,
+                    dead: "np.ndarray | None" = None) -> np.ndarray:
+    """Uniform random (partial) matching of G as an involution perm [n].
+
+    Greedy over a shuffled edge order — every maximal matching is reachable;
+    each edge has equal marginal probability by symmetry. `fraction`<1 keeps
+    only that share of the matched pairs (sparser interaction supersteps,
+    closer to the single-edge regime). `dead` (bool [n]) marks failed /
+    straggling nodes: they are never matched — SwarmSGD degrades gracefully
+    (the survivors keep gossiping; nothing blocks on a dead peer, unlike an
+    all-reduce), which is the fault-tolerance story of asynchronous
+    decentralized SGD.
+    """
+    perm = np.arange(graph.n, dtype=np.int32)
+    order = rng.permutation(len(graph.edges))
+    used = np.zeros(graph.n, bool)
+    if dead is not None:
+        used |= np.asarray(dead, bool)
+    pairs = []
+    for e in order:
+        a, b = graph.edges[e]
+        if not used[a] and not used[b]:
+            used[a] = used[b] = True
+            pairs.append((a, b))
+    if fraction < 1.0 and pairs:
+        k = max(1, int(round(fraction * len(pairs))))
+        idx = rng.choice(len(pairs), size=k, replace=False)
+        pairs = [pairs[i] for i in idx]
+    for a, b in pairs:
+        perm[a], perm[b] = b, a
+    return perm

@@ -1,0 +1,31 @@
+"""The paper's potential Γ_t = Σᵢ ‖Xᵢ − μ_t‖² over node-stacked pytrees.
+
+Lemma F.3 bounds E[Γ_t] ≤ (40r/λ₂ + 80r²/λ₂²)·n·η²·H²·M² uniformly in t —
+this module provides both the measured Γ and that analytic bound so tests
+and benchmarks can compare them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mean_model(params_stacked):
+    """μ_t: average over the leading node axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0),
+                        params_stacked)
+
+
+def gamma_potential(params_stacked) -> jax.Array:
+    """Γ_t = Σᵢ ‖Xᵢ − μ‖² summed over every parameter leaf."""
+    def leaf_gamma(x):
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=0, keepdims=True)
+        return jnp.sum(jnp.square(xf - mu))
+    return sum(jax.tree.leaves(jax.tree.map(leaf_gamma, params_stacked)))
+
+
+def gamma_bound(n: int, r: int, lambda2: float, eta: float, H: float,
+                M2: float) -> float:
+    """Lemma F.3 upper bound on E[Γ_t]."""
+    return (40 * r / lambda2 + 80 * r**2 / lambda2**2) * n * eta**2 * H**2 * M2

@@ -1,0 +1,161 @@
+"""Exact sequential simulator of Algorithms 1 & 2 (+ Extension 3).
+
+This is the paper's *actual* stochastic process: one interaction per step —
+an edge of G sampled uniformly at random, geometric (or fixed) local step
+counts, optional stale (non-blocking) reads and modular quantization. Used
+to validate the theory (Γ_t boundedness, Lemma F.3; convergence of
+‖∇f(μ_t)‖², Thm 4.1/4.2) on small objectives where the constants can be
+checked numerically.
+
+Models are flat vectors [n, d] (numpy); the gradient oracle is any callable
+grad_fn(x, node, rng) -> g with E[g] = ∇f_node(x).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+@dataclass
+class SimConfig:
+    H: float = 2.0
+    h_mode: str = "geometric"    # geometric | fixed
+    eta: float = 0.01
+    nonblocking: bool = False
+    quantize: bool = False
+    quant_bits: int = 8
+    quant_resolution: float = 1e-3
+    seed: int = 0
+
+
+@dataclass
+class SimTrace:
+    gamma: List[float] = field(default_factory=list)
+    grad_norm_sq: List[float] = field(default_factory=list)
+    loss: List[float] = field(default_factory=list)
+    quant_failures: int = 0
+    bits_sent: int = 0
+
+
+def _quantize_modular(x, y, resolution, bits, rng):
+    """Encode x at fixed resolution; decode against y. Returns (x_hat, failed)."""
+    levels = 1 << bits
+    half = levels // 2
+    s = resolution
+    q = np.floor(x / s + rng.uniform(size=x.shape)) % levels
+    qy = np.round(y / s)
+    diff = (q - qy) % levels
+    wrapped = np.where(diff >= half, diff - levels, diff)
+    x_hat = (qy + wrapped) * s
+    failed = np.max(np.abs(x - y)) >= half * s  # distance criterion violated
+    return x_hat, bool(failed)
+
+
+def run_simulation(graph: Graph, x0: np.ndarray, grad_fn: Callable,
+                   cfg: SimConfig, T: int,
+                   loss_fn: Optional[Callable] = None,
+                   grad_of_mean_fn: Optional[Callable] = None,
+                   record_every: int = 1) -> SimTrace:
+    """Run T sequential interactions; x0: [n, d] initial models."""
+    rng = np.random.default_rng(cfg.seed)
+    n = graph.n
+    X = x0.astype(np.float64).copy()
+    # comm copies for the non-blocking variant (value at last averaging)
+    Y = X.copy()
+    trace = SimTrace()
+
+    def local_steps(i):
+        if cfg.h_mode == "fixed":
+            h = int(round(cfg.H))
+        else:
+            h = int(rng.geometric(1.0 / cfg.H))
+        for _ in range(h):
+            X[i] -= cfg.eta * grad_fn(X[i], i, rng)
+
+    for t in range(T):
+        e = graph.edges[rng.integers(len(graph.edges))]
+        i, j = int(e[0]), int(e[1])
+        if cfg.nonblocking:
+            # Algorithm 2: average pre-local-step comm copies, then apply
+            # each node's fresh local delta on top.
+            Si, Sj = X[i].copy(), X[j].copy()
+            local_steps(i)
+            local_steps(j)
+            di, dj = X[i] - Si, X[j] - Sj
+            read_j, read_i = Y[j], Y[i]      # stale reads
+            if cfg.quantize:
+                read_j, f1 = _quantize_modular(Y[j], Si, cfg.quant_resolution,
+                                               cfg.quant_bits, rng)
+                read_i, f2 = _quantize_modular(Y[i], Sj, cfg.quant_resolution,
+                                               cfg.quant_bits, rng)
+                trace.quant_failures += f1 + f2
+                trace.bits_sent += 2 * cfg.quant_bits * X.shape[1]
+            else:
+                trace.bits_sent += 2 * 32 * X.shape[1]
+            X[i] = (Si + read_j) / 2 + di
+            X[j] = (Sj + read_i) / 2 + dj
+            Y[i] = (Si + read_j) / 2
+            Y[j] = (Sj + read_i) / 2
+        else:
+            # Algorithm 1 (blocking)
+            local_steps(i)
+            local_steps(j)
+            xi, xj = X[i], X[j]
+            if cfg.quantize:
+                xj_hat, f1 = _quantize_modular(xj, xi, cfg.quant_resolution,
+                                               cfg.quant_bits, rng)
+                xi_hat, f2 = _quantize_modular(xi, xj, cfg.quant_resolution,
+                                               cfg.quant_bits, rng)
+                trace.quant_failures += f1 + f2
+                trace.bits_sent += 2 * cfg.quant_bits * X.shape[1]
+                X[i] = (xi + xj_hat) / 2
+                X[j] = (xj + xi_hat) / 2
+            else:
+                trace.bits_sent += 2 * 32 * X.shape[1]
+                avg = (xi + xj) / 2
+                X[i] = avg.copy()
+                X[j] = avg.copy()
+
+        if t % record_every == 0:
+            mu = X.mean(axis=0)
+            trace.gamma.append(float(np.sum((X - mu) ** 2)))
+            if grad_of_mean_fn is not None:
+                g = grad_of_mean_fn(mu)
+                trace.grad_norm_sq.append(float(np.sum(g * g)))
+            if loss_fn is not None:
+                trace.loss.append(float(loss_fn(mu)))
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# Standard test objectives
+# ---------------------------------------------------------------------------
+
+
+def quadratic_problem(d: int, n_nodes: int, *, noise: float = 0.1,
+                      hetero: float = 0.0, seed: int = 0):
+    """f_i(x) = 0.5 * ||A(x - b_i)||^2 with per-node optima spread `hetero`.
+
+    Returns (grad_fn, loss_fn, grad_of_mean_fn, x_star).
+    """
+    rng = np.random.default_rng(seed)
+    diag = np.linspace(0.5, 2.0, d)
+    b = rng.normal(size=(n_nodes, d)) * hetero
+    b_mean = b.mean(axis=0)
+
+    def grad_fn(x, node, rng_):
+        g = diag * (x - b[node])
+        return g + noise * rng_.normal(size=d)
+
+    def loss_fn(mu):
+        return float(0.5 * np.mean(
+            [np.sum(diag * (mu - b[i]) ** 2) for i in range(n_nodes)]))
+
+    def grad_of_mean(mu):
+        return diag * (mu - b_mean)
+
+    return grad_fn, loss_fn, grad_of_mean, b_mean

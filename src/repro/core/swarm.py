@@ -1,0 +1,378 @@
+"""SwarmSGD SPMD training engine.
+
+One jitted *superstep* implements the paper's protocol for all n nodes in
+parallel (the paper: "Θ(n) of these interactions could occur in parallel"):
+
+  1. every node runs H local SGD steps on its own model/data — a
+     `lax.fori_loop` with ZERO collectives (the communication-frequency
+     reduction that is the paper's point);
+  2. a uniformly sampled (partial) matching of the interaction graph G is
+     applied: matched pairs average their models — blocking (Algorithm 1),
+     non-blocking/stale (Algorithm 2), optionally over the 8-bit modular
+     quantization of Extension 3 (the uint8 payload is what crosses the
+     node mesh axis).
+
+Node state is *node-stacked*: every param/optimizer leaf has a leading
+[n_nodes] dim, sharded over the node mesh axes. Local steps are vmapped over
+that axis; gossip is a permutation-indexed average along it (lowered by
+GSPMD to collectives over the node axes; see §Perf for the shard_map
+ppermute variant).
+
+Geometric local steps (Thm 4.1's H_i ~ Geom(H)) are supported by passing
+per-node step counts h_i <= h_max and masking the loop body; fixed H
+(Thm 4.2 / non-iid) is h_i = H for all i.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.potential import gamma_potential
+from repro.models import unroll as U
+from repro.quant.schemes import (
+    ModularQuantConfig, decode_modular, encode_modular,
+)
+
+Identity = lambda x, kind: x  # noqa: E731
+
+
+@dataclass(frozen=True)
+class SwarmConfig:
+    n_nodes: int
+    H: int = 2                   # (mean) local steps per interaction
+    h_mode: str = "fixed"        # fixed | geometric
+    h_max: int = 8               # static loop bound for geometric sampling
+    nonblocking: bool = False    # Algorithm 2 semantics
+    quantize: bool = False       # Extension 3
+    quant: ModularQuantConfig = ModularQuantConfig()
+    average_momentum: bool = False  # paper averages MODELS only
+    track_potential: bool = True
+    # gather (naive GSPMD) | ppermute (shard_map, one static matching) |
+    # ppermute_pool (lax.switch over a static matching pool; the production
+    # transport: dynamic partner choice, static collective HLO)
+    gossip_impl: str = "gather"
+    pool_size: int = 8
+
+
+@dataclass
+class SwarmState:
+    params: Any                  # node-stacked pytree
+    opt: Any                     # node-stacked optimizer state
+    prev: Any                    # comm copy: params at last interaction
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.prev, self.step), None
+
+
+jax.tree_util.register_pytree_node(
+    SwarmState, SwarmState.tree_flatten,
+    lambda aux, children: SwarmState(*children))
+
+
+def _stack_init(rng, n_nodes, init_fn, same_init: bool = True):
+    if same_init:
+        one = init_fn(rng)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_nodes,) + x.shape).copy(), one)
+    rngs = jax.random.split(rng, n_nodes)
+    return jax.vmap(init_fn)(rngs)
+
+
+def swarm_init(rng, cfg: SwarmConfig, param_init: Callable, opt_init: Callable,
+               same_init: bool = True) -> SwarmState:
+    params = _stack_init(rng, cfg.n_nodes, param_init, same_init)
+    opt = jax.vmap(opt_init)(params) if _has_leaves(opt_init(jax.tree.map(
+        lambda x: x[0], params))) else {}
+    prev = jax.tree.map(jnp.copy, params) if (cfg.quantize or cfg.nonblocking) \
+        else None
+    return SwarmState(params, opt, prev, jnp.zeros((), jnp.int32))
+
+
+def _has_leaves(tree) -> bool:
+    return len(jax.tree.leaves(tree)) > 0
+
+
+# ---------------------------------------------------------------------------
+# Gossip averaging variants
+# ---------------------------------------------------------------------------
+
+
+def _avg(x, xp, matched):
+    """(x + x[perm])/2 where matched, else x."""
+    out = (x.astype(jnp.float32) + xp.astype(jnp.float32)) * 0.5
+    m = matched.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.where(m, out.astype(x.dtype), x)
+
+
+def gossip_exact(params, perm, matched):
+    return jax.tree.map(lambda x: _avg(x, x[perm], matched), params)
+
+
+def gossip_ppermute(params, param_specs, mesh, node_axes, pairs,
+                    quant: Optional[ModularQuantConfig] = None, prev=None,
+                    rng=None):
+    """Pairwise gossip via `collective-permute` under shard_map — the direct
+    TPU analogue of the paper's MPI sendrecv exchange: each matched node
+    sends exactly ONE model copy (or its uint8 encoding) to its partner,
+    instead of the O(n)-traffic all-gather that a dynamic `x[perm]` gather
+    lowers to. `pairs` is a STATIC involution [(src, dst), ...] (production
+    uses a lax.switch over a precompiled matching pool; see DESIGN.md §Perf).
+    """
+    from jax.sharding import PartitionSpec as P
+    import numpy as np
+
+    n_nodes = 1
+    for a in node_axes:
+        n_nodes *= mesh.shape[a]
+    if not node_axes or n_nodes == 1:
+        # all nodes live on one shard (CPU runs / single-node-per-mesh):
+        # the "permute" degenerates to a local static-perm average
+        leaves = jax.tree.leaves(params)
+        n = leaves[0].shape[0]
+        perm_arr = np.arange(n)
+        for s, d in pairs:
+            perm_arr[d] = s
+        perm_j = jnp.asarray(perm_arr)
+        matched = jnp.asarray(perm_arr != np.arange(n))
+        return gossip_exact(params, perm_j, matched) if quant is None else \
+            gossip_quantized(quant, params, prev, perm_j, matched, rng)
+    perm_arr = np.arange(n_nodes)
+    for s, d in pairs:
+        perm_arr[d] = s
+    matched_np = perm_arr != np.arange(n_nodes)
+    axis = node_axes if len(node_axes) > 1 else node_axes[0]
+    full_pairs = [(int(s), int(d)) for s, d in pairs]
+
+    def per_leaf(spec):
+        def f(x, pv, key):
+            # x: local shard [n_local=1 or n/|node|, ...]
+            if quant is not None:
+                nkeys = jax.random.split(key, x.shape[0])
+                q, s = jax.vmap(partial(encode_modular, quant))(x, pv, nkeys)
+                qp = jax.lax.ppermute(q, axis, full_pairs)
+                sp = jax.lax.ppermute(s, axis, full_pairs)
+                xh = jax.vmap(partial(decode_modular, quant))(qp, sp, x)
+            else:
+                xh = jax.lax.ppermute(x, axis, full_pairs)
+            idx = jax.lax.axis_index(axis)
+            m = jnp.asarray(matched_np)[idx]
+            out = (x.astype(jnp.float32) + xh.astype(jnp.float32)) * 0.5
+            return jnp.where(m, out.astype(x.dtype), x)
+        return f
+
+    leaves, tdef = jax.tree.flatten(params)
+    specs = jax.tree.leaves(param_specs, is_leaf=lambda s: isinstance(s, P))
+    prev_leaves = jax.tree.leaves(prev) if prev is not None else [None] * len(leaves)
+    keys = (list(jax.random.split(rng, len(leaves))) if rng is not None
+            else [jnp.zeros((2,), jnp.uint32)] * len(leaves))
+    out = []
+    for x, spec, pv, key in zip(leaves, specs, prev_leaves, keys):
+        if quant is not None:
+            fn = jax.shard_map(per_leaf(spec), mesh=mesh,
+                               in_specs=(spec, spec, P()),
+                               out_specs=spec, check_vma=False)
+            out.append(fn(x, pv, key))
+        else:
+            fn = jax.shard_map(
+                lambda x_: per_leaf(spec)(x_, None, None), mesh=mesh,
+                in_specs=(spec,), out_specs=spec, check_vma=False)
+            out.append(fn(x))
+    return jax.tree.unflatten(tdef, out)
+
+
+def make_matching_pool(graph, K: int, seed: int = 0):
+    """K precompiled random matchings of G (as involution perms). Production
+    ppermute gossip selects one per superstep via lax.switch — dynamic
+    partner choice with STATIC collective-permute HLO. For a complete graph
+    and K >= n-1 this can be a 1-factorization (round-robin tournament),
+    whose uniform selection has the same single-edge marginals as the
+    paper's uniform edge sampling."""
+    import numpy as np
+    from repro.core.graph import sample_matching
+    rng = np.random.default_rng(seed)
+    return [sample_matching(graph, rng) for _ in range(K)]
+
+
+def gossip_ppermute_pool(params, param_specs, mesh, node_axes, pool,
+                         pool_idx, quant=None, prev=None, rng=None):
+    """lax.switch over a static matching pool; each branch is a
+    gossip_ppermute with its own static source-target pairs."""
+    def branch(perm_arr):
+        pairs = [(int(perm_arr[d]), d) for d in range(len(perm_arr))
+                 if perm_arr[d] != d] or [(0, 0)]
+
+        def f(p):
+            return gossip_ppermute(p, param_specs, mesh, node_axes, pairs,
+                                   quant=quant, prev=prev, rng=rng)
+        return f
+
+    return jax.lax.switch(pool_idx, [branch(p) for p in pool], params)
+
+
+def gossip_quantized(qcfg, params, prev, perm, matched, rng):
+    """Exchange the 8-bit modular encoding instead of raw values.
+
+    Each node encodes its model against its own `prev` comm copy (the
+    sender-local distance proxy); the *uint8 payload + fp32 block scales*
+    are what move along the node axis; the receiver decodes against its own
+    model (the lattice reference) and averages.
+    """
+    leaves, tdef = jax.tree.flatten(params)
+    prev_leaves = jax.tree.leaves(prev)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for x, pv, key in zip(leaves, prev_leaves, keys):
+        nkeys = jax.random.split(key, x.shape[0])
+        q, s = jax.vmap(partial(encode_modular, qcfg))(x, pv, nkeys)
+        qp, sp = q[perm], s[perm]          # <- quantized payload crosses nodes
+        xh = jax.vmap(partial(decode_modular, qcfg))(qp, sp, x)
+        out.append(_avg(x, xh, matched))
+    return jax.tree.unflatten(tdef, out)
+
+
+# ---------------------------------------------------------------------------
+# Superstep factory
+# ---------------------------------------------------------------------------
+
+
+def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
+                    lr_fn: Callable, shard: Callable = Identity, *,
+                    mesh=None, param_specs=None, node_axes=None,
+                    static_pairs=None, matching_pool=None):
+    """Returns superstep(state, batch, perm, h_counts, rng) -> (state, metrics).
+
+    loss_fn(params, microbatch) -> scalar; batch leaves are
+    [n_nodes, h_max, local_batch, ...]; perm: [n_nodes] int32 involution;
+    h_counts: [n_nodes] int32 (# local steps this superstep, <= h_max).
+
+    gossip_impl="ppermute" additionally needs (mesh, param_specs, node_axes,
+    static_pairs): the exchange is a shard_map collective-permute with a
+    STATIC matching (production: lax.switch over a matching pool).
+    """
+    h_max = cfg.h_max if cfg.h_mode == "geometric" else cfg.H
+    if cfg.gossip_impl == "ppermute":
+        assert mesh is not None and param_specs is not None \
+            and node_axes is not None and static_pairs is not None
+    if cfg.gossip_impl == "ppermute_pool":
+        assert mesh is not None and param_specs is not None \
+            and node_axes is not None and matching_pool is not None
+
+    def local_steps(params_i, opt_i, batch_i, h_i, lr):
+        """One node's H local SGD steps (no collectives)."""
+        def body(q, carry):
+            p, o, lsum = carry
+            mb = jax.tree.map(lambda x: x[q], batch_i)
+            loss, g = jax.value_and_grad(loss_fn)(p, mb)
+            p2, o2 = opt_update(p, g, o, lr)
+            active = q < h_i
+            p = jax.tree.map(lambda a, b: jnp.where(active, b, a), p, p2)
+            o = jax.tree.map(lambda a, b: jnp.where(active, b, a), o, o2)
+            return (p, o, lsum + jnp.where(active, loss, 0.0))
+        params_i, opt_i, lsum = U.fori_loop(
+            0, h_max, body, (params_i, opt_i, jnp.zeros((), jnp.float32)))
+        return params_i, opt_i, lsum / jnp.maximum(h_i, 1)
+
+    def superstep(state: SwarmState, batch, perm, h_counts, rng):
+        lr = lr_fn(state.step)
+        S = state.params                       # superstep-start models
+        params, opt, losses = jax.vmap(local_steps, in_axes=(0, 0, 0, 0, None))(
+            S, state.opt, batch, h_counts, lr)
+        params = jax.tree.map(lambda x: shard(x, "param"), params)
+        if cfg.gossip_impl == "ppermute_pool":
+            import numpy as _np
+            pool_masks = jnp.asarray(_np.stack(
+                [p != _np.arange(cfg.n_nodes) for p in matching_pool]))
+            matched = pool_masks[perm.reshape(-1)[0]]
+        else:
+            matched = perm != jnp.arange(cfg.n_nodes)
+
+        def exchange(tree, use_quant: bool):
+            """Average each node's `tree` entry with its partner's."""
+            if cfg.gossip_impl == "ppermute":
+                return gossip_ppermute(
+                    tree, param_specs, mesh, node_axes, static_pairs,
+                    quant=cfg.quant if use_quant else None,
+                    prev=state.prev if use_quant else None, rng=rng)
+            if cfg.gossip_impl == "ppermute_pool":
+                # `perm` carries the scalar pool index in this mode
+                return gossip_ppermute_pool(
+                    tree, param_specs, mesh, node_axes, matching_pool,
+                    perm.reshape(-1)[0],
+                    quant=cfg.quant if use_quant else None,
+                    prev=state.prev if use_quant else None, rng=rng)
+            if use_quant:
+                return gossip_quantized(cfg.quant, tree, state.prev, perm,
+                                        matched, rng)
+            return gossip_exact(tree, perm, matched)
+
+        if cfg.nonblocking:
+            # Algorithm 2: X_i <- (S_i + X_j') / 2 + (X_i - S_i), where the
+            # partner contribution X_j' is its STALE comm copy (= S_j here:
+            # the partner's current local delta is not yet visible).
+            base = exchange(S, cfg.quantize)
+            delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) -
+                                 b.astype(jnp.float32), params, S)
+            params = jax.tree.map(
+                lambda b, d, p: jnp.where(
+                    matched.reshape((-1,) + (1,) * (p.ndim - 1)),
+                    (b.astype(jnp.float32) + d).astype(p.dtype), p),
+                base, delta, params)
+        else:
+            # Algorithm 1 (blocking): average the post-local-step models.
+            params = exchange(params, cfg.quantize)
+
+        if cfg.average_momentum and _has_leaves(opt):
+            opt = jax.tree.map(lambda x: _avg(x, x[perm], matched), opt)
+
+        params = jax.tree.map(lambda x: shard(x, "param"), params)
+        new_prev = None
+        if state.prev is not None:
+            # comm copy refreshes on interaction
+            new_prev = jax.tree.map(
+                lambda pv, p: jnp.where(
+                    matched.reshape((-1,) + (1,) * (p.ndim - 1)), p, pv),
+                state.prev, params)
+
+        metrics = {
+            "loss": jnp.mean(losses),
+            "lr": lr,
+            "matched_frac": jnp.mean(matched.astype(jnp.float32)),
+        }
+        if cfg.track_potential:
+            metrics["gamma"] = gamma_potential(params)
+        return SwarmState(params, opt, new_prev, state.step + 1), metrics
+
+    return superstep
+
+
+def make_mean_model_eval(loss_fn: Callable):
+    """Evaluate the swarm's TRUE average model μ vs per-node models — the
+    paper's §5 check ("the real average of all models is usually more
+    accurate than an arbitrary model, but not significantly")."""
+    from repro.core.potential import mean_model
+
+    @jax.jit
+    def evaluate(params_stacked, batch_single):
+        mu = mean_model(params_stacked)
+        mu = jax.tree.map(lambda a, like: a.astype(like.dtype),
+                          mu, jax.tree.map(lambda x: x[0], params_stacked))
+        loss_mu = loss_fn(mu, batch_single)
+        loss_nodes = jax.vmap(lambda p: loss_fn(p, batch_single))(params_stacked)
+        return {"loss_mean_model": loss_mu,
+                "loss_node_mean": jnp.mean(loss_nodes),
+                "loss_node_worst": jnp.max(loss_nodes)}
+    return evaluate
+
+
+def sample_h_counts(cfg: SwarmConfig, rng) -> "np.ndarray":  # noqa: F821
+    """Host-side per-node local-step counts for this superstep."""
+    import numpy as np
+    if cfg.h_mode == "fixed":
+        return np.full((cfg.n_nodes,), cfg.H, np.int32)
+    h = rng.geometric(1.0 / cfg.H, size=cfg.n_nodes)
+    return np.clip(h, 1, cfg.h_max).astype(np.int32)

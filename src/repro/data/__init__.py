@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    DataConfig, SyntheticLMDataset, make_node_batches,
+)

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the paper's communication hot-spots:
+#   quantize_mod  — 8-bit modular (lattice-style) encode, Extension 3
+#   decode_avg    — fused modular decode + pairwise gossip average
+#   sgd_update    — fused momentum/weight-decay/LR parameter update
+# ops.py exposes jit'd wrappers (pallas or pure-jnp ref); ref.py is the oracle.
+from repro.kernels.ops import (  # noqa: F401
+    decode_avg, quantize_mod, sgd_fused_update,
+)

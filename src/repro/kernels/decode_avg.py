@@ -1,0 +1,52 @@
+"""Pallas kernel: fused modular decode + gossip average.
+
+out = (y + decode(q, s; y)) / 2 in ONE pass over HBM (vs 4 passes unfused:
+decode-read, decode-write, avg-read, avg-write). This is the receive side of
+every SwarmSGD interaction — memory-bound, so fusion halves its HBM traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quantize_mod import DEFAULT_TILE_ROWS
+
+
+def _decode_avg_kernel(q_ref, s_ref, y_ref, o_ref, *, levels: int,
+                       average: bool):
+    half = levels // 2
+    q = q_ref[...].astype(jnp.float32)
+    s = s_ref[...]                                  # [TR, 1]
+    y = y_ref[...].astype(jnp.float32)
+    qy = jnp.round(y / s)
+    diff = jnp.mod(q - qy, levels)
+    wrapped = jnp.where(diff >= half, diff - levels, diff)
+    x_hat = (qy + wrapped) * s
+    out = (y + x_hat) * 0.5 if average else x_hat
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def decode_avg_pallas(q, s, y, *, bits: int = 8, average: bool = True,
+                      tile_rows: int = DEFAULT_TILE_ROWS,
+                      interpret: bool = True):
+    """q:[R,B] uint8, s:[R,1] f32, y:[R,B] -> (y + x̂)/2 (or x̂ if not average)."""
+    n_rows, block = q.shape
+    assert block % 128 == 0 and n_rows % tile_rows == 0
+    grid = (n_rows // tile_rows,)
+    kern = functools.partial(_decode_avg_kernel, levels=1 << bits,
+                             average=average)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, block), y.dtype),
+        interpret=interpret,
+    )(q, s, y)

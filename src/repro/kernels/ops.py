@@ -1,0 +1,93 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+`backend` selects pallas vs the pure-jnp ref:
+  "pallas"     — real lowering (TPU target)
+  "interpret"  — Pallas interpreter (CPU-correct; used by tests)
+  "ref"        — pure-jnp oracle (default on CPU hot paths / dry-runs so the
+                 TPU BlockSpecs never lower on the CPU XLA backend)
+Arbitrary-shaped inputs are flattened and padded to the [rows, BLOCK] kernel
+layout and un-padded on the way out.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_ops
+from repro.kernels.decode_avg import decode_avg_pallas
+from repro.kernels.quantize_mod import quantize_mod_pallas
+from repro.kernels.sgd_update import sgd_update_pallas
+
+DEFAULT_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "ref")
+
+
+def _to_blocks(x, block: int, tile_rows: int):
+    flat = x.reshape(-1)
+    n_rows = -(-flat.size // block)
+    n_rows_pad = -(-n_rows // tile_rows) * tile_rows
+    pad = n_rows_pad * block - flat.size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(n_rows_pad, block), pad
+
+
+def quantize_mod(x, ref, u, *, block: int = 256, safety: float = 8.0,
+                 min_scale: float = 1e-8, bits: int = 8,
+                 backend: str | None = None, tile_rows: int = 8):
+    backend = backend or DEFAULT_BACKEND
+    xb, pad = _to_blocks(x, block, tile_rows)
+    rb, _ = _to_blocks(ref, block, tile_rows)
+    ub, _ = _to_blocks(u, block, tile_rows)
+    if backend == "ref":
+        q, s = ref_ops.quantize_mod_ref(xb, rb, ub, safety=safety,
+                                        min_scale=min_scale, bits=bits)
+    else:
+        q, s = quantize_mod_pallas(xb, rb, ub, safety=safety,
+                                   min_scale=min_scale, bits=bits,
+                                   tile_rows=tile_rows,
+                                   interpret=(backend == "interpret"))
+    return q, s, pad
+
+
+def decode_avg(q, s, y, *, block: int = 256, bits: int = 8,
+               average: bool = True, backend: str | None = None,
+               tile_rows: int = 8):
+    """q,s from quantize_mod; y: the receiver tensor (original shape)."""
+    backend = backend or DEFAULT_BACKEND
+    yb, pad = _to_blocks(y, block, tile_rows)
+    if backend == "ref":
+        out = ref_ops.decode_avg_ref(q, s, yb, bits=bits, average=average)
+    else:
+        out = decode_avg_pallas(q, s, yb, bits=bits, average=average,
+                                tile_rows=tile_rows,
+                                interpret=(backend == "interpret"))
+    flat = out.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(y.shape)
+
+
+def sgd_fused_update(p, g, m, *, lr: float, mu: float = 0.9, wd: float = 0.0,
+                     nesterov: bool = False, block: int = 512,
+                     backend: str | None = None, tile_rows: int = 8):
+    backend = backend or DEFAULT_BACKEND
+    pb, pad = _to_blocks(p, block, tile_rows)
+    gb, _ = _to_blocks(g, block, tile_rows)
+    mb, _ = _to_blocks(m, block, tile_rows)
+    if backend == "ref":
+        pn, mn = ref_ops.sgd_update_ref(pb, gb, mb, lr=lr, mu=mu, wd=wd,
+                                        nesterov=nesterov)
+    else:
+        pn, mn = sgd_update_pallas(pb, gb, mb, lr=lr, mu=mu, wd=wd,
+                                   nesterov=nesterov, tile_rows=tile_rows,
+                                   interpret=(backend == "interpret"))
+
+    def unflat(a, like):
+        flat = a.reshape(-1)
+        if pad:
+            flat = flat[:-pad]
+        return flat.reshape(like.shape)
+    return unflat(pn, p), unflat(mn, m)

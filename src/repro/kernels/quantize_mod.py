@@ -1,0 +1,63 @@
+"""Pallas kernel: 8-bit modular (lattice) encode — Extension 3's hot path.
+
+Layout: the flat parameter vector is reshaped to [n_blocks, BLOCK] (BLOCK
+coords share one fp32 scale). Grid tiles rows; each program instance works on
+a (TILE_ROWS, BLOCK) VMEM block — BLOCK is a multiple of 128 (lane dim) and
+TILE_ROWS a multiple of 8 (sublane, fp32) so the VPU operates on full
+registers. One HBM pass: read x, ref, u; write q (uint8) and s (fp32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+DEFAULT_TILE_ROWS = 8
+
+
+def _encode_kernel(x_ref, ref_ref, u_ref, q_ref, s_ref, *, safety: float,
+                   min_scale: float, levels: int):
+    x = x_ref[...].astype(jnp.float32)
+    r = ref_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    half = levels // 2
+    dist = jnp.max(jnp.abs(x - r), axis=1, keepdims=True)      # [TR, 1]
+    s = jnp.maximum(dist * (safety / half), min_scale)
+    q = jnp.floor(x / s + u)                                   # stochastic round
+    q = jnp.mod(q, levels)
+    q_ref[...] = q.astype(jnp.uint8)
+    s_ref[...] = s
+
+
+def quantize_mod_pallas(x, ref, u, *, safety: float = 8.0,
+                        min_scale: float = 1e-8, bits: int = 8,
+                        tile_rows: int = DEFAULT_TILE_ROWS,
+                        interpret: bool = True):
+    """x, ref, u: [n_blocks, BLOCK] -> (q uint8 [n_blocks, BLOCK], s [n_blocks, 1])."""
+    n_rows, block = x.shape
+    assert block % 128 == 0, f"BLOCK {block} must be a multiple of 128 (lanes)"
+    assert n_rows % tile_rows == 0, (n_rows, tile_rows)
+    grid = (n_rows // tile_rows,)
+    kern = functools.partial(_encode_kernel, safety=safety,
+                             min_scale=min_scale, levels=1 << bits)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, block), jnp.uint8),
+            jax.ShapeDtypeStruct((n_rows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, ref, u)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_mod_ref(x, ref, u, *, safety: float = 8.0,
+                     min_scale: float = 1e-8, bits: int = 8):
+    levels = 1 << bits
+    half = levels // 2
+    xf = x.astype(jnp.float32)
+    rf = ref.astype(jnp.float32)
+    dist = jnp.max(jnp.abs(xf - rf), axis=1, keepdims=True)
+    s = jnp.maximum(dist * (safety / half), min_scale)
+    q = jnp.mod(jnp.floor(xf / s + u), levels).astype(jnp.uint8)
+    return q, s
+
+
+def decode_avg_ref(q, s, y, *, bits: int = 8, average: bool = True):
+    levels = 1 << bits
+    half = levels // 2
+    yf = y.astype(jnp.float32)
+    qy = jnp.round(yf / s)
+    diff = jnp.mod(q.astype(jnp.float32) - qy, levels)
+    wrapped = jnp.where(diff >= half, diff - levels, diff)
+    x_hat = (qy + wrapped) * s
+    out = (yf + x_hat) * 0.5 if average else x_hat
+    return out.astype(y.dtype)
+
+
+def sgd_update_ref(p, g, m, *, lr: float, mu: float = 0.9, wd: float = 0.0,
+                   nesterov: bool = False):
+    pf, gf, mf = (a.astype(jnp.float32) for a in (p, g, m))
+    if wd:
+        gf = gf + wd * pf
+    m_new = mu * mf + gf
+    step = gf + mu * m_new if nesterov else m_new
+    return (pf - lr * step).astype(p.dtype), m_new.astype(m.dtype)

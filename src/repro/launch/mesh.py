@@ -1,0 +1,34 @@
+"""Production mesh builders. FUNCTIONS only — importing this module never
+touches jax device state (device count is locked at first jax init, and the
+dry-run must set XLA_FLAGS before that)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Target: TPU v5e. Single pod = 16x16 (256 chips), multi-pod = 2 pods.
+
+    Axes: ("pod",) "data", "model". SwarmSGD nodes live on the node axes
+    (see repro.launch.specs.node_axes_for): default ("pod","data") -> 32
+    gossip nodes x 16-way tensor parallel.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_nodes: int = 1):
+    """CPU-scale mesh for the runnable examples/tests (1 device -> trivial)."""
+    n_dev = len(jax.devices())
+    n = min(n_nodes, n_dev)
+    return jax.make_mesh((n, n_dev // n), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_LINK_BW = 50e9           # B/s per link (conservative single-link figure)
+HBM_PER_CHIP = 16 * 1024**3  # 16 GiB

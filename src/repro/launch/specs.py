@@ -1,0 +1,342 @@
+"""Sharding rules + ShapeDtypeStruct input specs for every (arch × shape).
+
+Logical-axis -> mesh-axis mapping (MaxText-style). Param pytrees are built
+from the same templates as the arrays, so spec trees always match.
+
+Node granularity:
+  * default: node_axes = ("pod","data") (multi-pod) / ("data",) — a SwarmSGD
+    node is one 16-chip tensor-parallel island; 32 (or 16) gossip nodes.
+  * big_model (jamba-398b): node_axes = ("pod",) — a node is a whole pod;
+    experts shard over "data", everything wide over "model" (256-way).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.layers import ParamInfo, is_info
+from repro.models.transformer import param_template
+
+
+def mesh_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def node_axes_for(cfg: ModelConfig, mesh) -> Tuple[str, ...]:
+    axes = mesh_axes(mesh)
+    if cfg.big_model:
+        return ("pod",) if "pod" in axes else ()
+    return tuple(a for a in axes if a != "model")
+
+
+def n_nodes_for(cfg: ModelConfig, mesh) -> int:
+    n = 1
+    for a in node_axes_for(cfg, mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_rules(cfg: ModelConfig, mesh, role: str) -> Dict[Optional[str], Any]:
+    """logical axis name -> mesh axis (or None)."""
+    axes = mesh_axes(mesh)
+    model_ax = "model"
+    expert_ax = None
+    if cfg.moe is not None:
+        expert_ax = cfg.moe.expert_shard_axis
+        if expert_ax is not None and expert_ax not in axes:
+            expert_ax = None
+        if not cfg.big_model and expert_ax == "data":
+            expert_ax = None  # "data" is a node axis in the default profile
+    # vocab is only shardable when divisible by the model axis (49155/50280
+    # vocabularies stay replicated; the CE is chunked so this is memory-safe)
+    vocab_ax = model_ax if cfg.vocab_size % mesh.shape[model_ax] == 0 else None
+    # big_model: a node is a whole pod, so non-expert weights can (and for
+    # the 398B MUST — memory-fit finding, EXPERIMENTS.md §Perf) shard over
+    # BOTH ("data","model") = 256-way, not just "model": argument bytes drop
+    # 16.7 GiB -> ~6 GiB/device. Divisibility-gated per dimension.
+    import os as _os
+    wide_enabled = bool(_os.environ.get("REPRO_WIDE_BIG"))
+
+    def wide(dim_size: int):
+        if not (wide_enabled and cfg.big_model and "data" in axes):
+            return model_ax
+        if dim_size % (mesh.shape["data"] * mesh.shape["model"]) == 0:
+            return ("data", "model")
+        return model_ax
+
+    hd = cfg.resolved_head_dim
+    d_in = (cfg.ssm.expand * cfg.d_model) if cfg.ssm is not None else 0
+    ssm_proj_dim = (2 * d_in + 2 * cfg.ssm.n_groups * cfg.ssm.d_state +
+                    d_in // cfg.ssm.head_dim) if cfg.ssm is not None else 0
+    conv_dim = (d_in + 2 * cfg.ssm.n_groups * cfg.ssm.d_state) \
+        if cfg.ssm is not None else 0
+    rules = {
+        None: None,
+        "layers": None,
+        "vocab": wide(cfg.vocab_size) if (wide_enabled and cfg.big_model)
+                 else vocab_ax,
+        "embed": None,
+        "ffn": wide(cfg.d_ff) if cfg.d_ff else model_ax,
+        "heads_x_dim": wide(cfg.n_heads * hd),
+        "kv_x_dim": wide(cfg.n_kv_heads * hd),
+        "expert": expert_ax,
+        "expert_unsharded": None,
+        "expert_ffn": model_ax if expert_ax != model_ax else None,
+        "ssm_proj": wide(ssm_proj_dim) if cfg.ssm is not None else model_ax,
+        "ssm_conv": wide(conv_dim) if cfg.ssm is not None else model_ax,
+        "ssm_inner": wide(d_in) if cfg.ssm is not None else model_ax,
+        "ssm_head": model_ax,
+    }
+    return rules
+
+
+def param_pspec(cfg: ModelConfig, mesh, *, node_stacked: bool,
+                role: str = "train"):
+    """PartitionSpec pytree matching param_template(cfg)."""
+    rules = logical_rules(cfg, mesh, role)
+    nd = node_axes_for(cfg, mesh)
+
+    def spec_of(info: ParamInfo):
+        parts = [rules[a] for a in info.axes]
+        if node_stacked:
+            parts = [nd if nd else None] + parts
+        return P(*parts)
+
+    return jax.tree.map(spec_of, param_template(cfg), is_leaf=is_info)
+
+
+def batch_axes_for(cfg: ModelConfig, mesh, role: str) -> Optional[Any]:
+    """Mesh axes carrying the batch dim."""
+    axes = mesh_axes(mesh)
+    if role == "train":
+        # within-node batch: big_model shards it over "data" (expert a2a)
+        return "data" if (cfg.big_model and "data" in axes) else None
+    # serving: batch over all non-model axes (big_model: "pod" only, since
+    # "data" carries the expert dim)
+    cand = tuple(a for a in axes if a != "model")
+    if cfg.big_model:
+        cand = tuple(a for a in cand if a != "data")
+    return cand if cand else None
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs + PartitionSpecs) per entry point
+# ---------------------------------------------------------------------------
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape, mesh, H: int):
+    """Superstep batch: [n_nodes, H, b_local, S] tokens+targets.
+
+    global_batch sequences per superstep are split across nodes and the H
+    local steps (tokens/superstep == the assigned shape, algorithm-agnostic).
+    """
+    n = n_nodes_for(cfg, mesh)
+    nd = node_axes_for(cfg, mesh)
+    b_local = shape.global_batch // (n * H)
+    assert b_local >= 1, (
+        f"{cfg.name}/{shape.name}: global_batch {shape.global_batch} < "
+        f"n_nodes*H = {n * H}")
+    bax = batch_axes_for(cfg, mesh, "train")
+    node_part = nd if nd else None
+    specs = {
+        "tokens": (_sd((n, H, b_local, shape.seq_len), jnp.int32),
+                   P(node_part, None, bax, None)),
+        "targets": (_sd((n, H, b_local, shape.seq_len), jnp.int32),
+                    P(node_part, None, bax, None)),
+    }
+    if cfg.frontend is not None:
+        f = cfg.frontend
+        specs["prefix_embeds"] = (
+            _sd((n, H, b_local, f.n_prefix, f.d_embed), jnp.float32),
+            P(node_part, None, bax, None, None))
+    return specs
+
+
+def serve_input_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    """decode: one token per sequence + KV cache of seq_len; prefill: full seq."""
+    bax = batch_axes_for(cfg, mesh, "serve")
+    B = shape.global_batch
+    if B == 1:
+        bax = None  # long-context: batch unshardable; KV seq shards instead
+    if shape.kind == "prefill":
+        specs = {"tokens": (_sd((B, shape.seq_len), jnp.int32), P(bax, None))}
+        if cfg.frontend is not None:
+            f = cfg.frontend
+            specs["prefix_embeds"] = (
+                _sd((B, f.n_prefix, f.d_embed), jnp.float32), P(bax, None, None))
+        return specs
+    return {"tokens": (_sd((B, 1), jnp.int32), P(bax, None))}
+
+
+def cache_pspec(cfg: ModelConfig, mesh, shape: InputShape,
+                layout: str = "headdim"):
+    """PartitionSpec pytree matching init_cache(...): KV batch over the batch
+    axes; long-context (batch 1): shard the cache SEQUENCE over "data"
+    (flash-decoding style).
+
+    `layout` for archs whose n_kv_heads doesn't divide the model axis:
+      "headdim"  — shard head_dim over "model" (BASELINE; decode attention
+                   then all-reduces partial [B,H,1,S] logits — expensive).
+      "seqshard" — shard the cache SEQUENCE over "model" (flash-decoding:
+                   local full-head partial softmax, tiny stat reductions).
+    """
+    bax = batch_axes_for(cfg, mesh, "serve")
+    if shape.global_batch == 1:
+        bax = None
+    seq_ax = None
+    if shape.global_batch == 1 and "data" in mesh_axes(mesh) and not cfg.big_model:
+        seq_ax = "data"
+    rules = logical_rules(cfg, mesh, "serve")
+    # the separate KV-head dim (n_kv_heads, often < 16) is only shardable
+    # when divisible by the model axis; head_dim (128/256) shards otherwise
+    kv_ax = "model" if cfg.n_kv_heads % mesh.shape["model"] == 0 else None
+    hd_ax = None
+    if kv_ax is None:
+        if layout == "seqshard":
+            seq_ax = seq_ax or "model"
+        elif cfg.resolved_head_dim % mesh.shape["model"] == 0:
+            hd_ax = "model"
+    nh_ax = rules["ssm_head"]
+    if cfg.ssm is not None:
+        nh = (cfg.ssm.expand * cfg.d_model) // cfg.ssm.head_dim
+        if nh % mesh.shape["model"] != 0:
+            nh_ax = None
+
+    def attn_spec(stacked: bool):
+        lead = (None,) if stacked else ()
+        return {"k": P(*lead, bax, seq_ax, kv_ax, hd_ax),
+                "v": P(*lead, bax, seq_ax, kv_ax, hd_ax)}
+
+    def swa_spec(stacked: bool):
+        lead = (None,) if stacked else ()
+        swa_seq = "model" if (kv_ax is None and layout == "seqshard" and
+                              min(cfg.sliding_window, shape.seq_len) %
+                              mesh.shape["model"] == 0) else None
+        return {"k": P(*lead, bax, swa_seq, kv_ax, hd_ax),
+                "v": P(*lead, bax, swa_seq, kv_ax, hd_ax)}
+
+    def mamba_spec(stacked: bool):
+        lead = (None,) if stacked else ()
+        return {"conv": P(*lead, bax, None, rules["ssm_conv"]),
+                "ssm": P(*lead, bax, nh_ax, None, None)}
+
+    def per_pattern(pattern, stacked):
+        out = {}
+        for i, (mx, _) in enumerate(pattern):
+            key = f"layer_{i}"
+            if mx == "attn":
+                out[key] = attn_spec(stacked)
+            elif mx == "swa":
+                out[key] = swa_spec(stacked)
+            else:
+                out[key] = mamba_spec(stacked)
+        return out
+
+    spec: Dict[str, Any] = {"len": P()}
+    if cfg.n_full_blocks > 0:
+        spec["blocks"] = per_pattern(cfg.pattern, True)
+    if cfg.tail_pattern:
+        spec["tail"] = per_pattern(cfg.tail_pattern, False)
+    return spec
+
+
+def make_shard_fn(cfg: ModelConfig, mesh, role: str,
+                  act_constraints: Optional[bool] = None,
+                  kv_seq_axis: Optional[str] = None,
+                  ce_anchor: bool = False,
+                  moe_c_shard: bool = False):
+    """Activation sharding-constraint hook handed to model forward.
+
+    PERF FINDING (EXPERIMENTS.md §Perf iter 0): inside the vmapped-over-nodes
+    train step, "replicated" activation constraints force cross-node
+    replication and DOUBLE collective traffic (gemma3-4b train: 890 -> 424
+    GiB/device). Default: constraints OFF for training (GSPMD propagation
+    from the param shardings is strictly better), ON for serving (no vmap;
+    the batch/vocab constraints help decode logits placement).
+    """
+    if act_constraints is None:
+        act_constraints = role == "serve"
+    bax = batch_axes_for(cfg, mesh, role)
+    rules = logical_rules(cfg, mesh, role)
+    heads_ax = rules["heads_x_dim"]
+    if cfg.n_heads % mesh.shape["model"] != 0:
+        heads_ax = None  # merged-dim sharding would split inside a head
+
+    UC = P.UNCONSTRAINED
+
+    def shard(x, kind):
+        if kind == "moe_buf":
+            # [E, C, D] dispatch buffer: capacity-shard over "model" when the
+            # expert dim can't divide it (expert FFNs become collective-free)
+            if not moe_c_shard or cfg.moe is None:
+                return x
+            if cfg.moe.expert_shard_axis == "model":
+                return x  # experts already shard the model axis
+            try:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(UC, "model", None)))
+            except (ValueError, TypeError):
+                return x
+        if kind == "moe_rows":
+            # [T*k, D] gathered expert-output rows: row-shard over model
+            if not moe_c_shard or cfg.moe is None:
+                return x
+            try:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P("model", None)))
+            except (ValueError, TypeError):
+                return x
+        if kind == "ce_logits":
+            # [B,S,chunk]: pin the vocab-chunk dim to the vocab sharding and
+            # leave batch dims UNCONSTRAINED (vmap-safe; iteration-0 lesson)
+            if not ce_anchor or rules["vocab"] is None:
+                return x
+            try:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(*([UC] * (x.ndim - 1)),
+                                             rules["vocab"])))
+            except (ValueError, TypeError):
+                return x
+        if kind == "attn_logits" and kv_seq_axis is not None:
+            # [B, H, 1, S] with the KV cache sequence-sharded (flash-decode);
+            # long_500k (batch 1) puts the seq on "data": drop it from the
+            # batch axes to avoid a duplicate-axis spec
+            b = bax
+            if b is not None:
+                bt = b if isinstance(b, tuple) else (b,)
+                bt = tuple(a for a in bt if a != kv_seq_axis)
+                b = bt if len(bt) > 1 else (bt[0] if bt else None)
+            try:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(b, None, None, kv_seq_axis)))
+            except (ValueError, TypeError):
+                return x
+        if not act_constraints:
+            return x
+        try:
+            if kind == "act":      # [..., B, S, D]
+                spec = P(*([None] * (x.ndim - 3)), bax, None, None)
+            elif kind == "qkv":    # [..., B, S, H, hd]
+                spec = P(*([None] * (x.ndim - 4)), bax, None, heads_ax, None)
+            elif kind == "logits":  # [..., B, S, V]
+                spec = P(*([None] * (x.ndim - 3)), bax, None, rules["vocab"])
+            else:
+                return x
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        except (ValueError, TypeError):
+            return x
+    return shard
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree, is_leaf=lambda s: isinstance(s, P))

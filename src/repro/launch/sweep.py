@@ -1,0 +1,81 @@
+"""Run the full dry-run grid as isolated subprocesses (one per pair, so a
+failure or memory blow-up in one combination cannot poison the rest).
+
+  PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun [--mesh both]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "gemma3-4b", "olmo-1b", "granite-moe-3b-a800m", "musicgen-large",
+    "gemma3-27b", "paligemma-3b", "jamba-1.5-large-398b", "chatglm3-6b",
+    "mamba2-780m", "qwen3-moe-30b-a3b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_pair(arch, shape, mesh, out, extra=(), timeout=1800):
+    tag = f"{arch}__{shape}__{mesh}" + ("__" + "_".join(extra) if extra else "")
+    path = os.path.join(out, tag + ".json")
+    if os.path.exists(path):
+        print(f"[skip existing] {tag}")
+        return True
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", out] + list(extra)
+    if "--flops" not in extra:
+        # the analytic FLOP model is cross-validated against exact unrolled
+        # HLO counts within 0.2-7% (EXPERIMENTS.md §Method); skipping the
+        # unrolled lowering pass keeps the 80-combination sweep tractable
+        # on one CPU core
+        cmd += ["--flops", "analytic"]
+    t0 = time.time()
+    try:
+        p = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout,
+                           env={**os.environ, "PYTHONPATH": "src"})
+    except subprocess.TimeoutExpired:
+        print(f"[TIMEOUT {timeout}s] {tag}")
+        with open(path, "w") as f:
+            json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                       "error": f"timeout {timeout}s"}, f)
+        return False
+    dt = time.time() - t0
+    if p.returncode != 0:
+        tail = (p.stderr or "")[-2000:]
+        print(f"[FAIL {dt:.0f}s] {tag}\n{tail}")
+        with open(path, "w") as f:
+            json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                       "error": tail}, f)
+        return False
+    print(f"[ok {dt:.0f}s] {tag}")
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--archs", default=",".join(ARCHS))
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    ok = fail = 0
+    for arch in args.archs.split(","):
+        for shape in args.shapes.split(","):
+            for mesh in meshes:
+                if run_pair(arch, shape, mesh, args.out):
+                    ok += 1
+                else:
+                    fail += 1
+    print(f"done: {ok} ok, {fail} failed")
+
+
+if __name__ == "__main__":
+    main()

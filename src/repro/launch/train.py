@@ -1,0 +1,149 @@
+"""End-to-end training driver (CPU-runnable scales; same code path as the
+production dry-run, minus the 512-device mesh).
+
+  PYTHONPATH=src python -m repro.launch.train --arch transformer-wmt \
+      --algo swarm --nodes 8 --steps 200 --reduced
+
+Trains with SwarmSGD (or any baseline algorithm) on the synthetic LM
+pipeline, logging loss / Γ potential / communication bytes, with periodic
+checkpointing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algorithms import make_algorithm
+from repro.algorithms.sgp import sgp_init_prev
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config, reduced
+from repro.core import SwarmConfig, make_graph, make_swarm_step, sample_matching, swarm_init
+from repro.core.swarm import SwarmState, sample_h_counts
+from repro.data import DataConfig, SyntheticLMDataset, make_node_batches
+from repro.models import init_params, loss_fn as model_loss
+from repro.optim import make_optimizer
+from repro.quant.schemes import ModularQuantConfig
+
+
+def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
+                  quantize: bool = False, nonblocking: bool = False,
+                  graph_kind: str = "complete", seed: int = 0,
+                  h_mode: str = "fixed", momentum: float = 0.9):
+    graph = make_graph(graph_kind, n_nodes)
+    opt = make_optimizer("sgd", lr=lr, momentum=momentum,
+                         state_dtype=cfg.opt_state_dtype)
+    lf = lambda p, mb: model_loss(cfg, p, mb)  # noqa: E731
+    lr_fn = lambda s: lr  # noqa: E731
+
+    if algo == "swarm":
+        scfg = SwarmConfig(n_nodes=n_nodes, H=H, h_mode=h_mode,
+                           quantize=quantize, nonblocking=nonblocking,
+                           quant=ModularQuantConfig())
+        step = make_swarm_step(scfg, lf, opt.update, lr_fn)
+    else:
+        kw = dict(loss_fn=lf, opt_update=opt.update, lr_fn=lr_fn,
+                  n_nodes=n_nodes)
+        if algo == "localsgd":
+            kw["H"] = H
+        if algo == "dpsgd":
+            kw["graph"] = graph
+        step = make_algorithm(algo, **kw)
+        scfg = SwarmConfig(n_nodes=n_nodes, H=H if algo == "localsgd" else 1)
+
+    rng = jax.random.PRNGKey(seed)
+    state = swarm_init(rng, scfg, lambda k: init_params(k, cfg), opt.init)
+    if algo == "sgp":
+        state = SwarmState(state.params, state.opt, sgp_init_prev(n_nodes),
+                           state.step)
+    return jax.jit(step), state, scfg, graph
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="transformer-wmt")
+    ap.add_argument("--algo", default="swarm",
+                    choices=["swarm", "allreduce", "localsgd", "dpsgd",
+                             "adpsgd", "sgp"])
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--H", type=int, default=2)
+    ap.add_argument("--h-mode", default="fixed", choices=["fixed", "geometric"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4, help="per node per local step")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--nonblocking", action="store_true")
+    ap.add_argument("--graph", default="complete")
+    ap.add_argument("--non-iid", type=float, default=None,
+                    help="Dirichlet alpha for per-node data skew")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant of the arch")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--eval-mean", action="store_true",
+                    help="also evaluate the true average model μ (paper §5)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--out", default=None, help="json metrics path")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, n_layers=args.layers, d_model=args.d_model)
+    ds = SyntheticLMDataset(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                   seed=args.seed, non_iid_alpha=args.non_iid),
+        n_nodes=args.nodes)
+
+    step, state, scfg, graph = build_trainer(
+        cfg, args.algo, args.nodes, args.H, args.lr, args.quantize,
+        args.nonblocking, args.graph, args.seed, args.h_mode)
+    rng_np = np.random.default_rng(args.seed)
+    key = jax.random.PRNGKey(args.seed + 1)
+    h_max = scfg.h_max if scfg.h_mode == "geometric" else scfg.H
+
+    history = []
+    t0 = time.time()
+    for t in range(args.steps):
+        nb = make_node_batches(ds, t, args.batch * h_max)
+        batch = {k: jnp.asarray(v.reshape(args.nodes, h_max, args.batch,
+                                          args.seq))
+                 for k, v in nb.items()}
+        perm = jnp.asarray(sample_matching(graph, rng_np))
+        h = jnp.asarray(sample_h_counts(scfg, rng_np))
+        key, sub = jax.random.split(key)
+        state, m = step(state, batch, perm, h, sub)
+        if t % args.log_every == 0 or t == args.steps - 1:
+            rec = {"step": t, "loss": float(m["loss"]),
+                   "gamma": float(m.get("gamma", 0.0)),
+                   "wall_s": round(time.time() - t0, 1)}
+            if args.eval_mean:
+                from repro.core.swarm import make_mean_model_eval
+                from repro.models import loss_fn as mlf
+                ev = make_mean_model_eval(lambda p, b: mlf(cfg, p, b))
+                eb = {"tokens": jnp.asarray(nb["tokens"][0].reshape(-1, args.seq)),
+                      "targets": jnp.asarray(nb["targets"][0].reshape(-1, args.seq))}
+                em = ev(state.params, eb)
+                rec.update({k: float(v) for k, v in em.items()})
+            history.append(rec)
+            print(json.dumps(rec))
+    if args.ckpt:
+        save_checkpoint(args.ckpt, jax.device_get(state.params),
+                        {"arch": cfg.name, "algo": args.algo,
+                         "steps": args.steps})
+        print("checkpoint ->", args.ckpt)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"args": vars(args), "history": history}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.transformer import (  # noqa: F401
+    forward, init_cache, init_params, loss_fn, param_template,
+)

@@ -1,0 +1,175 @@
+"""GQA attention: memory-safe chunked training/prefill paths + KV-cache decode.
+
+Three compute paths, all pure JAX (a Pallas flash kernel is NOT part of this
+paper's contribution — SwarmSGD optimizes communication, not attention — so
+attention stays jnp per the kernels policy):
+
+* ``attention_causal``  — global causal attention, online-softmax scan over
+  KV chunks (never materializes [B,H,S,S]; flops ~ full S^2, as flash-style
+  implementations without block skipping).
+* ``attention_banded``  — sliding-window attention; each query chunk attends
+  only to its [qpos-W, qpos] band via dynamic_slice, so compute is
+  O(S * (W + C)) not O(S^2).
+* ``attention_decode``  — one query token over a (possibly ring-buffered or
+  sequence-sharded) KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import unroll as U
+
+NEG_INF = -1e30
+
+
+def _scale(hd: int) -> float:
+    return hd ** -0.5
+
+
+def repeat_kv(k, n_rep: int):
+    """[B,S,KVH,hd] -> [B,S,KVH*n_rep,hd]"""
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def attention_causal(q, k, v, *, q_offset: int = 0, chunk_kv: int = 1024,
+                     chunk_q: int = 1024):
+    """Global causal attention. q:[B,Sq,H,hd] k,v:[B,Sk,KVH,hd] -> [B,Sq,H,hd].
+
+    Online softmax over KV chunks; query dim processed in chunks via lax.map
+    to bound the live score tensor to [B,H,Cq,Ckv].
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    n_rep = H // KVH
+    chunk_q = min(chunk_q, Sq)
+    chunk_kv = min(chunk_kv, Sk)
+    assert Sq % chunk_q == 0 and Sk % chunk_kv == 0, (Sq, chunk_q, Sk, chunk_kv)
+    nq, nk = Sq // chunk_q, Sk // chunk_kv
+    kf = repeat_kv(k, n_rep)
+    vf = repeat_kv(v, n_rep)
+
+    def q_block(qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * chunk_q, chunk_q, axis=1)
+        qpos = q_offset + qi * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry, ki):
+            m, s, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(kf, ki * chunk_kv, chunk_kv, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vf, ki * chunk_kv, chunk_kv, axis=1)
+            kpos = ki * chunk_kv + jnp.arange(chunk_kv)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qc, kc).astype(jnp.float32)
+            logits = logits * _scale(hd)
+            mask = qpos[:, None] >= kpos[None, :]
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            cm = jnp.max(logits, axis=-1)
+            m_new = jnp.maximum(m, cm)
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            s = s * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vc.astype(jnp.float32))
+            return (m_new, s, acc), None
+
+        init = (jnp.full((B, H, chunk_q), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, chunk_q), jnp.float32),
+                jnp.zeros((B, H, chunk_q, hd), jnp.float32))
+        (m, s, acc), _ = U.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(s, 1e-30)[..., None]
+        return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)  # [B,Cq,H,hd]
+
+    if nq == 1:
+        return q_block(jnp.asarray(0))
+    blocks = U.map_(q_block, jnp.arange(nq))            # [nq,B,Cq,H,hd]
+    return jnp.transpose(blocks, (1, 0, 2, 3, 4)).reshape(B, Sq, H, hd)
+
+
+def attention_banded(q, k, v, *, window: int, q_offset: int = 0,
+                     chunk_q: int = 1024):
+    """Sliding-window causal attention: query chunk i attends keys in
+    [i*C - W, i*C + C). Compute O(Sq * (W + C))."""
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    n_rep = H // KVH
+    chunk_q = min(chunk_q, Sq)
+    if Sk <= window + chunk_q:
+        # band covers everything: fall back to the dense path + window mask
+        return _windowed_dense(q, k, v, window=window, q_offset=q_offset,
+                               chunk_q=chunk_q)
+    assert Sq % chunk_q == 0
+    nq = Sq // chunk_q
+    band = window + chunk_q
+    kf = repeat_kv(k, n_rep)
+    vf = repeat_kv(v, n_rep)
+
+    def q_block(qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * chunk_q, chunk_q, axis=1)
+        qpos = q_offset + qi * chunk_q + jnp.arange(chunk_q)
+        start = jnp.clip(q_offset + qi * chunk_q - window, 0, Sk - band)
+        kc = jax.lax.dynamic_slice_in_dim(kf, start, band, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(vf, start, band, axis=1)
+        kpos = start + jnp.arange(band)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qc, kc).astype(jnp.float32)
+        logits = logits * _scale(hd)
+        mask = (qpos[:, None] >= kpos[None, :]) & \
+               (qpos[:, None] - kpos[None, :] < window)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        out = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", out, vc.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    if nq == 1:
+        return q_block(jnp.asarray(0))
+    blocks = U.map_(q_block, jnp.arange(nq))
+    return jnp.transpose(blocks, (1, 0, 2, 3, 4)).reshape(B, Sq, H, hd)
+
+
+def _windowed_dense(q, k, v, *, window: int, q_offset: int, chunk_q: int):
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    kf = repeat_kv(k, H // k.shape[2])
+    vf = repeat_kv(v, H // v.shape[2])
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * _scale(hd)
+    mask = (qpos[:, None] >= kpos[None, :]) & \
+           (qpos[:, None] - kpos[None, :] < window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     ring_pos: Optional[jax.Array] = None, shard=None):
+    """One-token decode. q:[B,1,H,hd]; k_cache/v_cache:[B,Sc,KVH,hd].
+
+    ``cache_len`` — number of valid cache entries (scalar int32).
+    ``window``>0 with ``ring_pos`` — ring-buffered sliding-window cache where
+    slot i holds absolute position info implicitly; validity is
+    i < min(cache_len, Sc).
+    """
+    B, _, H, hd = q.shape
+    Sc, KVH = k_cache.shape[1], k_cache.shape[2]
+    n_rep = H // KVH
+    kf = repeat_kv(k_cache, n_rep)
+    vf = repeat_kv(v_cache, n_rep)
+    # preferred_element_type avoids materializing an fp32 copy of the cache
+    # (a seq-sharded cache cast to f32 doubled the decode all-gather bytes)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kf,
+                        preferred_element_type=jnp.float32) * _scale(hd)
+    if shard is not None:
+        # anchor flash-decoding: with a sequence-sharded cache, the partial
+        # logits stay S-sharded and the softmax lowers to tiny stat
+        # reductions instead of GSPMD gathering the whole cache
+        logits = shard(logits, "attn_logits")
+    valid = jnp.arange(Sc) < jnp.minimum(cache_len, Sc)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

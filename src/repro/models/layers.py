@@ -1,0 +1,227 @@
+"""Shared building blocks: param templates, norms, RoPE, MLPs, chunked CE.
+
+Parameters are declared as :class:`ParamInfo` templates carrying *logical
+axis names*; `init_from_template` materializes arrays and the launcher maps
+logical axes -> mesh PartitionSpecs (MaxText-style), guaranteeing the spec
+pytree always matches the param pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import unroll as U
+
+# ---------------------------------------------------------------------------
+# Param templates
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamInfo:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == len(shape)
+    init: str = "normal"              # normal | zeros | ones
+    scale: Optional[float] = None     # default: 1/sqrt(fan_in) for normal
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_info(x) -> bool:
+    return isinstance(x, ParamInfo)
+
+
+def init_from_template(rng, template, dtype):
+    """Materialize a pytree of ParamInfo into arrays."""
+    leaves, treedef = jax.tree.flatten(template, is_leaf=is_info)
+    rngs = jax.random.split(rng, len(leaves))
+
+    def make(info: ParamInfo, key):
+        if info.init == "zeros":
+            return jnp.zeros(info.shape, dtype)
+        if info.init == "ones":
+            return jnp.ones(info.shape, dtype)
+        fan_in = info.shape[-2] if len(info.shape) >= 2 else info.shape[-1]
+        scale = info.scale if info.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(key, info.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(i, k) for i, k in zip(leaves, rngs)])
+
+
+def stack_template(template, n: int, axis_name: str = "layers"):
+    """Prepend a stacked-blocks dim of size n to every ParamInfo."""
+    return jax.tree.map(
+        lambda i: ParamInfo((n,) + i.shape, (axis_name,) + i.axes, i.init, i.scale),
+        template, is_leaf=is_info)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_template(cfg, d: Optional[int] = None):
+    d = d if d is not None else cfg.d_model
+    if cfg.norm == "nonparam_ln":
+        return {}                      # OLMo: no affine params
+    if cfg.norm == "layernorm":
+        return {"scale": ParamInfo((d,), ("embed",), "ones"),
+                "bias": ParamInfo((d,), ("embed",), "zeros")}
+    return {"scale": ParamInfo((d,), ("embed",), "ones")}  # rmsnorm
+
+
+def apply_norm(cfg, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        xf = xf * p["scale"].astype(jnp.float32)
+        return xf.astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        xf = xf * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return xf.astype(x.dtype)          # nonparam_ln: no affine
+
+
+def rms_norm_simple(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + partial/2d fraction)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, rot_frac: float, theta: float):
+    rot_dim = int(head_dim * rot_frac)
+    rot_dim -= rot_dim % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, *, theta: float, rot_frac: float = 1.0):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    inv, rot_dim = rope_freqs(hd, rot_frac, theta)
+    if rot_dim == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, rot/2]
+    cos = jnp.cos(ang)[..., :, None, :]                      # [..., S, 1, rot/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_template(cfg, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff if d_ff is not None else cfg.d_ff
+    t = {"w_up": ParamInfo((d, f), ("embed", "ffn")),
+         "w_down": ParamInfo((f, d), ("ffn", "embed"))}
+    if cfg.gated_mlp:
+        t["w_gate"] = ParamInfo((d, f), ("embed", "ffn"))
+    return t
+
+
+def activation(cfg, x):
+    return jax.nn.gelu(x) if cfg.act == "gelu" else jax.nn.silu(x)
+
+
+# --- row-parallel partial-sum dtype (perf knob, EXPERIMENTS.md §Perf) ------
+# False (baseline): jnp's default f32 accumulation — the cross-shard partial
+# all-reduce of every row-parallel matmul moves f32 (2x ICI bytes).
+# True (optimized): bf16 partial reduction (Megatron/NCCL standard).
+_NATIVE_PARTIALS = False
+
+
+def set_native_partials(value: bool):
+    global _NATIVE_PARTIALS
+    _NATIVE_PARTIALS = bool(value)
+
+
+def row_parallel_pet(dtype):
+    return dtype if _NATIVE_PARTIALS else None
+
+
+def apply_mlp(cfg, p, x):
+    h = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = activation(cfg, g) * h
+    else:
+        h = activation(cfg, h)
+    # row-parallel projection: the contraction dim (ffn) is model-sharded, so
+    # XLA all-reduces partial sums; see set_native_partials.
+    return jnp.einsum("...f,fd->...d", h, p["w_down"],
+                      preferred_element_type=row_parallel_pet(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (vocab up to 262k: never materialize [B,S,V])
+# ---------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(x, embed, targets, mask=None, chunk: int = 16_384,
+                         softcap: float = 0.0, shard=None):
+    """Mean CE of logits = x @ embed.T without materializing full logits.
+
+    x: [B,S,D] (final hidden), embed: [V,D], targets: [B,S] int32.
+    Online logsumexp over vocab chunks; fp32 accumulation. `shard` anchors
+    the per-chunk logits to the vocab sharding ("ce_logits") so the lse
+    reductions stay shard-local (partial stats + tiny [B,S] all-reduces).
+    """
+    V = embed.shape[0]
+    chunk = min(chunk, V)
+    n_chunks = -(-V // chunk)
+    pad_v = n_chunks * chunk - V
+    embed_p = jnp.pad(embed, ((0, pad_v), (0, 0))) if pad_v else embed
+    emb_chunks = embed_p.reshape(n_chunks, chunk, embed.shape[1])
+
+    def body(carry, ec_off):
+        m, s, tl = carry
+        ec, off = ec_off
+        logits = jnp.einsum("bsd,vd->bsv", x, ec).astype(jnp.float32)
+        if shard is not None:
+            logits = shard(logits, "ce_logits")
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        if pad_v:  # mask padded vocab rows in the last chunk
+            vidx = off + jnp.arange(chunk)
+            logits = jnp.where(vidx[None, None, :] < V, logits, -jnp.inf)
+        cm = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m, cm)
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[..., None]), axis=-1)
+        loc = targets - off
+        in_chunk = (loc >= 0) & (loc < chunk)
+        tgt = jnp.take_along_axis(
+            logits, jnp.clip(loc, 0, chunk - 1)[..., None], axis=-1)[..., 0]
+        tl = jnp.where(in_chunk, tgt, tl)
+        return (m_new, s, tl), None
+
+    B, S = targets.shape
+    init = (jnp.full((B, S), -jnp.inf, jnp.float32),
+            jnp.zeros((B, S), jnp.float32),
+            jnp.zeros((B, S), jnp.float32))
+    offs = jnp.arange(n_chunks) * chunk
+    (m, s, tl), _ = U.scan(body, init, (emb_chunks, offs))
+    nll = m + jnp.log(s) - tl
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

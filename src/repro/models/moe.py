@@ -1,0 +1,124 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity,
+scatter/gather dispatch (GShard-style positions via cumsum), load-balance
+auxiliary loss, and expert-parallel-friendly buffer layout.
+
+Dispatch is index-based (scatter into an [E, C, D] buffer, gather back) so
+compute is proportional to *active* params — no dense all-experts fallback.
+When the expert dim is sharded over a mesh axis, the scatter/gather at the
+buffer boundary lowers to the MoE all-to-all.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamInfo, activation, row_parallel_pet
+
+
+def moe_template(cfg):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff, m.n_experts
+    t = {
+        "router": ParamInfo((d, E), ("embed", "expert_unsharded"), "normal", 0.02),
+        "w_up": ParamInfo((E, d, f), ("expert", "embed", "expert_ffn")),
+        "w_down": ParamInfo((E, f, d), ("expert", "expert_ffn", "embed")),
+    }
+    if cfg.gated_mlp:
+        t["w_gate"] = ParamInfo((E, d, f), ("expert", "embed", "expert_ffn"))
+    return t
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(m.capacity_factor * n_tokens * m.top_k / m.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly layout
+
+
+def route(cfg, router_w, x_flat):
+    """x_flat:[T,D] -> gates [T,k], expert idx [T,k], aux loss, router probs."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x_flat, router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)             # [T,k]
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    T = x_flat.shape[0]
+    onehot_top1 = jax.nn.one_hot(idx[:, 0], m.n_experts, dtype=jnp.float32)
+    f_e = jnp.mean(onehot_top1, axis=0)
+    P_e = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(f_e * P_e)
+    return gates, idx, aux
+
+
+def dispatch_positions(cfg, idx, T: int) -> Tuple[jax.Array, jax.Array]:
+    """Position of each (token, choice) within its expert's capacity buffer.
+
+    GShard algorithm: process the k choices in priority order, cumsum the
+    one-hot assignment over tokens. Returns pos [T,k] and keep-mask [T,k].
+    """
+    m = cfg.moe
+    C = capacity(cfg, T)
+    counts = jnp.zeros((m.n_experts,), jnp.int32)
+    pos_list, keep_list = [], []
+    for j in range(m.top_k):
+        oh = jax.nn.one_hot(idx[:, j], m.n_experts, dtype=jnp.int32)  # [T,E]
+        pos_in_e = jnp.cumsum(oh, axis=0) - oh                         # 0-based
+        pos_j = jnp.sum(pos_in_e * oh, axis=-1) + counts[idx[:, j]]
+        keep_list.append(pos_j < C)
+        pos_list.append(jnp.minimum(pos_j, C - 1))
+        counts = counts + jnp.sum(oh, axis=0)
+    return jnp.stack(pos_list, 1), jnp.stack(keep_list, 1)
+
+
+def apply_moe(cfg, p, x, shard=None):
+    """x:[B,S,D] -> ([B,S,D], aux_loss).
+
+    `shard(buf, "moe_buf")` (perf knob) anchors the [E, C, D] dispatch
+    buffers — e.g. capacity-sharded over the model axis when the expert
+    count doesn't divide it (granite's E=40): expert FFNs then run
+    collective-free on C-shards instead of all-reducing every [E,C,D]
+    partial over a 32-wide d_ff sharding (EXPERIMENTS.md §Perf pair 3).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    gates, idx, aux = route(cfg, p["router"], xf)
+    pos, keep = dispatch_positions(cfg, idx, T)
+    C = capacity(cfg, T)
+    anchor = (lambda b: shard(b, "moe_buf")) if shard is not None else (lambda b: b)
+
+    # scatter tokens into the per-expert buffers [E, C, D]
+    buf = jnp.zeros((m.n_experts, C, D), x.dtype)
+    tok_rep = jnp.repeat(jnp.arange(T), m.top_k)
+    e_flat, p_flat = idx.reshape(-1), pos.reshape(-1)
+    k_flat = keep.reshape(-1)
+    # tokens dropped by capacity scatter to a dead slot (C-1 w/ zero weight
+    # would corrupt; instead scatter with mode drop via clipped index + zero data)
+    data = jnp.where(k_flat[:, None], xf[tok_rep], 0.0)
+    buf = buf.at[e_flat, p_flat].add(data.astype(x.dtype), mode="drop")
+    buf = anchor(buf)
+
+    # expert FFN over buffers
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        h = activation(cfg, g) * h
+    else:
+        h = activation(cfg, h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                         preferred_element_type=row_parallel_pet(x.dtype))
+    out_buf = anchor(out_buf)
+
+    # gather back and combine with gate weights.
+    # (A row-sharded anchor on `gathered` was tried and REFUTED: +11%
+    # collective — the data-dependent gather cannot be aligned statically,
+    # so the anchor only added a reshard. EXPERIMENTS.md §Perf pair 3 it 4.)
+    gathered = out_buf[e_flat, p_flat]                     # [T*k, D]
+    w = (gates.reshape(-1) * k_flat).astype(jnp.float32)
+    combined = jnp.zeros((T, D), jnp.float32).at[tok_rep].add(
+        gathered.astype(jnp.float32) * w[:, None])
+    return combined.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,31 @@
+"""Modality frontend STUBS (per assignment carve-out).
+
+We do not implement a ViT/SigLIP or an EnCodec conv codec; `input_specs()`
+supplies precomputed patch/frame embeddings of the right shape. This module
+provides (a) the deterministic synthetic embedding generator used by smoke
+tests / the CPU train driver, and (b) the learned projector that maps
+frontend embeddings into the decoder's d_model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamInfo
+
+
+def frontend_template(cfg):
+    f = cfg.frontend
+    return {"proj": ParamInfo((f.d_embed, cfg.d_model), (None, "embed"))}
+
+
+def project_prefix(params, prefix_embeds, dtype):
+    return jnp.einsum("bpe,ed->bpd", prefix_embeds.astype(dtype),
+                      params["proj"])
+
+
+def synth_prefix_embeds(rng, cfg, batch: int):
+    """Deterministic stand-in for SigLIP patches / EnCodec frames."""
+    f = cfg.frontend
+    return jax.random.normal(rng, (batch, f.n_prefix, f.d_embed),
+                             jnp.float32) * 0.02

@@ -1,0 +1,188 @@
+"""Mamba2 (SSD — state-space duality) block. arXiv:2405.21060.
+
+Chunked SSD forward (quadratic intra-chunk + linear inter-chunk recurrence),
+a single-token decode step with (conv, ssm) state, and the param template.
+
+Layout follows the reference Mamba2 block:
+  in_proj: d_model -> [z (d_in), x (d_in), B (G*N), C (G*N), dt (nh)]
+  causal depthwise conv(k) over [x, B, C]; silu
+  SSD with A = -exp(A_log) (per head), discretized per-token by dt
+  gated RMSNorm(y * silu(z)); out_proj: d_in -> d_model
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import unroll as U
+
+from repro.models.layers import ParamInfo, rms_norm_simple
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nh, conv_dim
+
+
+def mamba_template(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_dim = dims(cfg)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    return {
+        "in_proj": ParamInfo((d, proj_out), ("embed", "ssm_proj")),
+        "conv_w": ParamInfo((s.conv_kernel, conv_dim), (None, "ssm_conv"),
+                            "normal", 0.5),
+        "A_log": ParamInfo((nh,), ("ssm_head",), "zeros"),
+        "dt_bias": ParamInfo((nh,), ("ssm_head",), "zeros"),
+        "D": ParamInfo((nh,), ("ssm_head",), "ones"),
+        "gate_norm": ParamInfo((d_in,), ("ssm_inner",), "ones"),
+        "out_proj": ParamInfo((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_in, nh, _ = dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, x, B, C, dt
+
+
+def _conv_causal(xBC, conv_w):
+    """Depthwise causal conv over time. xBC:[B,S,Cd], conv_w:[K,Cd]."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD scan. x:[b,S,nh,hd] dt:[b,S,nh] A:[nh] B,C:[b,S,G,N].
+
+    Returns y:[b,S,nh,hd] and final state [b,nh,hd,N].
+    """
+    b, S, nh, hd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = nh // G
+    # head-broadcast B, C
+    Bh = jnp.repeat(B, rep, axis=2)        # [b,S,nh,N]
+    Ch = jnp.repeat(C, rep, axis=2)
+    # reshape into chunks
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = Bh.reshape(b, nc, chunk, nh, N)
+    Cc = Ch.reshape(b, nc, chunk, nh, N)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, inp):
+        # one chunk at a time: live memory O(b * chunk^2 * nh)
+        xq, dtq, Bq, Cq = inp                          # [b,q,nh,(hd|N)]
+        dA = dtq * A[None, None, :]                    # [b,q,nh] (negative)
+        dA_cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk (quadratic): L[i,j] = exp(dA_cum[i]-dA_cum[j]), i>=j
+        seg = dA_cum[:, :, None, :] - dA_cum[:, None, :, :]   # [b,i,j,nh]
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", Cq, Bq)
+        y_intra = jnp.einsum("bijh,bijh,bjh,bjhp->bihp",
+                             scores, L.astype(scores.dtype), dtq, xq)
+        # inter-chunk: contribution of the carried state
+        decay_from_start = jnp.exp(dA_cum)             # [b,q,nh]
+        y_inter = jnp.einsum("bqhn,bhpn,bqh->bqhp",
+                             Cq, state, decay_from_start)
+        # update carried state
+        decay_to_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)
+        cs = jnp.einsum("bqh,bqh,bqhn,bqhp->bhpn", decay_to_end, dtq, Bq, xq)
+        cd = jnp.exp(dA_cum[:, -1, :])
+        new_state = state * cd[:, :, None, None] + cs
+        return new_state, y_intra + y_inter
+
+    init = jnp.zeros((b, nh, hd, N), x.dtype)
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    final, ys = U.scan(step, init, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, S, nh, hd)
+    return y, final
+
+
+def apply_mamba(cfg, p, x, *, state=None, mode: str = "train"):
+    """x:[B,S,D]. mode train/prefill: chunked SSD (returns final state for
+    prefill). mode decode: S==1 single-step update using `state`."""
+    s = cfg.ssm
+    d_in, nh, conv_dim = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z, xs, B, C, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if mode == "decode":
+        assert state is not None
+        conv_st, ssm_st = state["conv"], state["ssm"]   # [B,K-1,Cd], [B,nh,hd,N]
+        xBC = jnp.concatenate([xs, B, C], axis=-1)      # [B,1,Cd]
+        window = jnp.concatenate([conv_st, xBC], axis=1)  # [B,K,Cd]
+        conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+        conv = jax.nn.silu(conv)[:, None, :]
+        xs2, B2, C2 = jnp.split(conv, [d_in, d_in + s.n_groups * s.d_state],
+                                axis=-1)
+        xh = xs2.reshape(xs2.shape[0], nh, s.head_dim)
+        rep = nh // s.n_groups
+        Bh = jnp.repeat(B2.reshape(B2.shape[0], s.n_groups, s.d_state), rep, 1)
+        Ch = jnp.repeat(C2.reshape(C2.shape[0], s.n_groups, s.d_state), rep, 1)
+        dt1 = dt[:, 0]                                   # [B,nh]
+        decay = jnp.exp(dt1 * A[None, :])                # [B,nh]
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dt1, Bh.astype(jnp.float32),
+                         xh.astype(jnp.float32))
+        ssm_new = ssm_st * decay[:, :, None, None] + upd.astype(ssm_st.dtype)
+        y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32),
+                       ssm_new.astype(jnp.float32))
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(y.shape[0], 1, d_in).astype(x.dtype)
+        y = rms_norm_simple(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                            p["gate_norm"])
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+        new_state = {"conv": window[:, 1:, :], "ssm": ssm_new}
+        return out, new_state
+
+    xBC = jnp.concatenate([xs, B, C], axis=-1)
+    conv = _conv_causal(xBC, p["conv_w"])
+    xs2, B2, C2 = jnp.split(conv, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    bsz, S = x.shape[0], x.shape[1]
+    xh = xs2.reshape(bsz, S, nh, s.head_dim)
+    Bg = B2.reshape(bsz, S, s.n_groups, s.d_state)
+    Cg = C2.reshape(bsz, S, s.n_groups, s.d_state)
+    y, final = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                           Bg.astype(jnp.float32), Cg.astype(jnp.float32),
+                           min(s.chunk, S))
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, S, d_in).astype(x.dtype)
+    y = rms_norm_simple(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                        p["gate_norm"])
+    from repro.models.layers import row_parallel_pet
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                     preferred_element_type=row_parallel_pet(x.dtype))
+    if mode == "prefill":
+        K = s.conv_kernel
+        xBC_tail = jnp.concatenate([xs, B, C], axis=-1)[:, -(K - 1):, :]
+        pad = K - 1 - min(K - 1, S)
+        if pad:
+            xBC_tail = jnp.pad(xBC_tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"conv": xBC_tail, "ssm": final.astype(x.dtype)}
+    return out, None
+
+
+def init_mamba_state(cfg, batch: int, dtype):
+    s = cfg.ssm
+    d_in, nh, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), dtype),
+    }

@@ -1,0 +1,371 @@
+"""Pattern-driven decoder stack assembly.
+
+The stack is `n_full_blocks` scanned copies of `cfg.pattern` (stacked
+weights, `lax.scan` over the block dim -> O(1) HLO size in depth) plus an
+unrolled tail for non-divisible depths. Every layer is a (mixer, ffn) pair;
+see configs.base for the pattern vocabulary.
+
+Entry points:
+  param_template(cfg) / init_params(rng, cfg)
+  forward(cfg, params, tokens, mode=...)          train / prefill / decode
+  loss_fn(cfg, params, batch)                     chunked-CE training loss
+  init_cache(cfg, batch, cache_size)              KV/SSM cache pytree
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import multimodal as mm_lib
+from repro.models import ssm as ssm_lib
+from repro.models import unroll as U
+from repro.models.layers import (
+    ParamInfo, apply_mlp, apply_norm, apply_rope, chunked_softmax_xent,
+    init_from_template, mlp_template, norm_template, rms_norm_simple,
+    stack_template,
+)
+
+Identity = lambda x, kind: x  # noqa: E731  (sharding-constraint hook default)
+
+# Decode cache-write strategy. "masked" (default) writes the new token via an
+# elementwise one-hot select — it PRESERVES a sequence-sharded cache layout
+# (a dynamic_update_slice at a traced index forces GSPMD to replicate the
+# cache: 2x ~1 GiB all-gathers per layer on decode_32k; see EXPERIMENTS.md
+# §Perf). "dus" keeps the classic dynamic_update_slice (in-place aliasing,
+# cheaper HBM on unsharded caches).
+_CACHE_WRITE = "masked"
+
+
+def set_cache_write(mode: str):
+    global _CACHE_WRITE
+    assert mode in ("masked", "dus")
+    _CACHE_WRITE = mode
+
+
+def _cache_write(cache_arr, new, idx):
+    """cache_arr:[B,S,kv,hd], new:[B,1,kv,hd], idx: scalar slot."""
+    if _CACHE_WRITE == "dus":
+        return jax.lax.dynamic_update_slice_in_dim(cache_arr, new, idx, axis=1)
+    S = cache_arr.shape[1]
+    onehot = (jnp.arange(S) == idx)[None, :, None, None]
+    return jnp.where(onehot, new.astype(cache_arr.dtype), cache_arr)
+
+
+def _pick_chunk(s: int, cap: int = 1024) -> int:
+    c = 1
+    while c < cap and s % (c * 2) == 0:
+        c *= 2
+    return min(c, s)
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+
+def attn_template(cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    t = {
+        "wq": ParamInfo((d, cfg.n_heads * hd), ("embed", "heads_x_dim")),
+        "wk": ParamInfo((d, cfg.n_kv_heads * hd), ("embed", "kv_x_dim")),
+        "wv": ParamInfo((d, cfg.n_kv_heads * hd), ("embed", "kv_x_dim")),
+        "wo": ParamInfo((cfg.n_heads * hd, d), ("heads_x_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        t["q_norm"] = ParamInfo((hd,), (None,), "ones")
+        t["k_norm"] = ParamInfo((hd,), (None,), "ones")
+    return t
+
+
+def layer_template(cfg, mixer: str, ffn: str):
+    t: Dict[str, Any] = {"norm1": norm_template(cfg)}
+    if mixer in ("attn", "swa"):
+        t["attn"] = attn_template(cfg)
+    elif mixer == "mamba":
+        t["mamba"] = ssm_lib.mamba_template(cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        t["norm2"] = norm_template(cfg)
+    if ffn == "dense":
+        t["mlp"] = mlp_template(cfg)
+    elif ffn == "moe":
+        t["moe"] = moe_lib.moe_template(cfg)
+    return t
+
+
+def block_template(cfg, pattern):
+    return {f"layer_{i}": layer_template(cfg, mx, fn)
+            for i, (mx, fn) in enumerate(pattern)}
+
+
+def param_template(cfg):
+    d = cfg.d_model
+    t: Dict[str, Any] = {
+        "embed": ParamInfo((cfg.vocab_size, d), ("vocab", "embed"),
+                           "normal", 0.02),
+        "final_norm": norm_template(cfg),
+    }
+    if cfg.n_full_blocks > 0:
+        t["blocks"] = stack_template(block_template(cfg, cfg.pattern),
+                                     cfg.n_full_blocks)
+    if cfg.tail_pattern:
+        t["tail"] = block_template(cfg, cfg.tail_pattern)
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamInfo((cfg.vocab_size, d), ("vocab", "embed"),
+                                 "normal", 0.02)
+    if cfg.frontend is not None:
+        t["frontend"] = mm_lib.frontend_template(cfg)
+    return t
+
+
+def init_params(rng, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    return init_from_template(rng, param_template(cfg), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg, mixer: str, batch: int, cache_size: int, dtype):
+    hd = cfg.resolved_head_dim
+    if mixer == "attn":
+        shape = (batch, cache_size, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if mixer == "swa":
+        w = min(cfg.sliding_window, cache_size)
+        shape = (batch, w, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if mixer == "mamba":
+        return ssm_lib.init_mamba_state(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+def init_cache(cfg, batch: int, cache_size: int, dtype=None):
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    cache: Dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    if cfg.n_full_blocks > 0:
+        one = {f"layer_{i}": _layer_cache(cfg, mx, batch, cache_size, dtype)
+               for i, (mx, _) in enumerate(cfg.pattern)}
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_full_blocks,) + x.shape).copy(), one)
+    if cfg.tail_pattern:
+        cache["tail"] = {f"layer_{i}": _layer_cache(cfg, mx, batch, cache_size, dtype)
+                         for i, (mx, _) in enumerate(cfg.tail_pattern)}
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer(cfg, p, x, *, mixer: str, mode: str, cache, positions, shard):
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    theta = cfg.rope_theta
+    if mixer == "swa" and cfg.rope_theta_local is not None:
+        theta = cfg.rope_theta_local
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, p["q_norm"])
+        k = rms_norm_simple(k, p["k_norm"])
+    q = apply_rope(q, positions, theta=theta, rot_frac=cfg.partial_rotary)
+    k = apply_rope(k, positions, theta=theta, rot_frac=cfg.partial_rotary)
+    q, k, v = shard(q, "qkv"), shard(k, "qkv"), shard(v, "qkv")
+    new_cache = cache
+
+    if mode == "decode":
+        plen = cache["len"] if isinstance(cache, dict) and "len" in cache else None
+        # cache handling: write this token's k/v, then attend
+        kc, vc, clen = cache["k"], cache["v"], cache["len"]
+        if mixer == "swa":
+            w = kc.shape[1]
+            slot = clen % w
+            kc = _cache_write(kc, k, slot)
+            vc = _cache_write(vc, v, slot)
+            out = attn_lib.attention_decode(q, kc, vc, clen + 1,
+                                            window=cfg.sliding_window,
+                                            shard=shard)
+        else:
+            kc = _cache_write(kc, k, clen)
+            vc = _cache_write(vc, v, clen)
+            out = attn_lib.attention_decode(q, kc, vc, clen + 1, shard=shard)
+        new_cache = {"k": kc, "v": vc, "len": clen}
+    else:
+        cq = _pick_chunk(S)
+        if mixer == "swa":
+            out = attn_lib.attention_banded(q, k, v, window=cfg.sliding_window,
+                                            chunk_q=cq)
+        else:
+            out = attn_lib.attention_causal(q, k, v, chunk_q=cq,
+                                            chunk_kv=_pick_chunk(S))
+        if mode == "prefill":
+            if mixer == "swa":
+                w = min(cfg.sliding_window, S)
+                klast, vlast = k[:, S - w:], v[:, S - w:]
+                if cfg.sliding_window <= S:
+                    shift = S % cfg.sliding_window
+                    klast = jnp.roll(klast, shift, axis=1)
+                    vlast = jnp.roll(vlast, shift, axis=1)
+                new_cache = {"k": klast, "v": vlast}
+            else:
+                new_cache = {"k": k, "v": v}
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    # row-parallel (heads sharded): see layers.set_native_partials
+    from repro.models.layers import row_parallel_pet
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"],
+                      preferred_element_type=row_parallel_pet(x.dtype)), new_cache
+
+
+def _apply_layer(cfg, p, x, *, mixer, ffn, mode, cache, positions, shard):
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm1"], x)
+    if mixer == "mamba":
+        mix_out, new_state = ssm_lib.apply_mamba(cfg, p["mamba"], h,
+                                                 state=cache, mode=mode)
+        new_cache = new_state if new_state is not None else cache
+    else:
+        mix_out, new_cache = _attn_layer(cfg, p["attn"], h, mixer=mixer,
+                                         mode=mode, cache=cache,
+                                         positions=positions, shard=shard)
+    x = x + mix_out
+    if ffn != "none":
+        h = apply_norm(cfg, p["norm2"], x)
+        if ffn == "dense":
+            x = x + apply_mlp(cfg, p["mlp"], h)
+        else:
+            mo, aux = moe_lib.apply_moe(cfg, p["moe"], h, shard=shard)
+            x = x + mo
+    return shard(x, "act"), new_cache, aux
+
+
+def _block_fn(cfg, pattern, mode, positions, shard):
+    """Returns f(x, block_params, block_cache) -> (x, new_cache, aux)."""
+    def f(x, bp, bc):
+        aux_total = jnp.zeros((), jnp.float32)
+        new_bc = {}
+        for i, (mixer, ffn) in enumerate(pattern):
+            key = f"layer_{i}"
+            layer_cache = None if bc is None else bc.get(key)
+            if layer_cache is not None and mode == "decode" and mixer != "mamba":
+                layer_cache = dict(layer_cache)
+                layer_cache["len"] = bc["_len"]
+            x, nc, aux = _apply_layer(
+                cfg, bp[key], x, mixer=mixer, ffn=ffn, mode=mode,
+                cache=layer_cache, positions=positions, shard=shard)
+            if nc is not None and mode in ("prefill", "decode"):
+                nc = dict(nc) if isinstance(nc, dict) else nc
+                if isinstance(nc, dict):
+                    nc.pop("len", None)
+                new_bc[key] = nc
+            aux_total = aux_total + aux
+        return x, (new_bc if new_bc else None), aux_total
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg, params, tokens, *, mode: str = "train",
+            cache=None, prefix_embeds=None, shard: Callable = Identity):
+    """Returns (hidden [B,S',D], new_cache, aux_loss).
+
+    mode="train": full causal pass, no cache.
+    mode="prefill": full pass, builds cache.
+    mode="decode": tokens is [B,1]; requires cache; S'=1.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if prefix_embeds is not None and mode != "decode":
+        pref = mm_lib.project_prefix(params["frontend"], prefix_embeds, dtype)
+        x = jnp.concatenate([pref, x], axis=1)
+    x = shard(x, "act")
+    B, S = x.shape[0], x.shape[1]
+
+    if mode == "decode":
+        positions = (cache["len"] + jnp.arange(S))[None, :]
+    else:
+        positions = jnp.arange(S)[None, :]
+    positions = jnp.broadcast_to(positions, (B, S))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    clen = None if cache is None else cache["len"]
+
+    # scanned full blocks
+    if cfg.n_full_blocks > 0:
+        bf = _block_fn(cfg, cfg.pattern, mode, positions, shard)
+
+        def scan_body(carry, xs):
+            xc, aux = carry
+            bp, bc = xs
+            if bc is not None and mode == "decode":
+                bc = dict(bc)
+                bc["_len"] = clen
+            xc, new_bc, a = bf(xc, bp, bc)
+            return (xc, aux + a), new_bc
+
+        if cfg.remat and mode == "train":
+            scan_body = jax.checkpoint(scan_body)
+        cache_blocks = None if cache is None else cache.get("blocks")
+        (x, aux_total), new_blocks = U.scan(
+            scan_body, (x, aux_total), (params["blocks"], cache_blocks))
+    else:
+        new_blocks = None
+
+    # unrolled tail
+    new_tail = None
+    if cfg.tail_pattern:
+        bf = _block_fn(cfg, cfg.tail_pattern, mode, positions, shard)
+        tc = None if cache is None else cache.get("tail")
+        if tc is not None and mode == "decode":
+            tc = dict(tc)
+            tc["_len"] = clen
+        x, new_tail, a = bf(x, params["tail"], tc)
+        aux_total = aux_total + a
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    x = shard(x, "act")
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"len": (clen + S) if clen is not None else jnp.asarray(S, jnp.int32)}
+        if new_blocks is not None:
+            new_cache["blocks"] = new_blocks
+        if new_tail is not None:
+            new_cache["tail"] = new_tail
+    return x, new_cache, aux_total
+
+
+def logits_head(cfg, params, hidden, shard: Callable = Identity):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", hidden, table).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return shard(logits, "logits")
+
+
+def loss_fn(cfg, params, batch, shard: Callable = Identity):
+    """batch: tokens [B,S], targets [B,S], optional prefix_embeds."""
+    hidden, _, aux = forward(cfg, params, batch["tokens"], mode="train",
+                             prefix_embeds=batch.get("prefix_embeds"),
+                             shard=shard)
+    S = batch["targets"].shape[1]
+    hidden = hidden[:, -S:]  # drop frontend prefix positions from the loss
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    ce = chunked_softmax_xent(hidden, table, batch["targets"],
+                              softcap=cfg.logit_softcap, shard=shard)
+    coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    return ce + coef * aux

@@ -1,0 +1,59 @@
+"""Loop-primitive wrappers with a global unroll switch.
+
+XLA's `cost_analysis()` counts while-loop bodies ONCE (not × trip count), so
+the dry-run sets `set_unroll(True)` to lower fully unrolled programs whose
+FLOP/byte counts are exact. Training/serving at runtime keeps rolled loops
+(compact HLO, fast compiles).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = False
+
+
+def set_unroll(value: bool):
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+def unrolling() -> bool:
+    return _UNROLL
+
+
+def scan(body, init, xs, length=None):
+    if not _UNROLL:
+        return jax.lax.scan(body, init, xs, length=length)
+    if xs is None:
+        n = length
+        slices = [None] * n
+    else:
+        n = jax.tree.leaves(xs)[0].shape[0]
+        slices = [jax.tree.map(lambda a: a[i], xs) for i in range(n)]
+    carry, ys = init, []
+    for s in slices:
+        carry, y = body(carry, s)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def fori_loop(lo, hi, body, init):
+    if not _UNROLL or not (isinstance(lo, int) and isinstance(hi, int)):
+        return jax.lax.fori_loop(lo, hi, body, init)
+    carry = init
+    for i in range(lo, hi):
+        carry = body(i, carry)
+    return carry
+
+
+def map_(f, xs):
+    if not _UNROLL:
+        return jax.lax.map(f, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    outs = [f(jax.tree.map(lambda a: a[i], xs)) for i in range(n)]
+    return jax.tree.map(lambda *a: jnp.stack(a), *outs)

@@ -1,0 +1,6 @@
+from repro.optim.sgd import SGDConfig, sgd_init, sgd_update  # noqa: F401
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant_lr, cosine_lr, step_decay_lr, warmup_cosine_lr,
+)
+from repro.optim.api import Optimizer, make_optimizer  # noqa: F401

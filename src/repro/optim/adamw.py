@@ -1,0 +1,50 @@
+"""AdamW (decoupled weight decay), fp32 accumulators by default."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: str = "float32"
+
+
+def adamw_init(cfg: AdamWConfig, params):
+    dt = jnp.dtype(cfg.state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, lr=None):
+    lr = cfg.lr if lr is None else lr
+    t = state["t"] + 1
+    bc1 = 1.0 - cfg.b1 ** t.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                m32.astype(m.dtype), v32.astype(v.dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(
+        flat_p, jax.tree.leaves(grads), jax.tree.leaves(state["m"]),
+        jax.tree.leaves(state["v"]))]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            {"m": jax.tree.unflatten(tdef, [o[1] for o in outs]),
+             "v": jax.tree.unflatten(tdef, [o[2] for o in outs]),
+             "t": t})

@@ -1,0 +1,37 @@
+"""LR schedules. The paper reuses the sequential baseline's schedule
+unchanged (step decay at 1/3 and 2/3 of training for ResNets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(base: float):
+    return lambda step: jnp.asarray(base, jnp.float32)
+
+
+def step_decay_lr(base: float, total_steps: int, milestones=(1 / 3, 2 / 3),
+                  factor: float = 0.1):
+    ms = jnp.asarray([m * total_steps for m in milestones])
+
+    def fn(step):
+        k = jnp.sum(step >= ms)
+        return base * factor ** k.astype(jnp.float32)
+    return fn
+
+
+def cosine_lr(base: float, total_steps: int, final_frac: float = 0.0):
+    def fn(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base * (final_frac + (1 - final_frac) * c)
+    return fn
+
+
+def warmup_cosine_lr(base: float, total_steps: int, warmup: int = 100,
+                     final_frac: float = 0.0):
+    cos = cosine_lr(base, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        return jnp.where(step < warmup, base * w, cos(step - warmup))
+    return fn

@@ -1,0 +1,58 @@
+"""SGD with (Nesterov) momentum and decoupled weight decay.
+
+This is the optimizer of the paper's experiments (momentum SGD with the
+sequential baseline's schedule, §5). The fused param/momentum update is a
+memory-bound hot-spot; `repro.kernels.sgd_update` provides the Pallas TPU
+kernel, and this module is the pure-jnp reference path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.1
+    momentum: float = 0.9
+    nesterov: bool = False
+    weight_decay: float = 0.0
+    state_dtype: str = "float32"
+
+
+def sgd_init(cfg: SGDConfig, params):
+    dt = jnp.dtype(cfg.state_dtype)
+    if cfg.momentum == 0.0:
+        return {}
+    return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)}
+
+
+def sgd_update(cfg: SGDConfig, params, grads, state, lr=None):
+    lr = cfg.lr if lr is None else lr
+
+    def upd(p, g, m):
+        g = g.astype(jnp.float32)
+        if cfg.weight_decay:
+            g = g + cfg.weight_decay * p.astype(jnp.float32)
+        if m is None:
+            step = g
+            new_m = None
+        else:
+            new_m = cfg.momentum * m.astype(jnp.float32) + g
+            step = g + cfg.momentum * new_m if cfg.nesterov else new_m
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, new_m
+
+    if not state:
+        new = jax.tree.map(lambda p, g: upd(p, g, None)[0], params, grads)
+        return new, {}
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    outs = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    dt = jnp.dtype(cfg.state_dtype)
+    new_m = jax.tree.unflatten(tdef, [o[1].astype(dt) for o in outs])
+    return new_p, {"m": new_m}

@@ -1,0 +1,4 @@
+from repro.quant.schemes import (  # noqa: F401
+    ModularQuantConfig, decode_modular, encode_modular, payload_bytes,
+    quantized_pair_average,
+)

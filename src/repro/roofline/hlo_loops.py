@@ -1,0 +1,146 @@
+"""While-loop-aware collective-byte accounting over optimized HLO text.
+
+XLA HLO text lists one computation per block; while-ops reference their
+condition/body computations. Collectives inside a while body execute
+trip-count times but appear once in the text, so a naive byte sum
+undercounts (e.g. the tensor-parallel all-reduces inside the scanned layer
+stack). We reconstruct the computation call graph, extract trip counts from
+the condition computations' integer constants, and multiply.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\)\s*->", re.M)
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_CALLEE_RE = re.compile(
+    r"(?:condition|body|to_apply|calls|branch_computations)=\{?(%[\w\.\-]+)"
+    r"((?:,\s*%[\w\.\-]+)*)\}?")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=(%[\w\.\-]+), body=(%[\w\.\-]+)")
+_CONST_RE = re.compile(r"=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(txt: str) -> Dict[str, str]:
+    comps: Dict[str, str] = {}
+    matches = list(_COMP_HDR.finditer(txt))
+    for i, m in enumerate(matches):
+        end = matches[i + 1].start() if i + 1 < len(matches) else len(txt)
+        comps[m.group(1)] = txt[m.start():end]
+    entry = None
+    for m in matches:
+        if "ENTRY" in txt[max(0, m.start() - 7):m.start() + 6] or \
+                txt[m.start():m.start() + 5] == "ENTRY":
+            entry = m.group(1)
+    if entry is None and matches:
+        entry = matches[-1].group(1)  # ENTRY is usually last
+    comps["__entry__"] = comps.get(entry, "")
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    consts = [c for c in consts if 1 <= c <= 1_000_000]
+    return max(consts) if consts else 1
+
+
+def top_collectives(txt: str, k: int = 12) -> List[Tuple[str, str, int]]:
+    """Largest collective instructions: (kind, result type, bytes) —
+    the profile used by the §Perf iterations to pick targets."""
+    out = []
+    for m in _COLL_RE.finditer(txt):
+        out.append((m.group(2), m.group(1)[:60], _shape_bytes(m.group(1))))
+    out.sort(key=lambda t: -t[2])
+    return out[:k]
+
+
+def collective_bytes_corrected(txt: str) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """Returns (raw_bytes_by_kind, loop_corrected_bytes_by_kind)."""
+    comps = _split_computations(txt)
+    entry_name = None
+    m = re.search(r"ENTRY\s+(%[\w\.\-]+)", txt)
+    if m:
+        entry_name = m.group(1)
+    if entry_name is None or entry_name not in comps:
+        entry_name = "__entry__"
+
+    def comp_collectives(body: str) -> List[Tuple[str, int, int]]:
+        out = []
+        for cm in _COLL_RE.finditer(body):
+            if cm.group(3):  # "-start": its "-done" twin carries no shape
+                pass
+            b = _shape_bytes(cm.group(1))
+            # f32 share: the CPU XLA backend upcasts bf16 dots to f32, so
+            # f32 collective bytes overstate a bf16 model's TPU traffic 2x
+            # (EXPERIMENTS.md §Method); track separately for adjustment.
+            f32b = _shape_bytes(" ".join(
+                s for s in re.findall(r"f32\[[0-9,]*\]", cm.group(1))))
+            kind = cm.group(2)
+            if kind == "all-reduce":
+                b *= 2
+                f32b *= 2
+            out.append((kind, b, f32b))
+        return out
+
+    raw: Dict[str, int] = {}
+    for name, body in comps.items():
+        if name == "__entry__" and entry_name != "__entry__":
+            continue
+        for kind, b, _f in comp_collectives(body):
+            raw[kind] = raw.get(kind, 0) + b
+
+    corrected: Dict[str, int] = {}
+    corrected_f32: Dict[str, int] = {"total": 0}
+    seen_stack = set()
+
+    def walk(name: str, mult: int):
+        if name not in comps or name in seen_stack:
+            return
+        seen_stack.add(name)
+        body = comps[name]
+        for kind, b, f32b in comp_collectives(body):
+            corrected[kind] = corrected.get(kind, 0) + b * mult
+            corrected_f32["total"] += f32b * mult
+        # while loops: recurse into body with trip multiplier
+        for wm in _WHILE_RE.finditer(body):
+            cond, wbody = wm.group(1), wm.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            walk(wbody, mult * trips)
+        # other calls (fusion/call/to_apply/conditional): multiplier 1
+        for cm in _CALLEE_RE.finditer(body):
+            if "condition=" in cm.group(0) or "body=" in cm.group(0):
+                continue
+            names = [cm.group(1)] + re.findall(r"%[\w\.\-]+", cm.group(2) or "")
+            for cn in names:
+                walk(cn, mult)
+        seen_stack.discard(name)
+
+    walk(entry_name, 1)
+    if not corrected:
+        corrected = dict(raw)
+    corrected = dict(corrected)
+    corrected["_f32_share"] = corrected_f32["total"]
+    return raw, corrected

@@ -1,0 +1,95 @@
+"""Build the EXPERIMENTS.md roofline/dry-run tables from results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.roofline.table [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}µs"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def build_tables(rows):
+    # reuse single-pod unrolled flops for multi rows that used analytic mode
+    unrolled = {(r.get("arch"), r.get("shape")): r for r in rows
+                if r.get("mesh") == "single" and r.get("flops_per_dev")}
+    ok = [r for r in rows if "error" not in r and "skipped" not in r]
+    skipped = [r for r in rows if "skipped" in r]
+    failed = [r for r in rows if "error" in r]
+
+    for r in ok:
+        if r["mesh"] == "multi":
+            s = unrolled.get((r["arch"], r["shape"]))
+            if s and s.get("flops_per_dev") and s.get("t_unroll_lower_s"):
+                # global flops identical; rescale by device count
+                g = s["flops_per_dev"] * s["n_devices"]
+                r["flops_per_dev"] = g / r["n_devices"]
+                r["compute_s"] = r["flops_per_dev"] / 197e12
+                terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                         "collective": r["collective_s"]}
+                r["bottleneck"] = max(terms, key=terms.get)
+
+    lines = ["| arch | shape | mesh | compute | memory | collective | "
+             "bottleneck | model/HLO flops | args GiB | compile s |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(ok, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        ur = r.get("useful_ratio")
+        if r.get("model_flops_per_dev") and r.get("flops_per_dev"):
+            ur = r["model_flops_per_dev"] / r["flops_per_dev"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['bottleneck']}** | "
+            f"{ur:.2f} | {fmt_bytes(r['argument_bytes'])} | "
+            f"{r['t_compile_s']} |")
+    table = "\n".join(lines)
+
+    sk = "\n".join(f"* {r['arch']} × {r['shape']} ({r.get('mesh','both')}): "
+                   f"{r['skipped']}" for r in skipped)
+    fl = "\n".join(f"* {r['arch']} × {r['shape']} × {r.get('mesh')}: "
+                   f"`{r['error'][:200]}`" for r in failed)
+    return table, sk, fl, ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    table, sk, fl, ok = build_tables(load(args.dir))
+    print(table)
+    if sk:
+        print("\nSkipped (documented):\n" + sk)
+    if fl:
+        print("\nFAILED:\n" + fl)
+    print(f"\n{len(ok)} combinations lowered+compiled OK.")
+
+
+if __name__ == "__main__":
+    main()

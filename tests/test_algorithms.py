@@ -1,0 +1,90 @@
+"""Baseline algorithms: each converges on the tiny regression task and has
+the expected consensus semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import make_algorithm
+from repro.algorithms.dpsgd import metropolis_weights
+from repro.algorithms.sgp import sgp_init_prev
+from repro.core import SwarmConfig, make_graph, sample_matching, swarm_init
+from repro.core.swarm import SwarmState
+from repro.optim import make_optimizer
+
+N = 8
+
+
+def tiny_init(rng):
+    k1, k2 = jax.random.split(rng)
+    return {"w1": jax.random.normal(k1, (6, 16)) * 0.3,
+            "w2": jax.random.normal(k2, (16, 1)) * 0.3}
+
+
+def tiny_loss(p, mb):
+    x, y = mb
+    return jnp.mean((jnp.tanh(x @ p["w1"]) @ p["w2"] - y) ** 2)
+
+
+def run_algo(name, steps=60, H=2):
+    g = make_graph("complete", N)
+    opt = make_optimizer("sgd", lr=0.05, momentum=0.0)
+    kw = dict(loss_fn=tiny_loss, opt_update=opt.update,
+              lr_fn=lambda s: 0.05, n_nodes=N)
+    if name == "localsgd":
+        kw["H"] = H
+    if name == "dpsgd":
+        kw["graph"] = g
+    step = jax.jit(make_algorithm(name, **kw))
+    scfg = SwarmConfig(n_nodes=N, H=H)
+    state = swarm_init(jax.random.PRNGKey(0), scfg, tiny_init, opt.init)
+    if name == "sgp":
+        state = SwarmState(state.params, state.opt, sgp_init_prev(N),
+                           state.step)
+    rng_np = np.random.default_rng(0)
+    losses = gammas = None
+    hist = []
+    for t in range(steps):
+        r = np.random.default_rng(t)
+        x = jnp.asarray(r.normal(size=(N, H, 8, 6)).astype(np.float32))
+        y = (x.sum(-1, keepdims=True) > 0).astype(jnp.float32)
+        perm = jnp.asarray(sample_matching(g, rng_np))
+        h = jnp.full((N,), H, jnp.int32)
+        state, m = step(state, (x, y), perm, h, jax.random.PRNGKey(t))
+        hist.append((float(m["loss"]), float(m.get("gamma", 0.0))))
+    return state, hist
+
+
+@pytest.mark.parametrize("algo", ["allreduce", "localsgd", "dpsgd", "adpsgd",
+                                  "sgp"])
+def test_baseline_converges(algo):
+    state, hist = run_algo(algo)
+    losses = [h[0] for h in hist]
+    assert np.mean(losses[-10:]) < 0.75 * np.mean(losses[:10]), algo
+
+
+def test_allreduce_keeps_nodes_identical():
+    state, hist = run_algo("allreduce")
+    gammas = [h[1] for h in hist]
+    assert max(gammas) < 1e-6  # consensus every step
+
+
+def test_localsgd_resyncs_every_superstep():
+    state, _ = run_algo("localsgd")
+    w = np.asarray(state.params["w1"])
+    assert np.abs(w - w[0:1]).max() < 1e-6
+
+
+def test_metropolis_weights_doubly_stochastic():
+    g = make_graph("random_regular", 16, r=4)
+    W = metropolis_weights(g)
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-9)
+    assert (W >= 0).all()
+
+
+def test_sgp_weights_stay_normalized():
+    state, _ = run_algo("sgp", steps=20)
+    w = np.asarray(state.prev["w"])
+    np.testing.assert_allclose(w.mean(), 1.0, atol=1e-5)  # push-sum invariant
+    assert (w > 0).all()

@@ -1,0 +1,42 @@
+"""Mean-model evaluation (paper §5's 'real average' check) + hierarchical
+pod-aware graph."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import hierarchical, make_graph
+from repro.core.swarm import make_mean_model_eval
+
+
+def test_hierarchical_graph_regular_and_connected():
+    g = hierarchical(32, n_clusters=2)
+    assert g.n == 32
+    assert g.lambda2 > 0  # connected
+    # complete graph on 32 has lambda2=32; hierarchical mixes slower
+    assert g.lambda2 < 32
+    gk = make_graph("hierarchical", 32)
+    assert gk.lambda2 > 0
+
+
+def test_hierarchical_worse_mixing_than_complete():
+    comp = make_graph("complete", 32)
+    hier = hierarchical(32, n_clusters=4)
+    # the paper's r^2/lambda2^2 factor: hierarchical pays a mixing penalty
+    assert (hier.r / hier.lambda2) > (comp.r / comp.lambda2) * 0.999
+
+
+def test_mean_model_eval():
+    def loss(p, b):
+        return jnp.mean((b @ p["w"]) ** 2)
+
+    rng = np.random.default_rng(0)
+    # nodes scattered around a common center: mean model should be closest
+    # to the (zero-loss) center
+    center = np.zeros((6, 1))
+    params = {"w": jnp.asarray(center[None] +
+                               rng.normal(size=(8, 6, 1)) * 0.5, jnp.float32)}
+    batch = jnp.asarray(rng.normal(size=(16, 6)), jnp.float32)
+    ev = make_mean_model_eval(loss)
+    m = ev(params, batch)
+    assert float(m["loss_mean_model"]) <= float(m["loss_node_mean"]) + 1e-6
+    assert float(m["loss_node_worst"]) >= float(m["loss_node_mean"]) - 1e-6

@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import make_graph, sample_matching
+from repro.core.potential import gamma_potential, mean_model
+from repro.core.swarm import gossip_exact
+from repro.models.layers import apply_rope, chunked_softmax_xent
+from repro.models.moe import capacity, dispatch_positions
+from repro.quant import ModularQuantConfig, decode_modular, encode_modular
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]), d=st.integers(2, 64),
+       seed=st.integers(0, 10_000))
+def test_gossip_mean_invariant_and_gamma_contraction(n, d, seed):
+    """Any matching average preserves μ and never increases Γ."""
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(n, d)), jnp.float32)}
+    g = make_graph("complete", n)
+    perm = jnp.asarray(sample_matching(g, rng))
+    matched = perm != jnp.arange(n)
+    out = gossip_exact(params, perm, matched)
+    np.testing.assert_allclose(np.asarray(mean_model(out)["w"]),
+                               np.asarray(mean_model(params)["w"]),
+                               atol=1e-5)
+    assert float(gamma_potential(out)) <= float(gamma_potential(params)) + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), dist=st.floats(1e-5, 1e-1),
+       block=st.sampled_from([32, 64, 256]))
+def test_quant_error_scales_with_distance(seed, dist, block):
+    cfg = ModularQuantConfig(block=block, safety=8.0)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(block * 4,)), jnp.float32)
+    ref = x + jnp.asarray(rng.uniform(-dist, dist, size=x.shape), jnp.float32)
+    q, s = encode_modular(cfg, x, ref, jax.random.PRNGKey(seed))
+    err = float(jnp.max(jnp.abs(decode_modular(cfg, q, s, ref) - x)))
+    assert err <= dist * 8.0 / 128 * 1.001 + 1e-7
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(8, 200), e=st.sampled_from([4, 8]),
+       k=st.sampled_from([1, 2]), seed=st.integers(0, 1000))
+def test_moe_dispatch_no_slot_collisions(t, e, k, seed):
+    """No two kept (token, choice) pairs share an (expert, slot)."""
+    from repro.configs import get_config, reduced
+    import dataclasses
+    cfg = reduced(get_config("qwen3-moe-30b-a3b"))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=e, top_k=k))
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(
+        np.stack([rng.choice(e, size=k, replace=False) for _ in range(t)]),
+        jnp.int32)
+    pos, keep = dispatch_positions(cfg, idx, t)
+    C = capacity(cfg, t)
+    assert int(pos.max()) < C
+    slots = set()
+    for ti in range(t):
+        for j in range(k):
+            if bool(keep[ti, j]):
+                key = (int(idx[ti, j]), int(pos[ti, j]))
+                assert key not in slots
+                slots.add(key)
+
+
+@settings(max_examples=10, deadline=None)
+@given(v=st.sampled_from([97, 512, 1000]), chunk=st.sampled_from([64, 256]),
+       seed=st.integers(0, 1000))
+def test_chunked_ce_matches_dense(v, chunk, seed):
+    rng = np.random.default_rng(seed)
+    B, S, D = 2, 8, 16
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    emb = jnp.asarray(rng.normal(size=(v, D)), jnp.float32)
+    tgt = jnp.asarray(rng.integers(0, v, size=(B, S)), jnp.int32)
+    got = float(chunked_softmax_xent(x, emb, tgt, chunk=chunk))
+    logits = x @ emb.T
+    want = float(jnp.mean(jax.nn.logsumexp(logits, -1) -
+                          jnp.take_along_axis(logits, tgt[..., None], -1)[..., 0]))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), theta=st.sampled_from([1e4, 1e6]),
+       frac=st.sampled_from([0.5, 1.0]))
+def test_rope_preserves_norm_and_relativity(seed, theta, frac):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 6, 2, 32)), jnp.float32)
+    pos = jnp.arange(6)[None, :]
+    y = apply_rope(x, pos, theta=theta, rot_frac=frac)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+    # relative property: <R_m q, R_n k> depends only on m - n
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+    def dot(m, n):
+        qm = apply_rope(q, jnp.asarray([[m]]), theta=theta, rot_frac=frac)
+        kn = apply_rope(k, jnp.asarray([[n]]), theta=theta, rot_frac=frac)
+        return float(jnp.sum(qm * kn))
+    np.testing.assert_allclose(dot(3, 1), dot(7, 5), rtol=1e-3, atol=1e-4)

@@ -1,0 +1,64 @@
+"""Modular (lattice-style) quantization: unbiasedness, distance-bounded
+error, wire format, and the Γ-dependence the paper's Extension 3 needs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant import (ModularQuantConfig, decode_modular, encode_modular,
+                         payload_bytes, quantized_pair_average)
+
+
+def test_roundtrip_error_bounded_by_distance():
+    cfg = ModularQuantConfig(bits=8, block=64, safety=8.0)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
+    for dist in [1e-4, 1e-3, 1e-2, 1e-1]:
+        ref = x + jnp.asarray(rng.normal(size=(512,)) * dist, jnp.float32)
+        q, s = encode_modular(cfg, x, ref, jax.random.PRNGKey(0))
+        x_hat = decode_modular(cfg, q, s, ref)
+        err = float(jnp.max(jnp.abs(x_hat - x)))
+        # error <= scale = safety*max|x-ref|/128 per block
+        assert err <= float(jnp.max(s)) + 1e-7
+        assert err <= dist * 4 * 8.0 / 128 + 1e-6  # ~4 sigma envelope
+
+
+def test_unbiased_stochastic_rounding():
+    cfg = ModularQuantConfig(bits=8, block=32, resolution=0.01)
+    x = jnp.full((32,), 0.5034, jnp.float32)
+    ref = jnp.full((32,), 0.5, jnp.float32)
+    vals = []
+    for i in range(400):
+        q, s = encode_modular(cfg, x, ref, jax.random.PRNGKey(i))
+        vals.append(np.asarray(decode_modular(cfg, q, s, ref)))
+    mean = np.mean(vals)
+    assert abs(mean - 0.5034) < 5e-4  # E[decode] == x
+
+
+def test_decode_fails_gracefully_beyond_distance_criterion():
+    """|x-y| >= 2^(bits-1)*s wraps — the paper's failure event."""
+    cfg = ModularQuantConfig(bits=8, block=32, resolution=0.001)
+    x = jnp.full((32,), 1.0, jnp.float32)
+    y = jnp.zeros((32,), jnp.float32)   # distance 1.0 >> 128*0.001
+    q, s = encode_modular(cfg, x, y, jax.random.PRNGKey(0))
+    x_hat = decode_modular(cfg, q, s, y)
+    assert float(jnp.max(jnp.abs(x_hat - x))) > 0.1  # wrapped, not silent
+
+
+def test_payload_is_8bit_per_coordinate():
+    cfg = ModularQuantConfig(bits=8, block=256)
+    assert payload_bytes(cfg, 1 << 20) == (1 << 20) + 4096 * 4
+    x = jnp.zeros((1000,))
+    q, s = encode_modular(cfg, x, x, jax.random.PRNGKey(0))
+    assert q.dtype == jnp.uint8
+
+
+def test_pair_average_close_models():
+    cfg = ModularQuantConfig(bits=8, block=64, safety=8.0)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    y = x + jnp.asarray(rng.normal(size=(256,)) * 1e-3, jnp.float32)
+    q, s = encode_modular(cfg, y, x, jax.random.PRNGKey(0))
+    avg = quantized_pair_average(cfg, x, q, s)
+    np.testing.assert_allclose(np.asarray(avg), np.asarray((x + y) / 2),
+                               atol=1e-4)

@@ -1,0 +1,108 @@
+"""Unit tests for the roofline toolchain: HLO collective parsing with
+while-loop trip multipliers, and the analytic FLOP/byte models."""
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.roofline.analytic import (kv_cache_bytes, serve_bytes, serve_flops,
+                                     train_bytes_full, train_flops)
+from repro.roofline.hlo_loops import (_shape_bytes, _trip_count,
+                                      collective_bytes_corrected,
+                                      top_collectives)
+
+FAKE_HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %x = f32[128,256]{1,0} all-reduce(%y), replica_groups={}, to_apply=%add.0
+  ROOT %t = (s32[], f32[128,256]) tuple(%i, %x)
+}
+
+%cond.1 (p: (s32[], f32[128,256])) -> pred[] {
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %g = bf16[64,64]{1,0} all-gather(%a2), replica_groups={}, dimensions={0}
+  %w = (s32[], f32[128,256]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _shape_bytes("bf16[10,10]") == 200
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+def test_trip_count_extraction():
+    assert _trip_count("%c = s32[] constant(10)\ncompare") == 10
+    assert _trip_count("no constants here") == 1
+
+
+def test_loop_multiplier_applied():
+    raw, corr = collective_bytes_corrected(FAKE_HLO)
+    ar = 128 * 256 * 4 * 2  # x2 ring factor
+    ag = 64 * 64 * 2
+    assert raw["all-reduce"] == ar
+    assert raw["all-gather"] == ag
+    corr = dict(corr)
+    corr.pop("_f32_share", None)
+    assert corr["all-reduce"] == ar * 10  # inside while body, 10 trips
+    assert corr["all-gather"] == ag      # entry-level: x1
+
+
+def test_top_collectives_sorted():
+    tops = top_collectives(FAKE_HLO)
+    assert tops[0][0] == "all-reduce"
+    assert tops[0][2] >= tops[-1][2]
+
+
+# --- analytic models -------------------------------------------------------
+
+
+def test_train_flops_scales_with_tokens():
+    cfg = get_config("olmo-1b")
+    s = INPUT_SHAPES["train_4k"]
+    f = train_flops(cfg, s)
+    # >= the 6NT floor, <= ~2x of it (remat + attention + CE)
+    floor = 6.0 * cfg.n_active_params() * s.global_batch * s.seq_len
+    assert floor <= f <= 2.5 * floor
+
+
+def test_moe_active_vs_total_flops():
+    moe = get_config("qwen3-moe-30b-a3b")
+    s = INPUT_SHAPES["train_4k"]
+    f = train_flops(moe, s)
+    dense_equiv = 6.0 * moe.n_params() * s.global_batch * s.seq_len
+    assert f < 0.5 * dense_equiv  # top-8/128 computes far less than dense
+
+
+def test_decode_bytes_dominated_by_params_plus_kv():
+    cfg = get_config("gemma3-27b")
+    s = INPUT_SHAPES["decode_32k"]
+    b = serve_bytes(cfg, s)
+    params = cfg.n_params() * 2
+    assert params <= b <= params + 2.5 * kv_cache_bytes(cfg, s)
+
+
+def test_swa_kv_cache_smaller_than_global():
+    g4 = get_config("gemma3-4b")       # 5:1 swa:global, window 1024
+    olmo = get_config("olmo-1b")       # all global
+    s = INPUT_SHAPES["decode_32k"]
+    per_layer_g4 = kv_cache_bytes(g4, s) / g4.n_layers
+    per_layer_olmo = kv_cache_bytes(olmo, s) / olmo.n_layers
+    # normalize by kv width
+    g4n = per_layer_g4 / (g4.n_kv_heads * g4.resolved_head_dim)
+    olmon = per_layer_olmo / (olmo.n_kv_heads * olmo.resolved_head_dim)
+    assert g4n < 0.3 * olmon
+
+
+def test_train_bytes_include_optimizer_traffic():
+    cfg = get_config("olmo-1b")
+    s = INPUT_SHAPES["train_4k"]
+    b = train_bytes_full(cfg, s, n_nodes=16, H=2)
+    min_param_traffic = 16 * 2 * cfg.n_params() * 2  # nodes x H x P(bf16)
+    assert b > min_param_traffic

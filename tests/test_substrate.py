@@ -1,0 +1,185 @@
+"""Substrate layers: optimizers, data pipeline, checkpointing, attention
+paths, SSD vs sequential recurrence oracle."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.data import DataConfig, SyntheticLMDataset, make_node_batches
+from repro.models.attention import (attention_banded, attention_causal,
+                                    attention_decode)
+from repro.models.ssm import ssd_chunked
+from repro.optim import make_optimizer
+from repro.optim.schedules import cosine_lr, step_decay_lr, warmup_cosine_lr
+
+
+# --- optimizers -----------------------------------------------------------
+
+def test_sgd_momentum_matches_manual():
+    opt = make_optimizer("sgd", lr=0.1, momentum=0.9, weight_decay=0.01)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 2.0)}
+    s = opt.init(p)
+    p1, s1 = opt.update(p, g, s)
+    gw = 2.0 + 0.01 * 1.0
+    np.testing.assert_allclose(np.asarray(p1["w"]), 1.0 - 0.1 * gw, rtol=1e-6)
+    p2, s2 = opt.update(p1, g, s1)
+    m2 = 0.9 * gw + (2.0 + 0.01 * float(p1["w"][0]))
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               np.asarray(p1["w"]) - 0.1 * m2, rtol=1e-5)
+
+
+def test_adamw_reduces_quadratic():
+    opt = make_optimizer("adamw", lr=0.1)
+    p = {"w": jnp.full((8,), 5.0)}
+    s = opt.init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, s = opt.update(p, g, s)
+    assert float(jnp.abs(p["w"]).max()) < 0.5
+
+
+def test_schedules():
+    f = step_decay_lr(1.0, 90)
+    assert float(f(0)) == 1.0 and abs(float(f(40)) - 0.1) < 1e-6 \
+        and abs(float(f(80)) - 0.01) < 1e-6
+    c = cosine_lr(1.0, 100)
+    assert float(c(0)) == pytest.approx(1.0) and float(c(100)) == pytest.approx(0.0, abs=1e-6)
+    w = warmup_cosine_lr(1.0, 100, warmup=10)
+    assert float(w(5)) == pytest.approx(0.5)
+
+
+# --- data -----------------------------------------------------------------
+
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=128, seq_len=32, seed=7)
+    ds = SyntheticLMDataset(cfg, n_nodes=4)
+    a = ds.batch(0, 3, 8)
+    b = ds.batch(0, 3, 8)
+    np.testing.assert_array_equal(a, b)          # deterministic
+    c = ds.batch(1, 3, 8)
+    assert not np.array_equal(a, c)              # per-node shards differ
+    nb = make_node_batches(ds, 0, 8)
+    assert nb["tokens"].shape == (4, 8, 32)
+    np.testing.assert_array_equal(nb["tokens"][:, :, 1:],
+                                  nb["targets"][:, :, :-1])
+
+
+def test_data_noniid_skew():
+    iid = SyntheticLMDataset(DataConfig(64, 16, non_iid_alpha=None), 8)
+    skew = SyntheticLMDataset(DataConfig(64, 16, non_iid_alpha=0.1), 8)
+    assert np.abs(iid.mix - 1 / 8).max() < 1e-9
+    assert skew.mix.max() > 0.5  # strongly skewed mixtures
+
+
+# --- checkpoint -----------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, tree, {"step": 42})
+    out = load_checkpoint(path, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["b"]["c"].dtype == jnp.bfloat16
+    from repro.checkpoint.checkpoint import load_metadata
+    assert load_metadata(path)["step"] == 42
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "ck2")
+    save_checkpoint(path, {"a": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(path, {"a": jnp.ones((4,))})
+
+
+# --- attention ------------------------------------------------------------
+
+def _ref_attention(q, k, v, window=None):
+    B, S, H, hd = q.shape
+    kf = jnp.repeat(k, H // k.shape[2], axis=2)
+    vf = jnp.repeat(v, H // v.shape[2], axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kf) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    if window:
+        i = jnp.arange(S)
+        mask = mask & (i[:, None] - i[None, :] < window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+@pytest.mark.parametrize("S,H,KVH,chunk", [(64, 4, 2, 16), (128, 2, 1, 32)])
+def test_attention_causal_matches_dense(S, H, KVH, chunk):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, S, H, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, S, KVH, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, S, KVH, 16)), jnp.float32)
+    out = attention_causal(q, k, v, chunk_kv=chunk, chunk_q=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_ref_attention(q, k, v)),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("S,W,chunk", [(128, 16, 32), (256, 32, 64)])
+def test_attention_banded_matches_windowed_dense(S, W, chunk):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, S, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, S, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, S, 2, 8)), jnp.float32)
+    out = attention_banded(q, k, v, window=W, chunk_q=chunk)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(_ref_attention(q, k, v, window=W)),
+                               atol=2e-5)
+
+
+def test_attention_decode_matches_last_position():
+    rng = np.random.default_rng(2)
+    S = 33
+    q = jnp.asarray(rng.normal(size=(2, S, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, S, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, S, 2, 8)), jnp.float32)
+    full = _ref_attention(q, k, v)
+    cache_k = jnp.zeros((2, 64, 2, 8)).at[:, :S].set(k)
+    cache_v = jnp.zeros((2, 64, 2, 8)).at[:, :S].set(v)
+    out = attention_decode(q[:, -1:], cache_k, cache_v,
+                           jnp.asarray(S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5)
+
+
+# --- SSD ------------------------------------------------------------------
+
+def _ssd_sequential(x, dt, A, B, C):
+    """Token-by-token linear recurrence oracle."""
+    b, S, nh, hd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = nh // G
+    Bh = np.repeat(np.asarray(B), rep, axis=2)
+    Ch = np.repeat(np.asarray(C), rep, axis=2)
+    xn, dtn, An = np.asarray(x), np.asarray(dt), np.asarray(A)
+    state = np.zeros((b, nh, hd, N))
+    ys = np.zeros((b, S, nh, hd))
+    for t in range(S):
+        decay = np.exp(dtn[:, t] * An[None, :])            # [b,nh]
+        upd = np.einsum("bh,bhn,bhp->bhpn", dtn[:, t], Bh[:, t], xn[:, t])
+        state = state * decay[:, :, None, None] + upd
+        ys[:, t] = np.einsum("bhn,bhpn->bhp", Ch[:, t], state)
+    return ys, state
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16)])
+def test_ssd_chunked_matches_sequential(S, chunk):
+    rng = np.random.default_rng(3)
+    b, nh, hd, G, N = 2, 4, 8, 1, 16
+    x = jnp.asarray(rng.normal(size=(b, S, nh, hd)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, S, nh)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(nh,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, S, G, N)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, S, G, N)), jnp.float32)
+    y, final = ssd_chunked(x, dt, A, B, C, chunk)
+    y_ref, final_ref = _ssd_sequential(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), final_ref, atol=2e-4)

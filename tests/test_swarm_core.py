@@ -1,0 +1,129 @@
+"""SwarmSGD core invariants: gossip mean preservation, Γ dynamics,
+non-blocking semantics, matching sampler properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SwarmConfig, gamma_potential, make_graph, mean_model,
+                        make_swarm_step, sample_matching, swarm_init)
+from repro.core.swarm import SwarmState, gossip_exact, sample_h_counts
+from repro.optim import make_optimizer
+
+N = 8
+
+
+def tiny_init(rng):
+    k1, k2 = jax.random.split(rng)
+    return {"w1": jax.random.normal(k1, (6, 16)) * 0.3,
+            "w2": jax.random.normal(k2, (16, 1)) * 0.3}
+
+
+def tiny_loss(p, mb):
+    x, y = mb
+    return jnp.mean((jnp.tanh(x @ p["w1"]) @ p["w2"] - y) ** 2)
+
+
+def make_batch(t, h=2, b=8):
+    rng = np.random.default_rng(t)
+    x = rng.normal(size=(N, h, b, 6)).astype(np.float32)
+    y = (x.sum(-1, keepdims=True) > 0).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_gossip_preserves_mean():
+    rng = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(rng, (N, 32))}
+    perm = jnp.asarray([1, 0, 3, 2, 5, 4, 7, 6])
+    matched = perm != jnp.arange(N)
+    out = gossip_exact(params, perm, matched)
+    np.testing.assert_allclose(np.asarray(mean_model(out)["w"]),
+                               np.asarray(mean_model(params)["w"]), atol=1e-6)
+    # matched pairs are exactly equal after averaging
+    np.testing.assert_allclose(np.asarray(out["w"][0]),
+                               np.asarray(out["w"][1]), atol=1e-6)
+
+
+def test_gossip_partial_matching_identity():
+    rng = jax.random.PRNGKey(1)
+    params = {"w": jax.random.normal(rng, (N, 8))}
+    perm = jnp.arange(N).at[0].set(1).at[1].set(0)  # only (0,1) matched
+    matched = perm != jnp.arange(N)
+    out = gossip_exact(params, perm, matched)
+    np.testing.assert_array_equal(np.asarray(out["w"][2:]),
+                                  np.asarray(params["w"][2:]))
+
+
+@pytest.mark.parametrize("nonblocking", [False, True])
+def test_swarm_converges_and_gamma_bounded(nonblocking):
+    g = make_graph("complete", N)
+    opt = make_optimizer("sgd", lr=0.05, momentum=0.0)
+    scfg = SwarmConfig(n_nodes=N, H=2, nonblocking=nonblocking)
+    state = swarm_init(jax.random.PRNGKey(0), scfg, tiny_init, opt.init)
+    step = jax.jit(make_swarm_step(scfg, tiny_loss, opt.update, lambda s: 0.05))
+    rng_np = np.random.default_rng(0)
+    key = jax.random.PRNGKey(2)
+    losses, gammas = [], []
+    for t in range(80):
+        key, sub = jax.random.split(key)
+        state, m = step(state, make_batch(t),
+                        jnp.asarray(sample_matching(g, rng_np)),
+                        jnp.asarray(sample_h_counts(scfg, rng_np)), sub)
+        losses.append(float(m["loss"]))
+        gammas.append(float(m["gamma"]))
+    assert np.mean(losses[-10:]) < 0.7 * np.mean(losses[:10])
+    # Lemma F.3: E[Γ_t] bounded uniformly in t (no divergence)
+    assert max(gammas[40:]) < 10 * (max(gammas[:20]) + 1e-3)
+
+
+def test_nonblocking_uses_stale_partner_model():
+    """Algorithm 2: the partner contribution is the superstep-START model
+    (the local delta is applied on top, not averaged)."""
+    scfg = SwarmConfig(n_nodes=2, H=1, nonblocking=True, track_potential=False)
+    opt = make_optimizer("sgd", lr=1.0, momentum=0.0)
+    state = swarm_init(jax.random.PRNGKey(0), scfg,
+                       lambda k: {"w": jnp.zeros((2, 2))}, opt.init)
+    # distinct start models
+    S0 = jnp.asarray([[[1.0, 1.0], [1.0, 1.0]], [[3.0, 3.0], [3.0, 3.0]]])
+    state = SwarmState({"w": S0}, state.opt, jax.tree.map(jnp.copy, {"w": S0}),
+                       state.step)
+
+    def lin_loss(p, mb):
+        return jnp.sum(p["w"]) * jnp.sum(mb)  # grad = 1 everywhere
+
+    step = jax.jit(make_swarm_step(scfg, lin_loss, opt.update, lambda s: 1.0))
+    batch = jnp.ones((2, 1, 1))
+    perm = jnp.asarray([1, 0])
+    h = jnp.ones((2,), jnp.int32)
+    new, _ = step(state, batch, perm, h, jax.random.PRNGKey(0))
+    # delta_i = -1 (lr*grad); X_i = (S_i + S_j)/2 + delta_i = 2 - 1 = 1
+    np.testing.assert_allclose(np.asarray(new.params["w"][0]), 1.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new.params["w"][1]), 1.0, atol=1e-6)
+
+
+def test_geometric_h_counts():
+    scfg = SwarmConfig(n_nodes=1000, H=3, h_mode="geometric", h_max=12)
+    h = sample_h_counts(scfg, np.random.default_rng(0))
+    assert h.min() >= 1 and h.max() <= 12
+    assert abs(h.mean() - 3.0) < 0.5  # clipped geometric, mean ~ H
+
+
+def test_matching_sampler_valid():
+    for kind in ["complete", "ring", "torus", "hypercube"]:
+        g = make_graph(kind, 16)
+        rng = np.random.default_rng(0)
+        edge_set = {tuple(e) for e in g.edges.tolist()}
+        for _ in range(20):
+            perm = sample_matching(g, rng)
+            assert (perm[perm] == np.arange(16)).all()  # involution
+            for i, j in enumerate(perm):
+                if i < j:
+                    assert (i, int(j)) in edge_set  # only graph edges
+
+
+def test_graph_spectral_gaps():
+    assert abs(make_graph("complete", 8).lambda2 - 8.0) < 1e-9
+    ring = make_graph("ring", 8)
+    assert abs(ring.lambda2 - (2 - 2 * np.cos(2 * np.pi / 8))) < 1e-9
+    hc = make_graph("hypercube", 8)
+    assert abs(hc.lambda2 - 2.0) < 1e-9  # Q_3 Laplacian gap = 2

@@ -1,0 +1,87 @@
+"""models/unroll.py is methodology-critical (exact dry-run FLOP counts rely
+on it): unrolled and rolled variants must be numerically identical, and the
+unrolled lowering must multiply loop-body flops by the trip count."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import unroll as U
+
+
+@pytest.fixture(autouse=True)
+def _reset():
+    yield
+    U.set_unroll(False)
+
+
+def test_scan_equivalence():
+    xs = jnp.arange(12.0).reshape(6, 2)
+
+    def body(c, x):
+        return c + jnp.sum(x), c * 0.5
+
+    ref = jax.lax.scan(body, 0.0, xs)
+    U.set_unroll(True)
+    got = U.scan(body, 0.0, xs)
+    np.testing.assert_allclose(got[0], ref[0])
+    np.testing.assert_allclose(got[1], ref[1])
+
+
+def test_scan_length_only():
+    def body(c, _):
+        return c + 1, None
+    U.set_unroll(True)
+    c, ys = U.scan(body, 0, None, length=5)
+    assert c == 5 and ys is None
+
+
+def test_fori_equivalence():
+    f = lambda i, c: c + i * 2  # noqa: E731
+    ref = jax.lax.fori_loop(0, 7, f, 10)
+    U.set_unroll(True)
+    assert U.fori_loop(0, 7, f, 10) == ref
+
+
+def test_map_equivalence():
+    xs = jnp.arange(8.0)
+    f = lambda x: x * x + 1  # noqa: E731
+    ref = jax.lax.map(f, xs)
+    U.set_unroll(True)
+    np.testing.assert_allclose(np.asarray(U.map_(f, xs)), np.asarray(ref))
+
+
+def test_unrolled_flops_multiply_by_trips():
+    """The reason unroll exists: cost_analysis counts rolled bodies once.
+    (Fresh closures per mode — jax's trace cache is keyed on function
+    identity and would otherwise hide the global-flag change, exactly why
+    launch/dryrun.py rebuilds its step functions per pass.)"""
+    A = jnp.zeros((64, 64), jnp.float32)
+
+    def make_f():
+        def f(x):
+            return U.scan(lambda c, _: (c @ A, None), x, None, length=4)[0]
+        return f
+
+    U.set_unroll(False)
+    rolled = jax.jit(make_f()).lower(A).cost_analysis()["flops"]
+    U.set_unroll(True)
+    unrolled = jax.jit(make_f()).lower(A).cost_analysis()["flops"]
+    one = 2 * 64**3
+    assert abs(rolled - one) / one < 0.01       # body counted once
+    assert abs(unrolled - 4 * one) / (4 * one) < 0.01  # x trip count
+
+
+def test_model_forward_identical_rolled_vs_unrolled():
+    from repro.configs import get_config, reduced
+    from repro.models import forward, init_params
+    cfg = reduced(get_config("gemma3-4b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                              cfg.vocab_size)
+    U.set_unroll(False)
+    h1, _, _ = forward(cfg, params, toks, mode="train")
+    U.set_unroll(True)
+    h2, _, _ = forward(cfg, params, toks, mode="train")
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32), atol=1e-4)
