@@ -98,6 +98,46 @@ def run_steps(setup, algo, steps, **kw):
             setup.n_nodes}
 
 
+def bench_stacked_params(setup: BenchSetup = None, n_nodes: int = None,
+                         spread: float = 0.0):
+    """Node-stacked params of the bench transformer (per-node noise `spread`
+    keeps the quantized decode distance criterion valid when > 0)."""
+    setup = setup or BenchSetup()
+    n_nodes = n_nodes or setup.n_nodes
+    cfg = reduced(get_config("transformer-wmt"), n_layers=setup.layers,
+                  d_model=setup.d_model, vocab=512)
+    one = init_params(jax.random.PRNGKey(setup.seed), cfg)
+    if not spread:
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_nodes,) + x.shape).copy(), one)
+    keys = jax.random.split(jax.random.PRNGKey(setup.seed + 1),
+                            len(jax.tree.leaves(one)))
+    return jax.tree.unflatten(
+        jax.tree.structure(one),
+        [x[None] + spread * jax.random.normal(k, (n_nodes,) + x.shape,
+                                              jnp.float32).astype(x.dtype)
+         for x, k in zip(jax.tree.leaves(one), keys)])
+
+
+def measured_payload(n_nodes: int = 8):
+    """ACTUAL packed wire bytes per node through the flat-buffer transport
+    (exact fp32 + quantized uint8/scale pair), vs the analytic formula."""
+    from repro.core import bucket as B
+    stacked = bench_stacked_params(n_nodes=n_nodes)
+    qcfg = ModularQuantConfig()
+    layout = B.build_layout(stacked, block=qcfg.block)
+    buf = B.pack(layout, stacked)
+    q, s = B.encode_flat(qcfg, buf, buf, jax.random.PRNGKey(0))
+    return {
+        "n_coords": int(layout.n_coords),
+        "n_padded": int(layout.n_padded),
+        "fp32_payload_bytes": int(buf.nbytes) // n_nodes,
+        "q8_payload_bytes": int(q.nbytes + s.nbytes) // n_nodes,
+        "fp32_formula_bytes": layout.payload_num_bytes(),
+        "q8_formula_bytes": layout.payload_num_bytes(qcfg),
+    }
+
+
 def comm_bytes_per_superstep(algo: str, n_nodes: int, n_params: int,
                              H: int, quantize=False) -> float:
     """Wire bytes PER NODE per superstep (fp32 payload accounting, matching

@@ -8,9 +8,12 @@ results/bench/. Paper mapping:
   t2_localsteps    — Fig 2(a)/6(b): local-step count H ablation
   t3_quantization  — Fig 8: 8-bit quantized gossip vs fp32
   t4_comm_cost     — Fig 2(b)/4: per-superstep communication bytes vs nodes
+                     (analytic curves + ACTUAL packed flat-buffer payload)
   t5_potential     — Lemma F.3: Γ_t vs the analytic bound (exact simulator)
   t6_nonblocking   — Extension 2: stale vs blocking averaging
   t7_roofline      — §Roofline: dry-run table (reads results/dryrun/*.json)
+  t8_transport     — DESIGN.md §Perf: flat-buffer vs per-leaf legacy gossip
+                     microbench (exact + quantized), compile + steady-state
 """
 from __future__ import annotations
 
@@ -87,7 +90,11 @@ def t3_quantization(quick=False):
 
 def t4_comm_cost(quick=False):
     """Analytic per-node wire bytes per superstep (the paper's Fig. 4 shape:
-    Swarm flat & lowest as node count grows; D-PSGD & AllReduce highest)."""
+    Swarm flat & lowest as node count grows; D-PSGD & AllReduce highest),
+    plus the ACTUAL packed flat-buffer payload of the bench model — the
+    quantized wire saving is measured from real (q, scales) arrays, not
+    assumed from the formula."""
+    from benchmarks.common import measured_payload
     n_params = 11_000_000  # ResNet18-scale, matching the paper's figure
     out = {}
     for n in [8, 16, 32, 64, 128]:
@@ -99,6 +106,15 @@ def t4_comm_cost(quick=False):
         out[n] = row
         emit(f"t4_comm_cost/n{n}", 0.0,
              ";".join(f"{k}={v / 1e6:.1f}MB" for k, v in row.items()))
+    mp = measured_payload()
+    assert mp["fp32_payload_bytes"] == mp["fp32_formula_bytes"]
+    assert mp["q8_payload_bytes"] == mp["q8_formula_bytes"]
+    ratio = mp["fp32_payload_bytes"] / mp["q8_payload_bytes"]
+    out["measured"] = {**mp, "wire_ratio": ratio}
+    emit("t4_comm_cost/measured", 0.0,
+         f"fp32={mp['fp32_payload_bytes']}B;q8={mp['q8_payload_bytes']}B;"
+         f"wire_ratio={ratio:.2f}x;pad_overhead="
+         f"{mp['n_padded'] / mp['n_coords'] - 1:.2%}")
     save("t4_comm_cost", out)
     return out
 
@@ -200,10 +216,116 @@ def t9_node_scaling(quick=False):
     return out
 
 
+def t8_transport(quick=False):
+    """Flat-buffer vs per-leaf legacy gossip on the bench transformer, for
+    the gather transport AND the production ppermute_pool transport (lax.
+    switch over K static matchings), exact + 8-bit quantized.
+
+    The flat path issues one collective / one kernel sweep per payload
+    tensor; the legacy path issues one PER LEAF — and the pool multiplies
+    that by K branches, so legacy compile time scales K×L while flat stays
+    K×(1 or 2). Reported per variant: compile_s, steady-state us_per_call,
+    and traj_total_s = compile + steps×steady for the t1-length trajectory
+    (the honest single-host cost of training with that transport; on real
+    meshes the collective-count collapse also cuts per-step latency, which
+    a one-device simulation cannot show — DESIGN.md §Perf)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from benchmarks.common import BenchSetup, bench_stacked_params
+    from repro.core import bucket as B
+    from repro.core.graph import make_graph, sample_matching
+    from repro.core.swarm import (gossip_exact, gossip_ppermute_pool,
+                                  gossip_quantized, make_matching_pool)
+    from repro.quant.schemes import ModularQuantConfig
+
+    reps = 5 if quick else 20
+    traj_steps = 25 if quick else 80   # matches run_steps() in t1/t3
+    setup = BenchSetup()
+    n = setup.n_nodes
+    params = bench_stacked_params(setup, spread=0.01)
+    prev = jax.tree.map(lambda x: x + 0.005, params)
+    qcfg = ModularQuantConfig(safety=16.0)
+    rng_np = np.random.default_rng(0)
+    graph = make_graph("complete", n)
+    perm = jnp.asarray(sample_matching(graph, rng_np))
+    matched = perm != jnp.arange(n)
+    pool = make_matching_pool(graph, K=2 if quick else 4, seed=0)
+    pool_idx = jnp.asarray(1)
+    mesh = jax.make_mesh((1,), ("node",))
+    specs = jax.tree.map(lambda x: P(*((None,) * x.ndim)), params)
+    key = jax.random.PRNGKey(0)
+    n_leaves = len(jax.tree.leaves(params))
+    n_params = sum(x.size for x in jax.tree.leaves(params)) // n
+
+    def pack_gossip_unpack(tree, gossip, *packed_extra):
+        lay = B.build_layout(tree, block=qcfg.block)
+        return B.unpack(lay, gossip(B.pack(lay, tree), lay, *packed_extra))
+
+    variants = {
+        "gather_exact_legacy": (lambda t: gossip_exact(t, perm, matched),
+                                (params,)),
+        "gather_exact_flat": (lambda t: pack_gossip_unpack(
+            t, lambda b, lay: B.gossip_flat_exact(b, perm, matched)),
+            (params,)),
+        "gather_q8_legacy": (lambda t, pv, k: gossip_quantized(
+            qcfg, t, pv, perm, matched, k), (params, prev, key)),
+        "gather_q8_flat": (lambda t, pv, k: pack_gossip_unpack(
+            t, lambda b, lay: B.gossip_flat_quantized(
+                qcfg, b, B.pack(lay, pv), perm, matched, k)),
+            (params, prev, key)),
+        "pool_exact_legacy": (lambda t, i: gossip_ppermute_pool(
+            t, specs, mesh, (), pool, i), (params, pool_idx)),
+        "pool_exact_flat": (lambda t, i: pack_gossip_unpack(
+            t, lambda b, lay: B.gossip_flat_ppermute_pool(
+                b, mesh, (), pool, i)), (params, pool_idx)),
+        "pool_q8_legacy": (lambda t, pv, i, k: gossip_ppermute_pool(
+            t, specs, mesh, (), pool, i, quant=qcfg, prev=pv, rng=k),
+            (params, prev, pool_idx, key)),
+        "pool_q8_flat": (lambda t, pv, i, k: pack_gossip_unpack(
+            t, lambda b, lay: B.gossip_flat_ppermute_pool(
+                b, mesh, (), pool, i, quant=qcfg, prev_buf=B.pack(lay, pv),
+                rng=k)), (params, prev, pool_idx, key)),
+    }
+
+    out = {"n_leaves": n_leaves, "n_params_per_node": n_params,
+           "pool_K": len(pool), "traj_steps": traj_steps}
+    with mesh:
+        for name, (fn, args) in variants.items():
+            jf = jax.jit(fn)
+            t0 = time.time()
+            jax.block_until_ready(jf(*args))
+            compile_s = time.time() - t0
+            t0 = time.time()
+            for _ in range(reps):
+                jax.block_until_ready(jf(*args))
+            us = (time.time() - t0) / reps * 1e6
+            total = compile_s + traj_steps * us / 1e6
+            out[name] = {"us_per_call": us, "compile_s": compile_s,
+                         "traj_total_s": total}
+            emit(f"t8_transport/{name}", us,
+                 f"compile_s={compile_s:.2f};traj_total_s={total:.2f}")
+    for mode in ["gather_exact", "gather_q8", "pool_exact", "pool_q8"]:
+        sp = out[f"{mode}_legacy"]["traj_total_s"] / \
+            out[f"{mode}_flat"]["traj_total_s"]
+        cp = out[f"{mode}_legacy"]["compile_s"] / \
+            out[f"{mode}_flat"]["compile_s"]
+        out[f"{mode}_traj_speedup"] = sp
+        out[f"{mode}_compile_speedup"] = cp
+        emit(f"t8_transport/{mode}_speedup", 0.0,
+             f"traj_flat_vs_legacy={sp:.2f}x;compile={cp:.2f}x")
+    save("t8_transport", out)
+    return out
+
+
 TABLES = {
     "t1": t1_convergence, "t2": t2_localsteps, "t3": t3_quantization,
     "t4": t4_comm_cost, "t5": t5_potential, "t6": t6_nonblocking,
-    "t7": t7_roofline, "t8": t8_topology, "t9": t9_node_scaling,
+    "t7": t7_roofline, "t8": t8_topology, "t8_transport": t8_transport,
+    "t9": t9_node_scaling,
 }
 
 

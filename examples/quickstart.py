@@ -1,7 +1,10 @@
 """Quickstart: SwarmSGD in ~40 lines.
 
 Eight decentralized nodes train a small transformer with 2 local SGD steps
-between pairwise gossip interactions (Algorithm 1), on CPU.
+between pairwise gossip interactions (Algorithm 1), on CPU. Gossip runs on
+the bucketed flat-buffer transport (core/bucket.py): the whole model moves
+as ONE packed payload per interaction; pass
+SwarmConfig(gossip_impl="gather_legacy") to A/B the per-leaf oracle.
 
   PYTHONPATH=src python examples/quickstart.py
 """

@@ -1,0 +1,38 @@
+"""jax version-compatibility shims (this container runs jax 0.4.x; the
+production target runs >= 0.5). Keep ALL version workarounds here."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """`jax.shard_map` across versions: >= 0.5 top-level with check_vma,
+    0.4.x `jax.experimental.shard_map` with check_rep."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across versions: >= 0.5 takes axis_types; 0.4.x has
+    neither the kwarg nor jax.sharding.AxisType."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def cost_analysis_dict(ca):
+    """cost_analysis() returns a dict on jax >= 0.5, a per-device list on
+    0.4.x — normalize to one dict."""
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca

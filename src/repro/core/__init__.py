@@ -1,5 +1,8 @@
 # The paper's primary contribution: SwarmSGD (decentralized SGD with
 # asynchronous pairwise gossip, local steps, and quantized exchange).
+from repro.core.bucket import (  # noqa: F401
+    BucketLayout, build_layout, pack, unpack,
+)
 from repro.core.graph import Graph, make_graph, sample_matching  # noqa: F401
 from repro.core.potential import gamma_potential, mean_model  # noqa: F401
 from repro.core.swarm import (  # noqa: F401

@@ -1,0 +1,272 @@
+"""Bucketed flat-buffer gossip transport (DESIGN.md §Perf).
+
+The unit of exchange in SwarmSGD is a *whole model*, not a parameter tensor:
+each matched pair swaps one payload per interaction. The per-leaf transports
+in ``core/swarm.py`` historically issued one collective (and, quantized, one
+encode/decode sweep) per pytree leaf — dozens of small collectives for a
+transformer. This module packs the node-stacked param pytree into ONE padded
+``[n_nodes, n_padded]`` fp32 buffer so gossip becomes a single collective
+over a single contiguous payload, and the quantized path runs through the
+Pallas kernel wrappers in ``kernels/ops.py`` (``quantize_mod`` encode,
+``decode_avg`` fused decode + average + matched-mask).
+
+Wire format (see DESIGN.md §Perf for the full layout):
+
+* leaves are flattened per node and concatenated in pytree-leaf order;
+* each leaf segment is zero-padded up to a multiple of ``block`` (the quant
+  scale-block size) so no scale block straddles two tensors;
+* the total per-node width is padded up to ``block * tile_rows`` so the
+  buffer maps onto the ``[rows, block]`` Pallas kernel layout with zero
+  re-padding — ``rows_per_node = n_padded // block`` is a multiple of the
+  kernel's sublane tile;
+* exact mode ships the fp32 buffer; quantized mode ships the
+  ``(uint8 q [rows, block], fp32 scales [rows, 1])`` pair.
+
+Layouts are cached per (tree structure, shapes, dtypes, block) — the
+flatten plan is computed once per model, not once per superstep.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import shard_map_compat
+from repro.quant.schemes import ModularQuantConfig, payload_bytes
+
+DEFAULT_BLOCK = 256      # coords per quant scale block (lane-dim multiple)
+DEFAULT_TILE_ROWS = 8    # kernel sublane tile: rows_per_node must divide
+
+
+@dataclass(frozen=True)
+class BucketLayout:
+    """Precomputed flatten plan for one node-stacked pytree structure."""
+    treedef: Any
+    n_nodes: int
+    shapes: Tuple[Tuple[int, ...], ...]   # per-leaf shape, node dim stripped
+    dtypes: Tuple[Any, ...]
+    offsets: Tuple[int, ...]              # leaf start col in the buffer
+    sizes: Tuple[int, ...]                # true coords per leaf per node
+    seg_sizes: Tuple[int, ...]            # block-aligned segment widths
+    n_coords: int                         # sum(sizes): true coords per node
+    n_padded: int                         # buffer width incl. all padding
+    block: int
+    tile_rows: int
+
+    @property
+    def rows_per_node(self) -> int:
+        return self.n_padded // self.block
+
+    def payload_num_bytes(self, quant: Optional[ModularQuantConfig] = None
+                          ) -> int:
+        """Exact wire bytes PER NODE for one gossip send of this buffer."""
+        if quant is None:
+            return 4 * self.n_padded
+        assert quant.block == self.block, (quant.block, self.block)
+        return payload_bytes(quant, self.n_padded)
+
+
+_LAYOUT_CACHE: dict = {}
+
+
+def build_layout(tree, *, block: int = DEFAULT_BLOCK,
+                 tile_rows: int = DEFAULT_TILE_ROWS) -> BucketLayout:
+    """Flatten plan for a node-stacked tree (cached per structure)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    assert leaves, "cannot build a bucket layout for an empty tree"
+    n_nodes = leaves[0].shape[0]
+    shapes = tuple(tuple(x.shape[1:]) for x in leaves)
+    dtypes = tuple(jnp.dtype(x.dtype) for x in leaves)
+    key = (treedef, n_nodes, shapes, dtypes, block, tile_rows)
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    offsets, sizes, seg_sizes = [], [], []
+    off = 0
+    for shp in shapes:
+        size = int(np.prod(shp, dtype=np.int64)) if shp else 1
+        seg = -(-size // block) * block
+        offsets.append(off)
+        sizes.append(size)
+        seg_sizes.append(seg)
+        off += seg
+    total_align = block * tile_rows
+    n_padded = -(-off // total_align) * total_align
+    layout = BucketLayout(treedef, n_nodes, shapes, dtypes, tuple(offsets),
+                          tuple(sizes), tuple(seg_sizes), sum(sizes),
+                          n_padded, block, tile_rows)
+    _LAYOUT_CACHE[key] = layout
+    return layout
+
+
+def pack(layout: BucketLayout, tree) -> jax.Array:
+    """Node-stacked pytree -> [n_nodes, n_padded] fp32 flat buffer.
+
+    Zeros-prefill + per-leaf slice writes: the zero prefill provides all the
+    alignment padding for free, and each leaf is copied exactly once
+    (XLA CPU's concatenate would add a full extra pass per operand)."""
+    leaves = jax.tree.leaves(tree)
+    buf = jnp.zeros((layout.n_nodes, layout.n_padded), jnp.float32)
+    for x, off, size in zip(leaves, layout.offsets, layout.sizes):
+        buf = buf.at[:, off:off + size].set(
+            x.reshape(layout.n_nodes, size).astype(jnp.float32))
+    return buf
+
+
+def unpack(layout: BucketLayout, buf: jax.Array):
+    """[n_nodes, n_padded] flat buffer -> node-stacked pytree (orig dtypes)."""
+    outs = []
+    for off, size, shp, dt in zip(layout.offsets, layout.sizes,
+                                  layout.shapes, layout.dtypes):
+        seg = jax.lax.slice_in_dim(buf, off, off + size, axis=1)
+        outs.append(seg.astype(dt).reshape((layout.n_nodes,) + shp))
+    return jax.tree.unflatten(layout.treedef, outs)
+
+
+# ---------------------------------------------------------------------------
+# Flat-buffer gossip primitives (the whole swarm = one payload tensor)
+# ---------------------------------------------------------------------------
+
+
+def gossip_flat_exact(buf, perm, matched=None):
+    """(buf + buf[perm]) / 2 — ONE gather over one tensor. `perm` is an
+    involution with fixed points at unmatched nodes, and (x + x) * 0.5 == x
+    bitwise for every finite float, so no matched-mask pass is needed
+    (`matched` is accepted for signature parity and ignored)."""
+    del matched
+    return (buf + buf[perm]) * 0.5
+
+
+def encode_flat(qcfg: ModularQuantConfig, buf, prev_buf, rng, *,
+                tile_rows: int = DEFAULT_TILE_ROWS, backend=None):
+    """Encode the whole flat buffer: ONE quantize_mod kernel sweep.
+
+    -> (q uint8 [n_nodes*rows_per_node, block], s fp32 [same rows, 1]).
+    Scales are per block; prev_buf is the sender-local distance proxy.
+    """
+    from repro.kernels import ops as K
+    assert qcfg.bits <= 8, \
+        f"flat transport carries uint8 payloads; bits={qcfg.bits} must use " \
+        "the per-leaf *_legacy gossip (encode_modular widens to uint16)"
+    u = jax.random.uniform(rng, buf.shape, jnp.float32)
+    if qcfg.resolution is not None:
+        # fixed absolute resolution (the paper's ε): scale is a constant,
+        # no distance proxy needed — plain stochastic-rounded mod-encode
+        levels = 1 << qcfg.bits
+        xb = buf.reshape(-1, qcfg.block)
+        s = jnp.full((xb.shape[0], 1), qcfg.resolution, jnp.float32)
+        q = jnp.mod(jnp.floor(xb / s + u.reshape(-1, qcfg.block)), levels)
+        return q.astype(jnp.uint8), s
+    q, s, pad = K.quantize_mod(buf, prev_buf, u, block=qcfg.block,
+                               safety=qcfg.safety, min_scale=qcfg.min_scale,
+                               bits=qcfg.bits, tile_rows=tile_rows,
+                               backend=backend)
+    assert pad == 0, "flat buffer must be pre-aligned to the kernel layout"
+    return q, s
+
+
+def gossip_flat_quantized(qcfg: ModularQuantConfig, buf, prev_buf, perm,
+                          matched, rng, *, tile_rows: int = DEFAULT_TILE_ROWS,
+                          backend=None):
+    """Quantized flat gossip: encode once, permute the (q, s) payload pair,
+    decode+average+mask in one fused decode_avg sweep."""
+    from repro.kernels import ops as K
+    n_nodes, n_padded = buf.shape
+    block = qcfg.block
+    rpn = n_padded // block
+    q, s = encode_flat(qcfg, buf, prev_buf, rng, tile_rows=tile_rows,
+                       backend=backend)
+    qp = q.reshape(n_nodes, rpn, block)[perm].reshape(-1, block)
+    sp = s.reshape(n_nodes, rpn, 1)[perm].reshape(-1, 1)
+    m_rows = jnp.repeat(matched, rpn)
+    return K.decode_avg(qp, sp, buf, matched=m_rows, block=block,
+                        bits=qcfg.bits, tile_rows=tile_rows, backend=backend)
+
+
+def _perm_from_pairs(n: int, pairs):
+    perm = np.arange(n)
+    for s, d in pairs:
+        perm[d] = s
+    return perm
+
+
+def gossip_flat_ppermute(buf, mesh, node_axes, pairs, *,
+                         quant: Optional[ModularQuantConfig] = None,
+                         prev_buf=None, rng=None, backend=None,
+                         tile_rows: int = DEFAULT_TILE_ROWS):
+    """shard_map collective-permute over the flat buffer: ONE ppermute per
+    payload tensor (fp32 buffer exact; uint8 q + fp32 scales quantized) —
+    vs one per pytree leaf in the legacy transport. `pairs` is a STATIC
+    involution [(src, dst), ...] over node/shard indices."""
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import ops as K
+
+    n_nodes = buf.shape[0]
+    n_shards = 1
+    for a in node_axes:
+        n_shards *= mesh.shape[a]
+    perm_arr = _perm_from_pairs(n_nodes if (not node_axes or n_shards == 1)
+                                else n_shards, pairs)
+    if not node_axes or n_shards == 1:
+        # all nodes on one shard: the permute degenerates to a local gather
+        perm_j = jnp.asarray(perm_arr)
+        matched = jnp.asarray(perm_arr != np.arange(len(perm_arr)))
+        if quant is None:
+            return gossip_flat_exact(buf, perm_j, matched)
+        return gossip_flat_quantized(quant, buf, prev_buf, perm_j, matched,
+                                     rng, tile_rows=tile_rows, backend=backend)
+
+    axis = node_axes if len(node_axes) > 1 else node_axes[0]
+    part = tuple(node_axes) if len(node_axes) > 1 else node_axes[0]
+    spec = P(part, None)
+    full_pairs = [(int(s), int(d)) for s, d in pairs]
+    matched_np = perm_arr != np.arange(n_shards)
+
+    def exact(x):
+        xh = jax.lax.ppermute(x, axis, full_pairs)     # the ONE collective
+        m = jnp.asarray(matched_np)[jax.lax.axis_index(axis)]
+        return jnp.where(m, (x + xh) * 0.5, x)
+
+    def quantized(x, pv, key):
+        idx = jax.lax.axis_index(axis)
+        q, s = encode_flat(quant, x, pv, jax.random.fold_in(key, idx),
+                           tile_rows=tile_rows, backend=backend)
+        qp = jax.lax.ppermute(q, axis, full_pairs)     # payload tensor 1
+        sp = jax.lax.ppermute(s, axis, full_pairs)     # payload tensor 2
+        m = jnp.asarray(matched_np)[idx]
+        m_rows = jnp.broadcast_to(m, (q.shape[0],))
+        return K.decode_avg(qp, sp, x, matched=m_rows, block=quant.block,
+                            bits=quant.bits, tile_rows=tile_rows,
+                            backend=backend)
+
+    if quant is None:
+        fn = shard_map_compat(exact, mesh, in_specs=(spec,), out_specs=spec)
+        return fn(buf)
+    fn = shard_map_compat(quantized, mesh, in_specs=(spec, spec, P()),
+                          out_specs=spec)
+    return fn(buf, prev_buf, rng)
+
+
+def gossip_flat_ppermute_pool(buf, mesh, node_axes, pool, pool_idx, *,
+                              quant: Optional[ModularQuantConfig] = None,
+                              prev_buf=None, rng=None, backend=None,
+                              tile_rows: int = DEFAULT_TILE_ROWS):
+    """lax.switch over a static matching pool; each branch holds ONE
+    collective over the flat buffer (vs one per leaf per branch legacy —
+    the K×L → K collective collapse that cuts compile time)."""
+
+    def branch(perm_arr):
+        pairs = [(int(perm_arr[d]), int(d)) for d in range(len(perm_arr))
+                 if perm_arr[d] != d] or [(0, 0)]
+
+        def g(b):
+            return gossip_flat_ppermute(b, mesh, node_axes, pairs,
+                                        quant=quant, prev_buf=prev_buf,
+                                        rng=rng, backend=backend,
+                                        tile_rows=tile_rows)
+        return g
+
+    return jax.lax.switch(pool_idx, [branch(p) for p in pool], buf)

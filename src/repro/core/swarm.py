@@ -21,6 +21,16 @@ ppermute variant).
 Geometric local steps (Thm 4.1's H_i ~ Geom(H)) are supported by passing
 per-node step counts h_i <= h_max and masking the loop body; fixed H
 (Thm 4.2 / non-iid) is h_i = H for all i.
+
+Transport: all gossip modes default to the *bucketed flat-buffer transport*
+(core/bucket.py, DESIGN.md §Perf): the node-stacked pytree is packed once
+per superstep into a single padded [n_nodes, n_padded] fp32 buffer, so the
+exchange is ONE collective over ONE contiguous payload — fp32 exact, or the
+packed (uint8 q, fp32 block-scales) pair through the Pallas kernel wrappers
+(kernels/ops.py: quantize_mod encode, decode_avg fused decode+avg+mask).
+The historical one-collective-per-leaf transports remain available as
+gossip_impl="gather_legacy" / "ppermute_legacy" / "ppermute_pool_legacy"
+oracles for tests and A/B benchmarks (benchmarks/run.py t8_transport).
 """
 from __future__ import annotations
 
@@ -31,6 +41,8 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map_compat
+from repro.core import bucket as B
 from repro.core.potential import gamma_potential
 from repro.models import unroll as U
 from repro.quant.schemes import (
@@ -51,9 +63,12 @@ class SwarmConfig:
     quant: ModularQuantConfig = ModularQuantConfig()
     average_momentum: bool = False  # paper averages MODELS only
     track_potential: bool = True
-    # gather (naive GSPMD) | ppermute (shard_map, one static matching) |
+    # gather (GSPMD gather) | ppermute (shard_map, one static matching) |
     # ppermute_pool (lax.switch over a static matching pool; the production
-    # transport: dynamic partner choice, static collective HLO)
+    # transport: dynamic partner choice, static collective HLO).
+    # All three run on the bucketed flat-buffer transport (core/bucket.py):
+    # one collective per payload tensor for the WHOLE model. Append
+    # "_legacy" (e.g. "gather_legacy") for the per-leaf oracle transports.
     gossip_impl: str = "gather"
     pool_size: int = 8
 
@@ -86,8 +101,10 @@ def _stack_init(rng, n_nodes, init_fn, same_init: bool = True):
 def swarm_init(rng, cfg: SwarmConfig, param_init: Callable, opt_init: Callable,
                same_init: bool = True) -> SwarmState:
     params = _stack_init(rng, cfg.n_nodes, param_init, same_init)
-    opt = jax.vmap(opt_init)(params) if _has_leaves(opt_init(jax.tree.map(
-        lambda x: x[0], params))) else {}
+    # probe the optimizer-state STRUCTURE abstractly — no second real init
+    probe = jax.eval_shape(opt_init, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params))
+    opt = jax.vmap(opt_init)(params) if _has_leaves(probe) else {}
     prev = jax.tree.map(jnp.copy, params) if (cfg.quantize or cfg.nonblocking) \
         else None
     return SwarmState(params, opt, prev, jnp.zeros((), jnp.int32))
@@ -116,12 +133,16 @@ def gossip_exact(params, perm, matched):
 def gossip_ppermute(params, param_specs, mesh, node_axes, pairs,
                     quant: Optional[ModularQuantConfig] = None, prev=None,
                     rng=None):
-    """Pairwise gossip via `collective-permute` under shard_map — the direct
+    """LEGACY per-leaf transport (oracle for core/bucket.py's flat buffer).
+
+    Pairwise gossip via `collective-permute` under shard_map — the direct
     TPU analogue of the paper's MPI sendrecv exchange: each matched node
     sends exactly ONE model copy (or its uint8 encoding) to its partner,
     instead of the O(n)-traffic all-gather that a dynamic `x[perm]` gather
     lowers to. `pairs` is a STATIC involution [(src, dst), ...] (production
     uses a lax.switch over a precompiled matching pool; see DESIGN.md §Perf).
+    Issues one collective PER LEAF — the flat-buffer transport replaces this
+    with one collective per payload tensor for the whole model.
     """
     from jax.sharding import PartitionSpec as P
     import numpy as np
@@ -173,14 +194,14 @@ def gossip_ppermute(params, param_specs, mesh, node_axes, pairs,
     out = []
     for x, spec, pv, key in zip(leaves, specs, prev_leaves, keys):
         if quant is not None:
-            fn = jax.shard_map(per_leaf(spec), mesh=mesh,
-                               in_specs=(spec, spec, P()),
-                               out_specs=spec, check_vma=False)
+            fn = shard_map_compat(per_leaf(spec), mesh,
+                                  in_specs=(spec, spec, P()),
+                                  out_specs=spec)
             out.append(fn(x, pv, key))
         else:
-            fn = jax.shard_map(
-                lambda x_: per_leaf(spec)(x_, None, None), mesh=mesh,
-                in_specs=(spec,), out_specs=spec, check_vma=False)
+            fn = shard_map_compat(
+                lambda x_: per_leaf(spec)(x_, None, None), mesh,
+                in_specs=(spec,), out_specs=spec)
             out.append(fn(x))
     return jax.tree.unflatten(tdef, out)
 
@@ -215,7 +236,8 @@ def gossip_ppermute_pool(params, param_specs, mesh, node_axes, pool,
 
 
 def gossip_quantized(qcfg, params, prev, perm, matched, rng):
-    """Exchange the 8-bit modular encoding instead of raw values.
+    """LEGACY per-leaf quantized transport (oracle for the flat buffer):
+    exchange the 8-bit modular encoding instead of raw values.
 
     Each node encodes its model against its own `prev` comm copy (the
     sender-local distance proxy); the *uint8 payload + fp32 block scales*
@@ -250,17 +272,33 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
     [n_nodes, h_max, local_batch, ...]; perm: [n_nodes] int32 involution;
     h_counts: [n_nodes] int32 (# local steps this superstep, <= h_max).
 
-    gossip_impl="ppermute" additionally needs (mesh, param_specs, node_axes,
+    gossip_impl="ppermute" additionally needs (mesh, node_axes,
     static_pairs): the exchange is a shard_map collective-permute with a
     STATIC matching (production: lax.switch over a matching pool).
+    All modes run on the bucketed flat-buffer transport; the "*_legacy"
+    variants keep the historical per-leaf collectives (param_specs is only
+    required for the legacy shard_map modes, which shard each leaf by its
+    own spec instead of the one flat payload).
     """
     h_max = cfg.h_max if cfg.h_mode == "geometric" else cfg.H
-    if cfg.gossip_impl == "ppermute":
-        assert mesh is not None and param_specs is not None \
-            and node_axes is not None and static_pairs is not None
-    if cfg.gossip_impl == "ppermute_pool":
-        assert mesh is not None and param_specs is not None \
-            and node_axes is not None and matching_pool is not None
+    legacy = cfg.gossip_impl.endswith("_legacy")
+    base_impl = cfg.gossip_impl[:-len("_legacy")] if legacy \
+        else cfg.gossip_impl
+    assert base_impl in ("gather", "ppermute", "ppermute_pool"), \
+        cfg.gossip_impl
+    # bits > 8 payloads also route to the legacy per-leaf transport (the
+    # uint8 flat kernels don't carry them), so they need param_specs too
+    needs_specs = legacy or (cfg.quantize and cfg.quant.bits > 8)
+    if base_impl == "ppermute":
+        assert mesh is not None and node_axes is not None \
+            and static_pairs is not None
+        assert not needs_specs or param_specs is not None, \
+            "legacy / >8-bit ppermute gossip requires param_specs"
+    if base_impl == "ppermute_pool":
+        assert mesh is not None and node_axes is not None \
+            and matching_pool is not None
+        assert not needs_specs or param_specs is not None, \
+            "legacy / >8-bit ppermute_pool gossip requires param_specs"
 
     def local_steps(params_i, opt_i, batch_i, h_i, lr):
         """One node's H local SGD steps (no collectives)."""
@@ -283,32 +321,53 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         params, opt, losses = jax.vmap(local_steps, in_axes=(0, 0, 0, 0, None))(
             S, state.opt, batch, h_counts, lr)
         params = jax.tree.map(lambda x: shard(x, "param"), params)
-        if cfg.gossip_impl == "ppermute_pool":
+        if base_impl == "ppermute_pool":
+            # `perm` carries the scalar pool index in this mode; recover the
+            # actual node->partner involution from the pool
             import numpy as _np
-            pool_masks = jnp.asarray(_np.stack(
-                [p != _np.arange(cfg.n_nodes) for p in matching_pool]))
-            matched = pool_masks[perm.reshape(-1)[0]]
+            node_perm = jnp.asarray(_np.stack(matching_pool))[
+                perm.reshape(-1)[0]]
         else:
-            matched = perm != jnp.arange(cfg.n_nodes)
+            node_perm = perm
+        matched = node_perm != jnp.arange(cfg.n_nodes)
 
         def exchange(tree, use_quant: bool):
-            """Average each node's `tree` entry with its partner's."""
-            if cfg.gossip_impl == "ppermute":
-                return gossip_ppermute(
-                    tree, param_specs, mesh, node_axes, static_pairs,
-                    quant=cfg.quant if use_quant else None,
-                    prev=state.prev if use_quant else None, rng=rng)
-            if cfg.gossip_impl == "ppermute_pool":
-                # `perm` carries the scalar pool index in this mode
-                return gossip_ppermute_pool(
-                    tree, param_specs, mesh, node_axes, matching_pool,
-                    perm.reshape(-1)[0],
-                    quant=cfg.quant if use_quant else None,
-                    prev=state.prev if use_quant else None, rng=rng)
-            if use_quant:
-                return gossip_quantized(cfg.quant, tree, state.prev, perm,
-                                        matched, rng)
-            return gossip_exact(tree, perm, matched)
+            """Average each node's `tree` entry with its partner's — over
+            the flat-buffer transport unless a *_legacy oracle (or a >8-bit
+            payload, which the uint8 flat kernels don't carry) is selected.
+            `perm` carries the scalar pool index in ppermute_pool modes."""
+            quant = cfg.quant if use_quant else None
+            prev = state.prev if use_quant else None
+            if legacy or (use_quant and cfg.quant.bits > 8):
+                if base_impl == "ppermute":
+                    return gossip_ppermute(tree, param_specs, mesh,
+                                           node_axes, static_pairs,
+                                           quant=quant, prev=prev, rng=rng)
+                if base_impl == "ppermute_pool":
+                    return gossip_ppermute_pool(
+                        tree, param_specs, mesh, node_axes, matching_pool,
+                        perm.reshape(-1)[0], quant=quant, prev=prev, rng=rng)
+                if use_quant:
+                    return gossip_quantized(cfg.quant, tree, state.prev,
+                                            perm, matched, rng)
+                return gossip_exact(tree, perm, matched)
+            layout = B.build_layout(tree, block=cfg.quant.block)
+            buf = B.pack(layout, tree)
+            pbuf = B.pack(layout, state.prev) if use_quant else None
+            if base_impl == "gather":
+                buf = (B.gossip_flat_quantized(cfg.quant, buf, pbuf, perm,
+                                               matched, rng)
+                       if use_quant else
+                       B.gossip_flat_exact(buf, perm, matched))
+            elif base_impl == "ppermute":
+                buf = B.gossip_flat_ppermute(
+                    buf, mesh, node_axes, static_pairs, quant=quant,
+                    prev_buf=pbuf, rng=rng)
+            else:
+                buf = B.gossip_flat_ppermute_pool(
+                    buf, mesh, node_axes, matching_pool, perm.reshape(-1)[0],
+                    quant=quant, prev_buf=pbuf, rng=rng)
+            return B.unpack(layout, buf)
 
         if cfg.nonblocking:
             # Algorithm 2: X_i <- (S_i + X_j') / 2 + (X_i - S_i), where the
@@ -327,7 +386,7 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
             params = exchange(params, cfg.quantize)
 
         if cfg.average_momentum and _has_leaves(opt):
-            opt = jax.tree.map(lambda x: _avg(x, x[perm], matched), opt)
+            opt = jax.tree.map(lambda x: _avg(x, x[node_perm], matched), opt)
 
         params = jax.tree.map(lambda x: shard(x, "param"), params)
         new_prev = None

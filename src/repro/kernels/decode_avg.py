@@ -1,8 +1,14 @@
-"""Pallas kernel: fused modular decode + gossip average.
+"""Pallas kernel: fused modular decode + gossip average (+ matched mask).
 
 out = (y + decode(q, s; y)) / 2 in ONE pass over HBM (vs 4 passes unfused:
 decode-read, decode-write, avg-read, avg-write). This is the receive side of
 every SwarmSGD interaction — memory-bound, so fusion halves its HBM traffic.
+
+The optional per-row `matched` mask fuses the "unmatched nodes keep their own
+model" select into the same pass: the flat-buffer transport (core/bucket.py)
+lays the swarm out as [n_nodes * rows_per_node, BLOCK] rows, so a node's
+matched bit broadcasts to its row range and no separate jnp.where sweep over
+the full model is needed (DESIGN.md §Perf).
 """
 from __future__ import annotations
 
@@ -15,8 +21,7 @@ from jax.experimental import pallas as pl
 from repro.kernels.quantize_mod import DEFAULT_TILE_ROWS
 
 
-def _decode_avg_kernel(q_ref, s_ref, y_ref, o_ref, *, levels: int,
-                       average: bool):
+def _decode(q_ref, s_ref, y_ref, *, levels: int, average: bool):
     half = levels // 2
     q = q_ref[...].astype(jnp.float32)
     s = s_ref[...]                                  # [TR, 1]
@@ -25,28 +30,53 @@ def _decode_avg_kernel(q_ref, s_ref, y_ref, o_ref, *, levels: int,
     diff = jnp.mod(q - qy, levels)
     wrapped = jnp.where(diff >= half, diff - levels, diff)
     x_hat = (qy + wrapped) * s
-    out = (y + x_hat) * 0.5 if average else x_hat
+    return y, ((y + x_hat) * 0.5 if average else x_hat)
+
+
+def _decode_avg_kernel(q_ref, s_ref, y_ref, o_ref, *, levels: int,
+                       average: bool):
+    _, out = _decode(q_ref, s_ref, y_ref, levels=levels, average=average)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _decode_avg_masked_kernel(q_ref, s_ref, y_ref, m_ref, o_ref, *,
+                              levels: int, average: bool):
+    y, out = _decode(q_ref, s_ref, y_ref, levels=levels, average=average)
+    out = jnp.where(m_ref[...] != 0, out, y)        # m: [TR, 1] f32 mask
     o_ref[...] = out.astype(o_ref.dtype)
 
 
 def decode_avg_pallas(q, s, y, *, bits: int = 8, average: bool = True,
-                      tile_rows: int = DEFAULT_TILE_ROWS,
+                      matched=None, tile_rows: int = DEFAULT_TILE_ROWS,
                       interpret: bool = True):
-    """q:[R,B] uint8, s:[R,1] f32, y:[R,B] -> (y + x̂)/2 (or x̂ if not average)."""
+    """q:[R,B] uint8, s:[R,1] f32, y:[R,B] -> (y + x̂)/2 (or x̂ if not average).
+
+    matched: optional [R] / [R,1] per-row mask; rows with mask==0 pass y
+    through unchanged (fused — no extra HBM sweep).
+    """
     n_rows, block = q.shape
     assert block % 128 == 0 and n_rows % tile_rows == 0
     grid = (n_rows // tile_rows,)
-    kern = functools.partial(_decode_avg_kernel, levels=1 << bits,
-                             average=average)
+    in_specs = [
+        pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
+        pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
+        pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
+    ]
+    if matched is None:
+        kern = functools.partial(_decode_avg_kernel, levels=1 << bits,
+                                 average=average)
+        args = (q, s, y)
+    else:
+        m = matched.reshape(n_rows, 1).astype(jnp.float32)
+        in_specs.append(pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)))
+        kern = functools.partial(_decode_avg_masked_kernel, levels=1 << bits,
+                                 average=average)
+        args = (q, s, y, m)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
-            pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
-            pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tile_rows, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_rows, block), y.dtype),
         interpret=interpret,
-    )(q, s, y)
+    )(*args)

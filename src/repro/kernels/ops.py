@@ -53,16 +53,22 @@ def quantize_mod(x, ref, u, *, block: int = 256, safety: float = 8.0,
 
 
 def decode_avg(q, s, y, *, block: int = 256, bits: int = 8,
-               average: bool = True, backend: str | None = None,
-               tile_rows: int = 8):
-    """q,s from quantize_mod; y: the receiver tensor (original shape)."""
+               average: bool = True, matched=None,
+               backend: str | None = None, tile_rows: int = 8):
+    """q,s from quantize_mod; y: the receiver tensor (original shape).
+
+    matched: optional per-row [R] mask (R = q.shape[0]); rows with mask==0
+    return y unchanged — the gossip "unmatched keeps own model" select, fused
+    into the decode+average pass.
+    """
     backend = backend or DEFAULT_BACKEND
     yb, pad = _to_blocks(y, block, tile_rows)
     if backend == "ref":
-        out = ref_ops.decode_avg_ref(q, s, yb, bits=bits, average=average)
+        out = ref_ops.decode_avg_ref(q, s, yb, bits=bits, average=average,
+                                     matched=matched)
     else:
         out = decode_avg_pallas(q, s, yb, bits=bits, average=average,
-                                tile_rows=tile_rows,
+                                matched=matched, tile_rows=tile_rows,
                                 interpret=(backend == "interpret"))
     flat = out.reshape(-1)
     if pad:

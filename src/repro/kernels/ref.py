@@ -16,7 +16,8 @@ def quantize_mod_ref(x, ref, u, *, safety: float = 8.0,
     return q, s
 
 
-def decode_avg_ref(q, s, y, *, bits: int = 8, average: bool = True):
+def decode_avg_ref(q, s, y, *, bits: int = 8, average: bool = True,
+                   matched=None):
     levels = 1 << bits
     half = levels // 2
     yf = y.astype(jnp.float32)
@@ -25,6 +26,9 @@ def decode_avg_ref(q, s, y, *, bits: int = 8, average: bool = True):
     wrapped = jnp.where(diff >= half, diff - levels, diff)
     x_hat = (qy + wrapped) * s
     out = (yf + x_hat) * 0.5 if average else x_hat
+    if matched is not None:
+        # fused per-row gossip mask: unmatched rows keep the receiver value
+        out = jnp.where(matched.reshape(-1, 1) != 0, out, yf)
     return out.astype(y.dtype)
 
 

@@ -29,6 +29,8 @@ from repro.models.transformer import logits_head, param_template  # noqa: E402
 from repro.optim import make_optimizer  # noqa: E402
 from repro.roofline.analysis import analyze_compiled, model_flops  # noqa: E402
 
+from repro.compat import cost_analysis_dict as _cost_dict  # noqa: E402
+
 DEFAULT_H = 2
 
 
@@ -234,7 +236,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, gossip: str = "gather",
     if flops_mode == "unrolled":
         t0 = time.time()
         lo_u = build(True)
-        ca = lo_u.cost_analysis()
+        ca = _cost_dict(lo_u.cost_analysis())
         flops_dev = float(ca.get("flops", 0.0)) / n_dev
         t_unroll = round(time.time() - t0, 1)
         del lo_u
@@ -257,7 +259,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, gossip: str = "gather",
     collective_s = coll_bytes / ICI_LINK_BW
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": collective_s}
-    rolled_ca = compiled.cost_analysis()
+    rolled_ca = _cost_dict(compiled.cost_analysis())
 
     return {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
@@ -291,7 +293,12 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
-    ap.add_argument("--gossip", default="gather", choices=["gather", "ppermute"])
+    ap.add_argument("--gossip", default="gather",
+                    choices=["gather", "ppermute", "gather_legacy",
+                             "ppermute_legacy"],
+                    help="*_legacy = per-leaf oracle transports (the default "
+                         "modes run the flat-buffer transport; DESIGN.md "
+                         "§Perf)")
     ap.add_argument("--quantize", action="store_true")
     ap.add_argument("--nonblocking", action="store_true")
     ap.add_argument("--H", type=int, default=DEFAULT_H)

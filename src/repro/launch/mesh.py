@@ -5,6 +5,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh_compat  # noqa: F401  (re-export)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Target: TPU v5e. Single pod = 16x16 (256 chips), multi-pod = 2 pods.
@@ -15,16 +17,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(n_nodes: int = 1):
     """CPU-scale mesh for the runnable examples/tests (1 device -> trivial)."""
     n_dev = len(jax.devices())
     n = min(n_nodes, n_dev)
-    return jax.make_mesh((n, n_dev // n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((n, n_dev // n), ("data", "model"))
 
 
 # TPU v5e hardware constants (per chip) — used by the roofline analysis.

@@ -18,8 +18,8 @@ N = 4
 def _mesh():
     # single CPU device: trivial 1x1 mesh — shard_map still exercises the
     # ppermute code path (self-permutes)
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 def test_matching_pool_valid():

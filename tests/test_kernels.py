@@ -4,7 +4,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # only the @given property tests need hypothesis — keep the direct
+    # Pallas-vs-optim and block-alignment tests running without it
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
 
 from repro.kernels import decode_avg, quantize_mod, sgd_fused_update
 from repro.kernels.ref import decode_avg_ref, quantize_mod_ref, sgd_update_ref
