@@ -13,15 +13,11 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.algorithms import make_algorithm  # noqa: E402
-from repro.algorithms.sgp import sgp_init_prev  # noqa: E402
 from repro.configs import get_config, reduced  # noqa: E402
-from repro.core import (SwarmConfig, make_graph, make_swarm_step,  # noqa: E402
-                        sample_matching, swarm_init)
-from repro.core.swarm import SwarmState, sample_h_counts  # noqa: E402
+from repro.core import sample_matching  # noqa: E402
+from repro.core.swarm import sample_h_counts  # noqa: E402
 from repro.data import DataConfig, SyntheticLMDataset, make_node_batches  # noqa: E402
-from repro.models import init_params, loss_fn as model_loss  # noqa: E402
-from repro.optim import make_optimizer  # noqa: E402
+from repro.models import init_params  # noqa: E402
 from repro.quant.schemes import ModularQuantConfig, payload_bytes  # noqa: E402
 
 
@@ -39,51 +35,40 @@ class BenchSetup:
 
 
 def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
-          h_mode="fixed"):
+          h_mode="fixed", gossip_impl=None, pool_size=4, overlap=False):
+    """Bench trainer = the ACTUAL launch/train.py build_trainer on the
+    reduced bench transformer (one construction path, not a copy), with the
+    bench quant config (safety 16 keeps the decode distance criterion valid
+    at the bench's concentrated spreads)."""
+    from repro.launch.train import build_trainer
     cfg = reduced(get_config("transformer-wmt"), n_layers=setup.layers,
                   d_model=setup.d_model, vocab=512)
-    graph = make_graph(setup.graph, setup.n_nodes)
-    opt = make_optimizer("sgd", lr=setup.lr, momentum=0.9)
-    lf = lambda p, mb: model_loss(cfg, p, mb)  # noqa: E731
-    lr_fn = lambda s: setup.lr  # noqa: E731
-    if algo == "swarm":
-        scfg = SwarmConfig(n_nodes=setup.n_nodes, H=setup.H, h_mode=h_mode,
-                           quantize=quantize, nonblocking=nonblocking,
-                           quant=ModularQuantConfig(safety=16.0))
-        step = make_swarm_step(scfg, lf, opt.update, lr_fn)
-    else:
-        kw = dict(loss_fn=lf, opt_update=opt.update, lr_fn=lr_fn,
-                  n_nodes=setup.n_nodes)
-        if algo == "localsgd":
-            kw["H"] = setup.H
-        if algo == "dpsgd":
-            kw["graph"] = graph
-        step = make_algorithm(algo, **kw)
-        scfg = SwarmConfig(n_nodes=setup.n_nodes,
-                           H=setup.H if algo in ("localsgd",) else 1)
-    state = swarm_init(jax.random.PRNGKey(setup.seed), scfg,
-                       lambda k: init_params(k, cfg), opt.init)
-    if algo == "sgp":
-        state = SwarmState(state.params, state.opt,
-                           sgp_init_prev(setup.n_nodes), state.step)
+    step, state, scfg, graph = build_trainer(
+        cfg, algo, setup.n_nodes, setup.H, setup.lr, quantize=quantize,
+        nonblocking=nonblocking, graph_kind=setup.graph, seed=setup.seed,
+        h_mode=h_mode, gossip_impl=gossip_impl, pool_size=pool_size,
+        overlap=overlap, quant=ModularQuantConfig(safety=16.0))
     ds = SyntheticLMDataset(
         DataConfig(vocab_size=cfg.vocab_size, seq_len=setup.seq,
                    seed=setup.seed), n_nodes=setup.n_nodes)
-    return cfg, graph, scfg, jax.jit(step), state, ds
+    return cfg, graph, scfg, step, state, ds
 
 
 def run_steps(setup, algo, steps, **kw):
+    from repro.launch.train import sample_gossip_perm
     cfg, graph, scfg, step, state, ds = build(setup, algo, **kw)
     rng_np = np.random.default_rng(setup.seed)
     key = jax.random.PRNGKey(setup.seed + 1)
     h_max = scfg.h_max if scfg.h_mode == "geometric" else scfg.H
+    swarm = algo == "swarm"
     losses, gammas, times = [], [], []
     for t in range(steps):
         nb = make_node_batches(ds, t, setup.batch * h_max)
         batch = {k: jnp.asarray(v.reshape(setup.n_nodes, h_max, setup.batch,
                                           setup.seq))
                  for k, v in nb.items()}
-        perm = jnp.asarray(sample_matching(graph, rng_np))
+        perm = jnp.asarray(sample_gossip_perm(scfg, graph, rng_np, setup.seed)
+                           if swarm else sample_matching(graph, rng_np))
         h = jnp.asarray(sample_h_counts(scfg, rng_np))
         key, sub = jax.random.split(key)
         t0 = time.time()
@@ -94,6 +79,8 @@ def run_steps(setup, algo, steps, **kw):
         gammas.append(float(m.get("gamma", 0.0)))
     return {"loss": losses, "gamma": gammas,
             "us_per_step": float(np.mean(times[2:]) * 1e6),
+            "us_per_step_med": float(np.median(times[2:]) * 1e6),
+            "compile_s": times[0],
             "n_params": sum(x.size for x in jax.tree.leaves(state.params)) //
             setup.n_nodes}
 

@@ -14,6 +14,9 @@ results/bench/. Paper mapping:
   t7_roofline      — §Roofline: dry-run table (reads results/dryrun/*.json)
   t8_transport     — DESIGN.md §Perf: flat-buffer vs per-leaf legacy gossip
                      microbench (exact + quantized), compile + steady-state
+  t9_async         — DESIGN.md §Pipeline: blocking vs overlapped
+                     (double-buffered) non-blocking superstep, quantized
+                     ppermute_pool transport
 """
 from __future__ import annotations
 
@@ -321,11 +324,104 @@ def t8_transport(quick=False):
     return out
 
 
+def t9_async(quick=False):
+    """DESIGN.md §Pipeline: blocking vs plain non-blocking vs the
+    double-buffered overlapped superstep on the production quantized
+    ppermute_pool transport — full supersteps (local loop + gossip), same
+    model, same batches and matchings. The variants are advanced ROUND-ROBIN
+    and compared PAIRED per round (median of per-round time differences),
+    so drifting background load hits all of them equally instead of
+    whichever happened to run in a noisy window. Also reports compile time
+    (the pool's lax.switch holds only payload permutes in overlap mode, vs
+    K×(encode+permute+decode) blocking). On a single-host CPU there is no
+    wire latency to hide, so the steady-state win is the removed second
+    pack + per-leaf comm-copy refresh; on a real mesh the collective itself
+    overlaps the local-step loop (the point of the pipeline)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import build
+    from repro.core.swarm import sample_h_counts
+    from repro.data import make_node_batches
+
+    rounds = 12 if quick else 40
+    setup = BenchSetup()
+    variants = {
+        "blocking": dict(),
+        "nonblocking": dict(nonblocking=True),
+        "overlap": dict(nonblocking=True, overlap=True),
+    }
+    runs, out = {}, {}
+    for name, kw in variants.items():
+        cfg, graph, scfg, step, state, ds = build(
+            setup, "swarm", quantize=True, gossip_impl="ppermute_pool",
+            pool_size=4, **kw)
+        runs[name] = dict(scfg=scfg, step=step, state=state, ds=ds,
+                          rng_np=np.random.default_rng(setup.seed),
+                          key=jax.random.PRNGKey(setup.seed + 1),
+                          times=[], losses=[])
+
+    def one_step(r, t):
+        scfg = r["scfg"]
+        nb = make_node_batches(r["ds"], t, setup.batch * scfg.H)
+        batch = {k: jnp.asarray(v.reshape(setup.n_nodes, scfg.H, setup.batch,
+                                          setup.seq))
+                 for k, v in nb.items()}
+        idx = int(r["rng_np"].integers(scfg.pool_size))
+        perm = jnp.full((setup.n_nodes,), idx, jnp.int32)
+        h = jnp.asarray(sample_h_counts(scfg, r["rng_np"]))
+        r["key"], sub = jax.random.split(r["key"])
+        t0 = time.time()
+        r["state"], m = r["step"](r["state"], batch, perm, h, sub)
+        m = jax.device_get(m)
+        dt = time.time() - t0
+        r["times"].append(dt)
+        r["losses"].append(float(m["loss"]))
+        return dt
+
+    for name in runs:                                  # compile round
+        runs[name]["compile_s"] = one_step(runs[name], 0)
+    for t in range(1, rounds + 1):                     # interleaved rounds
+        for name in runs:
+            one_step(runs[name], t)
+
+    for name, r in runs.items():
+        # drop round 1 (allocator warm-up), keep the paired remainder
+        steady = np.asarray(r["times"][2:]) * 1e6
+        out[name] = {"us_per_step_med": float(np.median(steady)),
+                     "us_per_step_min": float(np.min(steady)),
+                     "compile_s": r["compile_s"],
+                     "final_loss": float(np.mean(r["losses"][-5:]))}
+        emit(f"t9_async/{name}", out[name]["us_per_step_med"],
+             f"min_us={out[name]['us_per_step_min']:.0f};"
+             f"compile_s={r['compile_s']:.2f};"
+             f"final_loss={out[name]['final_loss']:.4f}")
+    paired = np.asarray(runs["blocking"]["times"][2:]) - \
+        np.asarray(runs["overlap"]["times"][2:])
+    out["paired_median_blocking_minus_overlap_us"] = \
+        float(np.median(paired) * 1e6)
+    ratio = out["blocking"]["us_per_step_med"] / \
+        out["overlap"]["us_per_step_med"]
+    cratio = out["blocking"]["compile_s"] / out["overlap"]["compile_s"]
+    out["overlap_speedup_vs_blocking"] = ratio
+    out["overlap_compile_speedup_vs_blocking"] = cratio
+    out["overlap_leq_blocking"] = bool(np.median(paired) >= 0)
+    emit("t9_async/overlap_vs_blocking", 0.0,
+         f"step_speedup={ratio:.2f}x;compile_speedup={cratio:.2f}x;"
+         f"paired_median_saving_us="
+         f"{out['paired_median_blocking_minus_overlap_us']:.0f};"
+         f"overlap_leq_blocking={out['overlap_leq_blocking']}")
+    save("t9_async", out)
+    return out
+
+
 TABLES = {
     "t1": t1_convergence, "t2": t2_localsteps, "t3": t3_quantization,
     "t4": t4_comm_cost, "t5": t5_potential, "t6": t6_nonblocking,
     "t7": t7_roofline, "t8": t8_topology, "t8_transport": t8_transport,
-    "t9": t9_node_scaling,
+    "t9": t9_node_scaling, "t9_async": t9_async,
 }
 
 

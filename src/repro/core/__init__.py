@@ -6,5 +6,6 @@ from repro.core.bucket import (  # noqa: F401
 from repro.core.graph import Graph, make_graph, sample_matching  # noqa: F401
 from repro.core.potential import gamma_potential, mean_model  # noqa: F401
 from repro.core.swarm import (  # noqa: F401
-    SwarmConfig, SwarmState, make_swarm_step, swarm_init,
+    SwarmConfig, SwarmState, make_swarm_step, pipeline_epilogue,
+    pipeline_prologue, swarm_init,
 )

@@ -193,6 +193,75 @@ def _perm_from_pairs(n: int, pairs):
     return perm
 
 
+def pairs_from_perm(perm_arr):
+    """Involution perm -> STATIC ppermute (src, dst) pairs. The `[(0, 0)]`
+    fallback keeps an all-identity matching a valid (self-send) collective
+    instead of an empty pair list, which ppermute rejects."""
+    return [(int(perm_arr[d]), int(d)) for d in range(len(perm_arr))
+            if perm_arr[d] != d] or [(0, 0)]
+
+
+# ---------------------------------------------------------------------------
+# In-flight payload permutes (the wire half of the non-blocking pipeline)
+#
+# The pipelined superstep (core/swarm.py, DESIGN.md §Pipeline) carries the
+# already-encoded payload of interaction t in SwarmState and dispatches ONLY
+# its permute at the top of the superstep, before the local-step loop — the
+# encode (previous superstep) and the decode+average (after the loop) live
+# outside these helpers, so the collective has no data dependence on the
+# local compute and the scheduler is free to overlap the two.
+# ---------------------------------------------------------------------------
+
+
+def permute_rows(x, perm, n_nodes: int):
+    """Gather-permute node-grouped rows: x is [n_nodes, ...] or
+    [n_nodes * r, ...] with node-contiguous row groups (the (q, s) kernel
+    layout packs rows_per_node consecutive rows per node)."""
+    if x.shape[0] == n_nodes:
+        return x[perm]
+    r = x.shape[0] // n_nodes
+    return x.reshape((n_nodes, r) + x.shape[1:])[perm].reshape(x.shape)
+
+
+def permute_payload_ppermute(payload, mesh, node_axes, pairs, n_nodes: int):
+    """ONE collective-permute per in-flight payload tensor and nothing else.
+    `payload` is a tuple of node-grouped arrays (fp32 buffer exact; uint8 q
+    + fp32 scales quantized); `pairs` is a STATIC involution."""
+    from jax.sharding import PartitionSpec as P
+
+    n_shards = 1
+    for a in node_axes:
+        n_shards *= mesh.shape[a]
+    if not node_axes or n_shards == 1:
+        # all nodes on one shard: the permute degenerates to a local gather
+        perm = jnp.asarray(_perm_from_pairs(n_nodes, pairs))
+        return tuple(permute_rows(x, perm, n_nodes) for x in payload)
+    axis = node_axes if len(node_axes) > 1 else node_axes[0]
+    part = tuple(node_axes) if len(node_axes) > 1 else node_axes[0]
+    full_pairs = [(int(s), int(d)) for s, d in pairs]
+    specs = tuple(P(part, *([None] * (x.ndim - 1))) for x in payload)
+
+    def f(*xs):
+        return tuple(jax.lax.ppermute(x, axis, full_pairs) for x in xs)
+
+    fn = shard_map_compat(f, mesh, in_specs=specs, out_specs=specs)
+    return fn(*payload)
+
+
+def permute_payload_pool(payload, mesh, node_axes, pool, pool_idx,
+                         n_nodes: int):
+    """lax.switch over the static matching pool; each branch holds ONLY the
+    payload permutes — encode/decode live outside the switch, so the pool
+    compiles K×P collectives instead of K×(encode + P + decode)."""
+
+    def branch(perm_arr):
+        pairs = pairs_from_perm(perm_arr)
+        return lambda xs: permute_payload_ppermute(xs, mesh, node_axes,
+                                                   pairs, n_nodes)
+
+    return jax.lax.switch(pool_idx, [branch(p) for p in pool], payload)
+
+
 def gossip_flat_ppermute(buf, mesh, node_axes, pairs, *,
                          quant: Optional[ModularQuantConfig] = None,
                          prev_buf=None, rng=None, backend=None,
@@ -259,8 +328,7 @@ def gossip_flat_ppermute_pool(buf, mesh, node_axes, pool, pool_idx, *,
     the K×L → K collective collapse that cuts compile time)."""
 
     def branch(perm_arr):
-        pairs = [(int(perm_arr[d]), int(d)) for d in range(len(perm_arr))
-                 if perm_arr[d] != d] or [(0, 0)]
+        pairs = pairs_from_perm(perm_arr)
 
         def g(b):
             return gossip_flat_ppermute(b, mesh, node_axes, pairs,

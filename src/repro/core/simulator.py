@@ -9,6 +9,11 @@ checked numerically.
 
 Models are flat vectors [n, d] (numpy); the gradient oracle is any callable
 grad_fn(x, node, rng) -> g with E[g] = ∇f_node(x).
+
+`run_superstep_oracle` additionally replays the SPMD engine's synchronous
+superstep semantics (all nodes step, one matching per superstep, optional
+depth-1 non-blocking staleness) — the reference trajectory for the
+simulator↔engine parity tests.
 """
 from __future__ import annotations
 
@@ -129,6 +134,58 @@ def run_simulation(graph: Graph, x0: np.ndarray, grad_fn: Callable,
             if loss_fn is not None:
                 trace.loss.append(float(loss_fn(mu)))
     return trace
+
+
+# ---------------------------------------------------------------------------
+# Superstep-level oracle of the SPMD engine (simulator <-> engine parity)
+# ---------------------------------------------------------------------------
+
+
+def run_superstep_oracle(x0: np.ndarray, grad_fn: Callable, perms, H: int,
+                         eta: float, nonblocking: bool = False,
+                         dtype=np.float32) -> np.ndarray:
+    """Sequential numpy replay of the engine's superstep semantics
+    (`core/swarm.py`), the reference side of the simulator↔engine parity
+    oracle (tests/test_async_pipeline.py).
+
+    Unlike `run_simulation` — the paper's one-edge-at-a-time process — this
+    models the engine's synchronous-superstep parallelization: EVERY node
+    runs exactly H local SGD steps, then the given matching `perm` (an
+    involution over nodes, identity at unmatched nodes) averages matched
+    pairs. With ``nonblocking=True`` it applies the engine's Algorithm-2
+    staleness of depth exactly ONE interaction: the partner contribution is
+    the partner's superstep-START model S_j — the value its in-flight
+    payload was packed from at the end of the previous superstep in the
+    overlapped pipeline — and each node's fresh local delta rides on top:
+
+        X_i <- (S_i + S_j) / 2 + (X_i^post - S_i)
+
+    which is exactly what both the plain non-blocking and the overlapped
+    (double-buffered) engine supersteps compute in exact mode.
+
+    grad_fn(x, node, t, q) -> gradient for `node` at superstep t, local
+    step q (must be deterministic for step-for-step parity). Computation is
+    carried in `dtype` (fp32 to match the engine). Returns the [T, n, d]
+    trajectory of post-superstep models.
+    """
+    X = x0.astype(dtype).copy()
+    n = X.shape[0]
+    eta = dtype(eta)
+    traj = []
+    for t, perm in enumerate(perms):
+        perm = np.asarray(perm)
+        S = X.copy()
+        for i in range(n):
+            for q in range(H):
+                X[i] = X[i] - eta * np.asarray(grad_fn(X[i], i, t, q), dtype)
+        matched = perm != np.arange(n)
+        if nonblocking:
+            new_x = (S + S[perm]) * dtype(0.5) + (X - S)
+        else:
+            new_x = (X + X[perm]) * dtype(0.5)
+        X = np.where(matched[:, None], new_x, X).astype(dtype)
+        traj.append(X.copy())
+    return np.stack(traj)
 
 
 # ---------------------------------------------------------------------------

@@ -34,7 +34,8 @@ oracles for tests and A/B benchmarks (benchmarks/run.py t8_transport).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import os
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Dict, Optional
 
@@ -59,6 +60,11 @@ class SwarmConfig:
     h_mode: str = "fixed"        # fixed | geometric
     h_max: int = 8               # static loop bound for geometric sampling
     nonblocking: bool = False    # Algorithm 2 semantics
+    overlap: bool = False        # pipelined non-blocking superstep: the
+    # encoded payload of interaction t is carried in SwarmState.inflight and
+    # its collective is dispatched BEFORE the local-step loop of interaction
+    # t+1 (double-buffered comm copy; DESIGN.md §Pipeline). Requires
+    # nonblocking=True and a flat (non-legacy, bits<=8) transport.
     quantize: bool = False       # Extension 3
     quant: ModularQuantConfig = ModularQuantConfig()
     average_momentum: bool = False  # paper averages MODELS only
@@ -69,7 +75,10 @@ class SwarmConfig:
     # All three run on the bucketed flat-buffer transport (core/bucket.py):
     # one collective per payload tensor for the WHOLE model. Append
     # "_legacy" (e.g. "gather_legacy") for the per-leaf oracle transports.
-    gossip_impl: str = "gather"
+    # REPRO_DEFAULT_GOSSIP_IMPL overrides the default (CI runs the tier-1
+    # suite once with the legacy per-leaf oracles as the default).
+    gossip_impl: str = field(default_factory=lambda: os.environ.get(
+        "REPRO_DEFAULT_GOSSIP_IMPL", "gather"))
     pool_size: int = 8
 
 
@@ -79,9 +88,15 @@ class SwarmState:
     opt: Any                     # node-stacked optimizer state
     prev: Any                    # comm copy: params at last interaction
     step: jax.Array
+    # overlap mode only (DESIGN.md §Pipeline): the double-buffered comm
+    # state — {"sbuf": packed params at the last superstep boundary,
+    # and when quantized "prev": packed comm copy (the encode proxy),
+    # "q"/"s": the encoded in-flight payload awaiting its collective}.
+    inflight: Any = None
 
     def tree_flatten(self):
-        return (self.params, self.opt, self.prev, self.step), None
+        return (self.params, self.opt, self.prev, self.step,
+                self.inflight), None
 
 
 jax.tree_util.register_pytree_node(
@@ -105,9 +120,47 @@ def swarm_init(rng, cfg: SwarmConfig, param_init: Callable, opt_init: Callable,
     probe = jax.eval_shape(opt_init, jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params))
     opt = jax.vmap(opt_init)(params) if _has_leaves(probe) else {}
+    if cfg.overlap:
+        # pipelined mode: the comm copy lives packed inside `inflight`
+        state = SwarmState(params, opt, None, jnp.zeros((), jnp.int32))
+        return pipeline_prologue(cfg, state, jax.random.fold_in(rng, 0x1F))
     prev = jax.tree.map(jnp.copy, params) if (cfg.quantize or cfg.nonblocking) \
         else None
     return SwarmState(params, opt, prev, jnp.zeros((), jnp.int32))
+
+
+def pipeline_prologue(cfg: SwarmConfig, state: SwarmState, rng) -> SwarmState:
+    """Software-pipeline PROLOGUE: pack (and, quantized, encode) the first
+    in-flight payload so the first superstep can dispatch its collective
+    before any local compute. `swarm_init` calls this automatically when
+    cfg.overlap; it is also the re-entry point after `pipeline_epilogue`."""
+    assert cfg.nonblocking, "overlap pipelining implements Algorithm 2: " \
+        "set nonblocking=True"
+    layout = B.build_layout(state.params, block=cfg.quant.block)
+    buf = B.pack(layout, state.params)
+    if cfg.quantize:
+        prev_buf = B.pack(layout, state.prev) if state.prev is not None \
+            else buf
+        q, s = B.encode_flat(cfg.quant, buf, prev_buf, rng)
+        infl = {"sbuf": buf, "prev": prev_buf, "q": q, "s": s}
+    else:
+        infl = {"sbuf": buf}
+    return SwarmState(state.params, state.opt, None, state.step, infl)
+
+
+def pipeline_epilogue(cfg: SwarmConfig, state: SwarmState) -> SwarmState:
+    """Software-pipeline EPILOGUE (drain): drop the in-flight payload. The
+    model state is already final — the payload only fed the NEXT interaction,
+    which will not happen. The packed comm copy (the quant encode's distance
+    proxy) is unpacked back into `prev` so a later `pipeline_prologue`
+    re-primes with a LIVE proxy — re-priming from the model itself would
+    collapse the scale to min_scale and wrap the first post-resume decode.
+    Use before checkpointing/serving a pipelined run."""
+    prev = state.prev
+    if state.inflight is not None and "prev" in state.inflight:
+        layout = B.build_layout(state.params, block=cfg.quant.block)
+        prev = B.unpack(layout, state.inflight["prev"])
+    return SwarmState(state.params, state.opt, prev, state.step, None)
 
 
 def _has_leaves(tree) -> bool:
@@ -224,8 +277,7 @@ def gossip_ppermute_pool(params, param_specs, mesh, node_axes, pool,
     """lax.switch over a static matching pool; each branch is a
     gossip_ppermute with its own static source-target pairs."""
     def branch(perm_arr):
-        pairs = [(int(perm_arr[d]), d) for d in range(len(perm_arr))
-                 if perm_arr[d] != d] or [(0, 0)]
+        pairs = B.pairs_from_perm(perm_arr)
 
         def f(p):
             return gossip_ppermute(p, param_specs, mesh, node_axes, pairs,
@@ -279,6 +331,11 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
     variants keep the historical per-leaf collectives (param_specs is only
     required for the legacy shard_map modes, which shard each leaf by its
     own spec instead of the one flat payload).
+
+    With cfg.overlap the returned step is the software-pipelined steady
+    state: it consumes `state.inflight` (primed by swarm_init /
+    pipeline_prologue) and dispatches that payload's collective before the
+    local-step loop — see DESIGN.md §Pipeline.
     """
     h_max = cfg.h_max if cfg.h_mode == "geometric" else cfg.H
     legacy = cfg.gossip_impl.endswith("_legacy")
@@ -289,6 +346,15 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
     # bits > 8 payloads also route to the legacy per-leaf transport (the
     # uint8 flat kernels don't carry them), so they need param_specs too
     needs_specs = legacy or (cfg.quantize and cfg.quant.bits > 8)
+    if cfg.overlap:
+        assert cfg.nonblocking, \
+            "overlap=True pipelines Algorithm 2: set nonblocking=True"
+        assert not legacy, \
+            "the pipelined overlap mode runs on the flat transport only " \
+            "(no *_legacy per-leaf oracles)"
+        assert not (cfg.quantize and cfg.quant.bits > 8), \
+            "the in-flight payload buffer carries uint8; bits > 8 needs " \
+            "the blocking legacy transport"
     if base_impl == "ppermute":
         assert mesh is not None and node_axes is not None \
             and static_pairs is not None
@@ -315,20 +381,105 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
             0, h_max, body, (params_i, opt_i, jnp.zeros((), jnp.float32)))
         return params_i, opt_i, lsum / jnp.maximum(h_i, 1)
 
+    def run_local_steps(state, batch, h_counts, lr):
+        params, opt, losses = jax.vmap(local_steps, in_axes=(0, 0, 0, 0, None))(
+            state.params, state.opt, batch, h_counts, lr)
+        return jax.tree.map(lambda x: shard(x, "param"), params), opt, losses
+
+    if base_impl == "ppermute_pool":
+        import numpy as _np
+        stacked_pool = jnp.asarray(_np.stack(matching_pool))
+
+    def resolve_node_perm(perm):
+        """`perm` carries the scalar pool index in ppermute_pool mode;
+        recover the actual node->partner involution from the pool."""
+        if base_impl == "ppermute_pool":
+            pool_idx = perm.reshape(-1)[0]
+            return stacked_pool[pool_idx], pool_idx
+        return perm, None
+
+    def pipelined_superstep(state: SwarmState, batch, perm, h_counts, rng):
+        """Software-pipelined STEADY STATE (cfg.overlap; DESIGN.md
+        §Pipeline). The payload of interaction t was packed/encoded at the
+        end of superstep t-1 and rides in `state.inflight`; here its wire
+        permute is dispatched BEFORE the local-step loop (no data dependence
+        between the two, so latency-hiding scheduling can overlap them), the
+        decode+average lands against the STALE packed model exactly as
+        Algorithm 2 specifies, and the next payload is packed/encoded from
+        the post-interaction model on the way out."""
+        from repro.kernels import ops as K
+
+        lr = lr_fn(state.step)
+        S = state.params                       # superstep-start models
+        infl = state.inflight
+        assert infl is not None, \
+            "overlap superstep needs a primed pipeline (pipeline_prologue)"
+        layout = B.build_layout(S, block=cfg.quant.block)
+        node_perm, pool_idx = resolve_node_perm(perm)
+        matched = node_perm != jnp.arange(cfg.n_nodes)
+
+        # 1. dispatch the in-flight payload's collective FIRST
+        payload = (infl["q"], infl["s"]) if cfg.quantize else (infl["sbuf"],)
+        if base_impl == "gather":
+            recv = tuple(B.permute_rows(x, node_perm, cfg.n_nodes)
+                         for x in payload)
+        elif base_impl == "ppermute":
+            recv = B.permute_payload_ppermute(payload, mesh, node_axes,
+                                              static_pairs, cfg.n_nodes)
+        else:
+            recv = B.permute_payload_pool(payload, mesh, node_axes,
+                                          matching_pool, pool_idx,
+                                          cfg.n_nodes)
+
+        # 2. local steps — overlappable with the in-flight exchange
+        params, opt, losses = run_local_steps(state, batch, h_counts, lr)
+
+        # 3. land: decode+average against the STALE packed model S
+        sbuf = infl["sbuf"]
+        if cfg.quantize:
+            m_rows = jnp.repeat(matched, layout.rows_per_node)
+            base_buf = K.decode_avg(recv[0], recv[1], sbuf, matched=m_rows,
+                                    block=cfg.quant.block,
+                                    bits=cfg.quant.bits)
+        else:
+            base_buf = (sbuf + recv[0]) * 0.5
+        # X_i <- (S_i + X_j')/2 + (X_i - S_i), flat: one pack of the
+        # post-local-step model, combine in fp32 buffer space
+        post_buf = B.pack(layout, params)
+        m_col = matched[:, None]
+        new_buf = jnp.where(m_col, base_buf + (post_buf - sbuf), post_buf)
+        params = jax.tree.map(lambda x: shard(x, "param"),
+                              B.unpack(layout, new_buf))
+        if cfg.average_momentum and _has_leaves(opt):
+            opt = jax.tree.map(lambda x: _avg(x, x[node_perm], matched), opt)
+
+        # 4. refresh the packed comm copy + encode the NEXT payload. The
+        # copy refreshes to the value SENT at this interaction (S, packed in
+        # sbuf) — so the encode's sender-local distance proxy |new - prev|
+        # is the one-superstep movement (gossip pull + local delta), a live
+        # Γ sample, never the degenerate zero a post-model refresh would give
+        if cfg.quantize:
+            prev_buf = jnp.where(m_col, sbuf, infl["prev"])
+            q2, s2 = B.encode_flat(cfg.quant, new_buf, prev_buf, rng)
+            new_infl = {"sbuf": new_buf, "prev": prev_buf, "q": q2, "s": s2}
+        else:
+            new_infl = {"sbuf": new_buf}
+
+        metrics = {
+            "loss": jnp.mean(losses),
+            "lr": lr,
+            "matched_frac": jnp.mean(matched.astype(jnp.float32)),
+        }
+        if cfg.track_potential:
+            metrics["gamma"] = gamma_potential(params)
+        return SwarmState(params, opt, None, state.step + 1,
+                          new_infl), metrics
+
     def superstep(state: SwarmState, batch, perm, h_counts, rng):
         lr = lr_fn(state.step)
         S = state.params                       # superstep-start models
-        params, opt, losses = jax.vmap(local_steps, in_axes=(0, 0, 0, 0, None))(
-            S, state.opt, batch, h_counts, lr)
-        params = jax.tree.map(lambda x: shard(x, "param"), params)
-        if base_impl == "ppermute_pool":
-            # `perm` carries the scalar pool index in this mode; recover the
-            # actual node->partner involution from the pool
-            import numpy as _np
-            node_perm = jnp.asarray(_np.stack(matching_pool))[
-                perm.reshape(-1)[0]]
-        else:
-            node_perm = perm
+        params, opt, losses = run_local_steps(state, batch, h_counts, lr)
+        node_perm, _ = resolve_node_perm(perm)
         matched = node_perm != jnp.arange(cfg.n_nodes)
 
         def exchange(tree, use_quant: bool):
@@ -391,11 +542,18 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         params = jax.tree.map(lambda x: shard(x, "param"), params)
         new_prev = None
         if state.prev is not None:
-            # comm copy refreshes on interaction
+            # comm copy refreshes on interaction. Blocking: to the
+            # post-interaction (averaged) model — the NEXT encode input is
+            # H local steps away from it, so the quant distance proxy
+            # |x - prev| stays live. Non-blocking: to S, the value
+            # Algorithm 2 exchanged — the next encode input IS the
+            # post-interaction model, so refreshing to it would collapse
+            # the proxy to zero for matched nodes and wrap every decode.
+            src = S if cfg.nonblocking else params
             new_prev = jax.tree.map(
                 lambda pv, p: jnp.where(
                     matched.reshape((-1,) + (1,) * (p.ndim - 1)), p, pv),
-                state.prev, params)
+                state.prev, src)
 
         metrics = {
             "loss": jnp.mean(losses),
@@ -406,7 +564,7 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
             metrics["gamma"] = gamma_potential(params)
         return SwarmState(params, opt, new_prev, state.step + 1), metrics
 
-    return superstep
+    return pipelined_superstep if cfg.overlap else superstep
 
 
 def make_mean_model_eval(loss_fn: Callable):

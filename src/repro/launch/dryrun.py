@@ -54,7 +54,8 @@ def prepend_spec(spec_tree, part):
 
 def build_train(cfg, shape, mesh, gossip: str, quantize: bool = False,
                 nonblocking: bool = False, H: int = DEFAULT_H,
-                ce_anchor: bool = False, moe_c_shard: bool = False):
+                ce_anchor: bool = False, moe_c_shard: bool = False,
+                overlap: bool = False):
     n_nodes = S.n_nodes_for(cfg, mesh)
     node_axes = S.node_axes_for(cfg, mesh)
     shard = S.make_shard_fn(cfg, mesh, "train", ce_anchor=ce_anchor,
@@ -74,8 +75,8 @@ def build_train(cfg, shape, mesh, gossip: str, quantize: bool = False,
     pspec = prepend_spec(pspec_single, node_part)
 
     scfg = SwarmConfig(n_nodes=n_nodes, H=H, quantize=quantize,
-                       nonblocking=nonblocking, gossip_impl=gossip,
-                       track_potential=False)
+                       nonblocking=nonblocking or overlap, overlap=overlap,
+                       gossip_impl=gossip, track_potential=False)
     lf = lambda p, mb: model_loss(cfg, p, mb, shard=shard)  # noqa: E731
     step = make_swarm_step(scfg, lf, opt.update, lambda s: 0.1, shard=shard,
                            mesh=mesh, param_specs=pspec, node_axes=node_axes,
@@ -84,11 +85,28 @@ def build_train(cfg, shape, mesh, gossip: str, quantize: bool = False,
     psds = stacked_param_sds(cfg, n_nodes)
     mdt = jnp.dtype(cfg.opt_state_dtype)
     msds = {"m": jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, mdt), psds)}
-    prev_sds = psds if (quantize or nonblocking) else None
+    prev_sds = psds if (quantize or scfg.nonblocking) and not overlap else None
+    infl_sds = infl_spec = None
+    if overlap:
+        # pipelined mode: the comm copy + in-flight payload live packed in
+        # SwarmState.inflight (DESIGN.md §Pipeline); BucketLayout works on
+        # ShapeDtypeStructs, so the wire shapes come out without an init
+        from repro.core import bucket as B
+        lay = B.build_layout(psds, block=scfg.quant.block)
+        buf = jax.ShapeDtypeStruct((n_nodes, lay.n_padded), jnp.float32)
+        infl_sds = {"sbuf": buf}
+        if quantize:
+            rows = n_nodes * lay.rows_per_node
+            infl_sds.update(
+                prev=buf,
+                q=jax.ShapeDtypeStruct((rows, scfg.quant.block), jnp.uint8),
+                s=jax.ShapeDtypeStruct((rows, 1), jnp.float32))
+        infl_spec = {k: P(node_part, None) for k in infl_sds}
     state_sds = SwarmState(psds, msds, prev_sds,
-                           jax.ShapeDtypeStruct((), jnp.int32))
+                           jax.ShapeDtypeStruct((), jnp.int32), infl_sds)
     state_spec = SwarmState(pspec, {"m": pspec},
-                            pspec if prev_sds is not None else None, P())
+                            pspec if prev_sds is not None else None, P(),
+                            infl_spec)
 
     batch_specs = S.train_input_specs(cfg, shape, mesh, H)
     batch_sds = {k: v[0] for k, v in batch_specs.items()}
@@ -162,7 +180,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, gossip: str = "gather",
             quantize: bool = False, nonblocking: bool = False,
             H: int = DEFAULT_H, flops_mode: str = "unrolled",
             cache_layout: str = "headdim", ce_anchor: bool = False,
-            native_partials: bool = False, moe_c_shard: bool = False) -> dict:
+            native_partials: bool = False, moe_c_shard: bool = False,
+            overlap: bool = False) -> dict:
     """Two-pass dry-run (see EXPERIMENTS.md §Method):
 
     A) ROLLED lowering -> .compile(): proves the (arch x shape x mesh)
@@ -196,7 +215,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, gossip: str = "gather",
             if shape.kind == "train":
                 jitted, args = build_train(cfg, shape, mesh, gossip, quantize,
                                            nonblocking, H, ce_anchor=ce_anchor,
-                                           moe_c_shard=moe_c_shard)
+                                           moe_c_shard=moe_c_shard,
+                                           overlap=overlap)
             else:
                 jitted, args = build_serve(cfg, shape, mesh,
                                            cache_layout=cache_layout)
@@ -265,7 +285,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, gossip: str = "gather",
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
         "kind": shape.kind,
         "gossip": gossip if shape.kind == "train" else None,
-        "quantize": quantize, "nonblocking": nonblocking,
+        "quantize": quantize, "nonblocking": nonblocking or overlap,
+        "overlap": overlap,
         "n_devices": n_dev, "n_nodes": n_nodes,
         "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
         "t_unroll_lower_s": t_unroll,
@@ -301,6 +322,9 @@ def main():
                          "§Perf)")
     ap.add_argument("--quantize", action="store_true")
     ap.add_argument("--nonblocking", action="store_true")
+    ap.add_argument("--overlap", action="store_true",
+                    help="pipelined non-blocking superstep (implies "
+                         "--nonblocking; DESIGN.md §Pipeline)")
     ap.add_argument("--H", type=int, default=DEFAULT_H)
     ap.add_argument("--flops", default="unrolled",
                     choices=["unrolled", "analytic"],
@@ -320,7 +344,7 @@ def main():
                   flops_mode=args.flops, cache_layout=args.cache_layout,
                   ce_anchor=args.ce_anchor,
                   native_partials=args.native_partials,
-                  moe_c_shard=args.moe_c_shard)
+                  moe_c_shard=args.moe_c_shard, overlap=args.overlap)
     os.makedirs(args.out, exist_ok=True)
     tag = f"{args.arch}__{args.shape}__{args.mesh}"
     if args.gossip != "gather":
@@ -329,6 +353,8 @@ def main():
         tag += "__q8"
     if args.nonblocking:
         tag += "__nb"
+    if args.overlap:
+        tag += "__ov"
     if args.cache_layout != "headdim":
         tag += f"__{args.cache_layout}"
     if args.ce_anchor:

@@ -34,7 +34,10 @@ from repro.quant.schemes import ModularQuantConfig
 def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
                   quantize: bool = False, nonblocking: bool = False,
                   graph_kind: str = "complete", seed: int = 0,
-                  h_mode: str = "fixed", momentum: float = 0.9):
+                  h_mode: str = "fixed", momentum: float = 0.9,
+                  gossip_impl: str = None, pool_size: int = 8,
+                  overlap: bool = False,
+                  quant: ModularQuantConfig = None):
     graph = make_graph(graph_kind, n_nodes)
     opt = make_optimizer("sgd", lr=lr, momentum=momentum,
                          state_dtype=cfg.opt_state_dtype)
@@ -42,10 +45,16 @@ def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
     lr_fn = lambda s: lr  # noqa: E731
 
     if algo == "swarm":
-        scfg = SwarmConfig(n_nodes=n_nodes, H=H, h_mode=h_mode,
-                           quantize=quantize, nonblocking=nonblocking,
-                           quant=ModularQuantConfig())
-        step = make_swarm_step(scfg, lf, opt.update, lr_fn)
+        skw = dict(n_nodes=n_nodes, H=H, h_mode=h_mode, quantize=quantize,
+                   nonblocking=nonblocking or overlap, overlap=overlap,
+                   quant=quant or ModularQuantConfig(), pool_size=pool_size)
+        if gossip_impl is not None:
+            skw["gossip_impl"] = gossip_impl
+        scfg = SwarmConfig(**skw)
+        probe = jax.eval_shape(lambda k: init_params(k, cfg),
+                               jax.random.PRNGKey(0))
+        step = make_swarm_step(scfg, lf, opt.update, lr_fn,
+                               **_gossip_kwargs(scfg, graph, seed, probe))
     else:
         kw = dict(loss_fn=lf, opt_update=opt.update, lr_fn=lr_fn,
                   n_nodes=n_nodes)
@@ -64,6 +73,60 @@ def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
     return jax.jit(step), state, scfg, graph
 
 
+def _gossip_kwargs(scfg: SwarmConfig, graph, seed: int,
+                   param_probe=None) -> dict:
+    """Transport plumbing for the shard_map gossip modes on the single-host
+    training mesh (one shard: the collective degenerates to a local permute;
+    the same kwargs carry a real node mesh on multi-device runs).
+    `param_probe` is an abstract single-node param tree, only needed for the
+    per-leaf legacy (or >8-bit) modes, which shard each leaf by its own
+    replicated spec."""
+    base = scfg.gossip_impl[:-len("_legacy")] \
+        if scfg.gossip_impl.endswith("_legacy") else scfg.gossip_impl
+    if base == "gather":
+        return {}
+    from jax.sharding import PartitionSpec as P
+    from repro.core.swarm import make_matching_pool
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1,), ("node",))
+    kw = dict(mesh=mesh, node_axes=())
+    if param_probe is not None:
+        kw["param_specs"] = jax.tree.map(
+            lambda x: P(*((None,) * (x.ndim + 1))), param_probe)
+    if base == "ppermute":
+        from repro.core.bucket import pairs_from_perm
+        kw["static_pairs"] = pairs_from_perm(
+            static_ppermute_matching(graph, seed))
+    else:
+        kw["matching_pool"] = make_matching_pool(graph, K=scfg.pool_size,
+                                                 seed=seed)
+    return kw
+
+
+def static_ppermute_matching(graph, seed: int) -> "np.ndarray":
+    """THE static involution the plain-ppermute transport is compiled
+    against — shared by _gossip_kwargs (which bakes it into the collective)
+    and sample_gossip_perm (which must feed the engine the same matching,
+    or the matched mask would disagree with the actual data movement)."""
+    return sample_matching(graph, np.random.default_rng(seed))
+
+
+def sample_gossip_perm(scfg: SwarmConfig, graph, rng_np,
+                       seed: int = 0) -> "np.ndarray":
+    """Per-superstep `perm` input: a fresh matching for the gather modes,
+    the scalar pool index (broadcast [n_nodes]) that ppermute_pool's
+    lax.switch consumes, or — for the plain ppermute modes, whose pairs are
+    compiled in — the one static matching baked at build time (`seed` must
+    match the build_trainer seed)."""
+    impl = scfg.gossip_impl
+    if impl.startswith("ppermute_pool"):
+        idx = int(rng_np.integers(scfg.pool_size))
+        return np.full((scfg.n_nodes,), idx, np.int32)
+    if impl.startswith("ppermute"):
+        return static_ppermute_matching(graph, seed)
+    return sample_matching(graph, rng_np)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="transformer-wmt")
@@ -79,6 +142,19 @@ def main():
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--quantize", action="store_true")
     ap.add_argument("--nonblocking", action="store_true")
+    ap.add_argument("--overlap", action="store_true",
+                    help="pipelined non-blocking superstep: dispatch the "
+                         "in-flight payload's collective before the local "
+                         "steps (implies --nonblocking; DESIGN.md §Pipeline)")
+    ap.add_argument("--gossip-impl", "--gossip_impl", default=None,
+                    choices=["gather", "ppermute", "ppermute_pool",
+                             "gather_legacy", "ppermute_legacy",
+                             "ppermute_pool_legacy"],
+                    help="gossip transport (default: SwarmConfig default, "
+                         "i.e. the flat-buffer gather)")
+    ap.add_argument("--pool-size", "--pool_size", type=int, default=8,
+                    help="K precompiled matchings for the ppermute_pool "
+                         "lax.switch transport")
     ap.add_argument("--graph", default="complete")
     ap.add_argument("--non-iid", type=float, default=None,
                     help="Dirichlet alpha for per-node data skew")
@@ -104,7 +180,9 @@ def main():
 
     step, state, scfg, graph = build_trainer(
         cfg, args.algo, args.nodes, args.H, args.lr, args.quantize,
-        args.nonblocking, args.graph, args.seed, args.h_mode)
+        args.nonblocking, args.graph, args.seed, args.h_mode,
+        gossip_impl=args.gossip_impl, pool_size=args.pool_size,
+        overlap=args.overlap)
     rng_np = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed + 1)
     h_max = scfg.h_max if scfg.h_mode == "geometric" else scfg.H
@@ -116,7 +194,9 @@ def main():
         batch = {k: jnp.asarray(v.reshape(args.nodes, h_max, args.batch,
                                           args.seq))
                  for k, v in nb.items()}
-        perm = jnp.asarray(sample_matching(graph, rng_np))
+        perm = jnp.asarray(sample_gossip_perm(scfg, graph, rng_np, args.seed)
+                           if args.algo == "swarm" else
+                           sample_matching(graph, rng_np))
         h = jnp.asarray(sample_h_counts(scfg, rng_np))
         key, sub = jax.random.split(key)
         state, m = step(state, batch, perm, h, sub)

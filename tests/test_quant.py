@@ -45,6 +45,51 @@ def test_decode_fails_gracefully_beyond_distance_criterion():
     assert float(jnp.max(jnp.abs(x_hat - x))) > 0.1  # wrapped, not silent
 
 
+def test_failure_event_wrap_bounded_and_counted():
+    """DESIGN.md §2.1: a pair violating the distance criterion
+    |x - y| >= 2^(bits-1)·s decodes with a WRAPPED, bounded result (the
+    analysis' O(1/T²) failure event — never a crash or a blow-up), and the
+    simulator's failure counter records it."""
+    from repro.core.simulator import (SimConfig, _quantize_modular,
+                                      quadratic_problem, run_simulation)
+    from repro.core.graph import make_graph
+
+    bits, res = 8, 1e-3
+    half = 1 << (bits - 1)
+    rng = np.random.default_rng(0)
+    x = np.full((64,), 1.0)
+    y = np.zeros((64,))                       # |x - y| = 1.0 >= 128 * 1e-3
+    assert np.max(np.abs(x - y)) >= half * res
+    x_hat, failed = _quantize_modular(x, y, res, bits, rng)
+    assert failed                             # the event is detected
+    assert np.isfinite(x_hat).all()           # no crash, no NaN/inf
+    # the wrap lands within the half-lattice of the RECEIVER's model: the
+    # decode is wrong about x but bounded, |x_hat - y| <= (half+1)·s
+    assert np.max(np.abs(x_hat - y)) <= (half + 1) * res
+    # ... and wrong about x by ~ the full wrap distance (loud, not silent)
+    assert np.max(np.abs(x_hat - x)) > 0.5
+
+    # jax engine decode wraps identically boundedly
+    cfg = ModularQuantConfig(bits=bits, block=32, resolution=res)
+    q, s = encode_modular(cfg, jnp.asarray(x, jnp.float32),
+                          jnp.asarray(y, jnp.float32), jax.random.PRNGKey(0))
+    xh = decode_modular(cfg, q, s, jnp.asarray(y, jnp.float32))
+    assert float(jnp.max(jnp.abs(xh))) <= (half + 1) * res
+
+    # end-to-end: widely spread initial models + tiny resolution force
+    # failure events; the counter increments and the run stays finite
+    n, d = 8, 16
+    g = make_graph("complete", n)
+    grad_fn, loss_fn, gom, _ = quadratic_problem(d, n, noise=0.05)
+    x0 = np.random.default_rng(1).normal(size=(n, d)) * 2.0  # spread >> 128·s
+    tr = run_simulation(g, x0, grad_fn,
+                        SimConfig(H=2, eta=0.01, quantize=True,
+                                  quant_bits=bits, quant_resolution=res,
+                                  seed=0), T=60, record_every=10)
+    assert tr.quant_failures > 0
+    assert np.isfinite(tr.gamma).all()
+
+
 def test_payload_is_8bit_per_coordinate():
     cfg = ModularQuantConfig(bits=8, block=256)
     assert payload_bytes(cfg, 1 << 20) == (1 << 20) + 4096 * 4
