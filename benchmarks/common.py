@@ -35,7 +35,8 @@ class BenchSetup:
 
 
 def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
-          h_mode="fixed", gossip_impl=None, pool_size=4, overlap=False):
+          h_mode="fixed", gossip_impl=None, pool_size=4, overlap=False,
+          h_max=8):
     """Bench trainer = the ACTUAL launch/train.py build_trainer on the
     reduced bench transformer (one construction path, not a copy), with the
     bench quant config (safety 16 keeps the decode distance criterion valid
@@ -47,7 +48,7 @@ def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
         cfg, algo, setup.n_nodes, setup.H, setup.lr, quantize=quantize,
         nonblocking=nonblocking, graph_kind=setup.graph, seed=setup.seed,
         h_mode=h_mode, gossip_impl=gossip_impl, pool_size=pool_size,
-        overlap=overlap, quant=ModularQuantConfig(safety=16.0))
+        overlap=overlap, h_max=h_max, quant=ModularQuantConfig(safety=16.0))
     ds = SyntheticLMDataset(
         DataConfig(vocab_size=cfg.vocab_size, seq_len=setup.seq,
                    seed=setup.seed), n_nodes=setup.n_nodes)
@@ -59,7 +60,7 @@ def run_steps(setup, algo, steps, **kw):
     cfg, graph, scfg, step, state, ds = build(setup, algo, **kw)
     rng_np = np.random.default_rng(setup.seed)
     key = jax.random.PRNGKey(setup.seed + 1)
-    h_max = scfg.h_max if scfg.h_mode == "geometric" else scfg.H
+    h_max = scfg.h_loop_bound
     swarm = algo == "swarm"
     losses, gammas, times = [], [], []
     for t in range(steps):

@@ -17,6 +17,10 @@ results/bench/. Paper mapping:
   t9_async         — DESIGN.md §Pipeline: blocking vs overlapped
                      (double-buffered) non-blocking superstep, quantized
                      ppermute_pool transport
+  t10_sched        — DESIGN.md §Sched: discrete-event scheduler —
+                     predicted vs simulated wall-clock per rate profile,
+                     bridged-engine training on heterogeneous traces,
+                     uniform profile bit-exact vs the plain engine
 """
 from __future__ import annotations
 
@@ -417,11 +421,137 @@ def t9_async(quick=False):
     return out
 
 
+def t10_sched(quick=False):
+    """DESIGN.md §Sched: the discrete-event scheduler end to end — for
+    each rate profile, generate a Poisson trace, compile it to masked
+    supersteps, run the bridged engine (training still works under
+    heterogeneous participation), and report the wall-clock cost model's
+    predicted (closed-form) vs simulated (event-replay) end-to-end time
+    for blocking / non-blocking / overlap. The uniform (synchronous)
+    profile is the anchor: its bridged trajectory must equal the plain
+    unscheduled engine BIT-EXACTLY (asserted here)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import BenchSetup, build, run_steps
+    from repro.core.graph import make_graph
+    from repro.data import make_node_batches
+    from repro.sched import (RateProfile, StragglerConfig, bin_trace,
+                             cost_params_from_model, engine_inputs,
+                             generate_trace, predict_all_modes,
+                             synchronous_trace, trace_stats)
+
+    steps = 8 if quick else 25
+    setup = BenchSetup()
+    n = setup.n_nodes
+    graph = make_graph("complete", n)
+    h_max_async = 8
+
+    def run_binned(sched, h_mode, h_max):
+        # h_max reaches SwarmConfig through build(): the engine's loop
+        # bound, the batch depth, and the trace clip all share one value
+        cfg, g, scfg, step, state, ds = build(setup, "swarm", h_mode=h_mode,
+                                              h_max=h_max)
+        assert scfg.h_max == h_max or h_mode == "fixed"
+        key = jax.random.PRNGKey(setup.seed + 1)
+        losses, gammas, times = [], [], []
+        for s in range(sched.n_supersteps):
+            nb = make_node_batches(ds, s, setup.batch * h_max)
+            batch = {k: jnp.asarray(v.reshape(n, h_max, setup.batch,
+                                              setup.seq))
+                     for k, v in nb.items()}
+            perm, h, mask = engine_inputs(sched, s, scfg.gossip_impl)
+            key, sub = jax.random.split(key)
+            t0 = time.time()
+            state, m = step(state, batch, jnp.asarray(perm),
+                            jnp.asarray(h), sub, jnp.asarray(mask))
+            m = jax.device_get(m)
+            times.append(time.time() - t0)
+            losses.append(float(m["loss"]))
+            gammas.append(float(m.get("gamma", 0.0)))
+        return cfg, losses, gammas, times
+
+    profiles = {
+        "uniform": dict(kind="sync"),
+        "lognormal": dict(kind="lognormal", sigma=0.8),
+        "straggler": dict(kind="lognormal", sigma=0.5,
+                          straggler=StragglerConfig(fraction=0.25,
+                                                    slowdown=8.0)),
+    }
+    if not quick:
+        profiles["uniform_async"] = dict(kind="uniform")
+
+    out = {}
+    cost = cost_q8 = None
+    uniform_losses = None
+    for name, spec in profiles.items():
+        if spec["kind"] == "sync":
+            trace = synchronous_trace(graph, steps, H=setup.H,
+                                      rng=np.random.default_rng(setup.seed))
+            h_mode, h_max = "fixed", setup.H
+        else:
+            trace = generate_trace(
+                graph, RateProfile(spec["kind"],
+                                   sigma=spec.get("sigma", 0.5)),
+                steps * (n // 2), H=setup.H, h_max=h_max_async,
+                seed=setup.seed,
+                straggler=spec.get("straggler", StragglerConfig()))
+            h_mode, h_max = "trace", h_max_async
+        sched = bin_trace(trace)
+        cfg, losses, gammas, times = run_binned(sched, h_mode, h_max)
+        if name == "uniform":
+            uniform_losses = (losses, gammas)
+        if cost is None:
+            cost = cost_params_from_model(cfg, seq_len=setup.seq,
+                                          local_batch=setup.batch)
+            cost_q8 = cost_params_from_model(cfg, seq_len=setup.seq,
+                                             local_batch=setup.batch,
+                                             quantize=True)
+        pred = predict_all_modes(trace, cost)
+        pred_q8 = predict_all_modes(trace, cost_q8)
+        stats = {k: v for k, v in trace_stats(trace).items()
+                 if not isinstance(v, list)}
+        out[name] = {
+            "n_events": trace.n_events,
+            "n_supersteps": sched.n_supersteps,
+            "density": sched.density(),
+            "trace_stats": stats,
+            "final_loss": float(np.mean(losses[-5:])),
+            "host_us_per_superstep": float(np.mean(times[2:]) * 1e6)
+            if len(times) > 2 else float("nan"),
+            "walltime_fp32": pred,
+            "walltime_q8": pred_q8,
+        }
+        emit(f"t10_sched/{name}", out[name]["host_us_per_superstep"],
+             f"bins={sched.n_supersteps};density={sched.density():.2f};"
+             f"effH={stats['effective_H']:.2f};"
+             f"final_loss={out[name]['final_loss']:.4f};"
+             f"pred_blocking_s={pred['blocking']['predicted_s']:.4g};"
+             f"sim_blocking_s={pred['blocking']['simulated_s']:.4g};"
+             f"nb_speedup={pred['speedup_nonblocking_vs_blocking']:.2f}x")
+
+    # the synchronous uniform profile must reproduce the PLAIN engine
+    # trajectory bit-exactly (same matchings, same batches, full masks):
+    # gamma is a pure function of the param trajectory, so equality of the
+    # gamma series IS trajectory bit-exactness
+    plain = run_steps(setup, "swarm", steps)
+    exact = plain["gamma"] == uniform_losses[1] and \
+        plain["loss"] == uniform_losses[0]
+    out["uniform"]["bit_exact_vs_plain"] = bool(exact)
+    emit("t10_sched/uniform_bit_exact", 0.0, f"ok={exact}")
+    assert exact, "uniform sync profile must be bit-exact with the plain " \
+        "superstep engine"
+    save("t10_sched", out)
+    return out
+
+
 TABLES = {
     "t1": t1_convergence, "t2": t2_localsteps, "t3": t3_quantization,
     "t4": t4_comm_cost, "t5": t5_potential, "t6": t6_nonblocking,
     "t7": t7_roofline, "t8": t8_topology, "t8_transport": t8_transport,
-    "t9": t9_node_scaling, "t9_async": t9_async,
+    "t9": t9_node_scaling, "t9_async": t9_async, "t10_sched": t10_sched,
 }
 
 

@@ -20,6 +20,21 @@ def _flatten_with_names(tree):
     return leaves, paths[1]
 
 
+def _jsonable(obj):
+    """Metadata sanitizer: numpy scalars/arrays → plain Python, so callers
+    can drop host-side state (e.g. the scheduler's clock state,
+    `PoissonClocks.state_dict()`) into checkpoint metadata verbatim."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
+
+
 def save_checkpoint(path: str, tree: Any, metadata: dict | None = None):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     leaves, treedef = _flatten_with_names(tree)
@@ -36,7 +51,7 @@ def save_checkpoint(path: str, tree: Any, metadata: dict | None = None):
         "names": [n for n, _ in leaves],
         "dtypes": dtypes,
         "treedef": str(treedef),
-        "metadata": metadata or {},
+        "metadata": _jsonable(metadata or {}),
     }
     with open(path + ".json", "w") as f:
         json.dump(meta, f, indent=1)

@@ -3,7 +3,10 @@
 from repro.core.bucket import (  # noqa: F401
     BucketLayout, build_layout, pack, unpack,
 )
-from repro.core.graph import Graph, make_graph, sample_matching  # noqa: F401
+from repro.core.graph import (  # noqa: F401
+    Graph, irregular_graph, make_graph, sample_matching,
+    sample_weighted_matching,
+)
 from repro.core.potential import gamma_potential, mean_model  # noqa: F401
 from repro.core.swarm import (  # noqa: F401
     SwarmConfig, SwarmState, make_swarm_step, pipeline_epilogue,

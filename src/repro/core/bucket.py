@@ -132,12 +132,19 @@ def unpack(layout: BucketLayout, buf: jax.Array):
 
 
 def gossip_flat_exact(buf, perm, matched=None):
-    """(buf + buf[perm]) / 2 — ONE gather over one tensor. `perm` is an
-    involution with fixed points at unmatched nodes, and (x + x) * 0.5 == x
-    bitwise for every finite float, so no matched-mask pass is needed
-    (`matched` is accepted for signature parity and ignored)."""
-    del matched
-    return (buf + buf[perm]) * 0.5
+    """(buf + buf[perm]) / 2 — ONE gather over one tensor. With
+    `matched=None` no mask pass is needed: `perm` is an involution with
+    fixed points at unmatched nodes, and (x + x) * 0.5 == x bitwise for
+    every finite float. A non-None `matched` (bool [n_nodes]) additionally
+    gates the landing — the scheduler bridge uses this to run PARTIAL
+    matchings whose perm entries may pair nodes that did not interact this
+    bin (pool/static-matching transports; sched/bridge.py). For a full
+    mask the `where` selects bitwise-identical values, so the masked path
+    reproduces the unmasked trajectory exactly."""
+    avg = (buf + buf[perm]) * 0.5
+    if matched is None:
+        return avg
+    return jnp.where(matched[:, None], avg, buf)
 
 
 def encode_flat(qcfg: ModularQuantConfig, buf, prev_buf, rng, *,
@@ -265,11 +272,15 @@ def permute_payload_pool(payload, mesh, node_axes, pool, pool_idx,
 def gossip_flat_ppermute(buf, mesh, node_axes, pairs, *,
                          quant: Optional[ModularQuantConfig] = None,
                          prev_buf=None, rng=None, backend=None,
-                         tile_rows: int = DEFAULT_TILE_ROWS):
+                         tile_rows: int = DEFAULT_TILE_ROWS, mask=None):
     """shard_map collective-permute over the flat buffer: ONE ppermute per
     payload tensor (fp32 buffer exact; uint8 q + fp32 scales quantized) —
     vs one per pytree leaf in the legacy transport. `pairs` is a STATIC
-    involution [(src, dst), ...] over node/shard indices."""
+    involution [(src, dst), ...] over node/shard indices. `mask` (bool
+    [n_nodes/n_shards], dynamic) further gates which of the static pairs
+    land this superstep — the scheduler bridge's partial-participation
+    hook: the wire permute still runs (static HLO), unmasked receivers
+    keep their own model."""
     from jax.sharding import PartitionSpec as P
     from repro.kernels import ops as K
 
@@ -283,6 +294,8 @@ def gossip_flat_ppermute(buf, mesh, node_axes, pairs, *,
         # all nodes on one shard: the permute degenerates to a local gather
         perm_j = jnp.asarray(perm_arr)
         matched = jnp.asarray(perm_arr != np.arange(len(perm_arr)))
+        if mask is not None:
+            matched = matched & mask
         if quant is None:
             return gossip_flat_exact(buf, perm_j, matched)
         return gossip_flat_quantized(quant, buf, prev_buf, perm_j, matched,
@@ -294,38 +307,52 @@ def gossip_flat_ppermute(buf, mesh, node_axes, pairs, *,
     full_pairs = [(int(s), int(d)) for s, d in pairs]
     matched_np = perm_arr != np.arange(n_shards)
 
-    def exact(x):
+    def _local_mask(idx, mk):
+        m = jnp.asarray(matched_np)[idx]
+        return m if mk is None else m & mk.reshape(-1)[idx]
+
+    def exact(x, mk=None):
         xh = jax.lax.ppermute(x, axis, full_pairs)     # the ONE collective
-        m = jnp.asarray(matched_np)[jax.lax.axis_index(axis)]
+        m = _local_mask(jax.lax.axis_index(axis), mk)
         return jnp.where(m, (x + xh) * 0.5, x)
 
-    def quantized(x, pv, key):
+    def quantized(x, pv, key, mk=None):
         idx = jax.lax.axis_index(axis)
         q, s = encode_flat(quant, x, pv, jax.random.fold_in(key, idx),
                            tile_rows=tile_rows, backend=backend)
         qp = jax.lax.ppermute(q, axis, full_pairs)     # payload tensor 1
         sp = jax.lax.ppermute(s, axis, full_pairs)     # payload tensor 2
-        m = jnp.asarray(matched_np)[idx]
+        m = _local_mask(idx, mk)
         m_rows = jnp.broadcast_to(m, (q.shape[0],))
         return K.decode_avg(qp, sp, x, matched=m_rows, block=quant.block,
                             bits=quant.bits, tile_rows=tile_rows,
                             backend=backend)
 
     if quant is None:
-        fn = shard_map_compat(exact, mesh, in_specs=(spec,), out_specs=spec)
-        return fn(buf)
-    fn = shard_map_compat(quantized, mesh, in_specs=(spec, spec, P()),
+        if mask is None:
+            fn = shard_map_compat(exact, mesh, in_specs=(spec,),
+                                  out_specs=spec)
+            return fn(buf)
+        fn = shard_map_compat(exact, mesh, in_specs=(spec, P()),
+                              out_specs=spec)
+        return fn(buf, mask)
+    if mask is None:
+        fn = shard_map_compat(quantized, mesh, in_specs=(spec, spec, P()),
+                              out_specs=spec)
+        return fn(buf, prev_buf, rng)
+    fn = shard_map_compat(quantized, mesh, in_specs=(spec, spec, P(), P()),
                           out_specs=spec)
-    return fn(buf, prev_buf, rng)
+    return fn(buf, prev_buf, rng, mask)
 
 
 def gossip_flat_ppermute_pool(buf, mesh, node_axes, pool, pool_idx, *,
                               quant: Optional[ModularQuantConfig] = None,
                               prev_buf=None, rng=None, backend=None,
-                              tile_rows: int = DEFAULT_TILE_ROWS):
+                              tile_rows: int = DEFAULT_TILE_ROWS, mask=None):
     """lax.switch over a static matching pool; each branch holds ONE
     collective over the flat buffer (vs one per leaf per branch legacy —
-    the K×L → K collective collapse that cuts compile time)."""
+    the K×L → K collective collapse that cuts compile time). `mask` gates
+    which of the selected matching's pairs land (sched/bridge.py bins)."""
 
     def branch(perm_arr):
         pairs = pairs_from_perm(perm_arr)
@@ -334,7 +361,7 @@ def gossip_flat_ppermute_pool(buf, mesh, node_axes, pool, pool_idx, *,
             return gossip_flat_ppermute(b, mesh, node_axes, pairs,
                                         quant=quant, prev_buf=prev_buf,
                                         rng=rng, backend=backend,
-                                        tile_rows=tile_rows)
+                                        tile_rows=tile_rows, mask=mask)
         return g
 
     return jax.lax.switch(pool_idx, [branch(p) for p in pool], buf)

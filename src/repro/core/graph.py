@@ -9,8 +9,8 @@ the superstep-parallel equivalent of the paper's single-edge Poisson clock.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Tuple
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -20,30 +20,57 @@ class Graph:
     name: str
     n: int
     edges: np.ndarray          # [m, 2] int32, i < j
-    r: int                     # degree (regular)
+    r: int                     # degree (max degree when irregular)
     lambda2: float             # 2nd smallest Laplacian eigenvalue
+    degrees: Optional[np.ndarray] = field(default=None, compare=False)
+    # per-node degrees; only carried for irregular graphs (None == regular)
 
     @property
     def m(self) -> int:
         return len(self.edges)
 
+    @property
+    def is_regular(self) -> bool:
+        return self.degrees is None
 
-def _finalize(name: str, n: int, edge_set) -> Graph:
+
+def _finalize(name: str, n: int, edge_set, *,
+              require_regular: bool = True) -> Graph:
     edges = np.array(sorted({(min(a, b), max(a, b)) for a, b in edge_set
                              if a != b}), np.int32)
     deg = np.zeros(n, np.int64)
     for a, b in edges:
         deg[a] += 1
         deg[b] += 1
-    if not (deg == deg[0]).all():
-        raise ValueError(f"{name}: graph not regular (degrees {set(deg)})")
+    regular = bool((deg == deg[0]).all()) if n else True
+    if not regular and require_regular:
+        raise ValueError(
+            f"{name}: graph not regular (degrees {sorted(set(deg.tolist()))})."
+            " The paper's convergence bound assumes an r-regular G and the"
+            " uniform matching sampler relies on it; for heterogeneous"
+            " (irregular) interaction graphs build with"
+            " irregular_graph(...) / _finalize(require_regular=False) and"
+            " sample with sample_weighted_matching, which weights edges"
+            " instead of assuming symmetric degrees (sched/clocks.py does"
+            " this for heterogeneous-rate traces).")
+    if np.any(deg == 0):
+        raise ValueError(f"{name}: isolated node(s) {np.nonzero(deg == 0)[0]}"
+                         " — every node needs at least one gossip partner")
     L = np.zeros((n, n))
     L[np.arange(n), np.arange(n)] = deg
     for a, b in edges:
         L[a, b] -= 1
         L[b, a] -= 1
     ev = np.linalg.eigvalsh(L)
-    return Graph(name, n, edges, int(deg[0]), float(ev[1]))
+    return Graph(name, n, edges, int(deg.max()), float(ev[1]),
+                 None if regular else deg)
+
+
+def irregular_graph(name: str, n: int, edge_set) -> Graph:
+    """Entry point for heterogeneous (non-regular) interaction graphs —
+    the scheduler's straggler/failure scenarios naturally produce them.
+    Validates connectivity-by-degree and carries per-node `degrees`."""
+    return _finalize(name, n, edge_set, require_regular=False)
 
 
 def complete(n: int) -> Graph:
@@ -156,4 +183,43 @@ def sample_matching(graph: Graph, rng: np.random.Generator,
         pairs = [pairs[i] for i in idx]
     for a, b in pairs:
         perm[a], perm[b] = b, a
+    return perm
+
+
+def sample_weighted_matching(graph: Graph, rng: np.random.Generator,
+                             edge_weights: np.ndarray,
+                             dead: "np.ndarray | None" = None) -> np.ndarray:
+    """Non-uniform (weight-proportional) random matching — the degree- and
+    rate-tolerant sampler for heterogeneous graphs and schedules.
+
+    Greedy over a weighted random edge order (Efraimidis–Spirakis keys:
+    sorting by u^(1/w) samples without replacement with probability
+    proportional to w), so heavier edges enter the matching first — the
+    matching-level analogue of the scheduler's weighted partner choice
+    (`sched/clocks.py`), usable on irregular graphs where the uniform
+    sampler's equal-marginal argument (which needs regularity) breaks.
+    With uniform weights this reduces to `sample_matching`'s distribution.
+    """
+    w = np.asarray(edge_weights, np.float64)
+    if w.shape != (graph.m,):
+        raise ValueError(f"edge_weights shape {w.shape} != ({graph.m},): one"
+                         " weight per graph edge (graph.edges order)")
+    if not np.all(np.isfinite(w)) or np.any(w < 0):
+        raise ValueError("edge_weights must be finite and >= 0")
+    if w.sum() <= 0:
+        raise ValueError("edge_weights sum to 0 — no edge can be sampled")
+    keys = np.where(w > 0, rng.random(graph.m) ** (1.0 / np.maximum(w, 1e-300)),
+                    -1.0)
+    order = np.argsort(-keys)
+    perm = np.arange(graph.n, dtype=np.int32)
+    used = np.zeros(graph.n, bool)
+    if dead is not None:
+        used |= np.asarray(dead, bool)
+    for e in order:
+        if keys[e] < 0:        # zero-weight edges never match
+            break
+        a, b = graph.edges[e]
+        if not used[a] and not used[b]:
+            used[a] = used[b] = True
+            perm[a], perm[b] = b, a
     return perm

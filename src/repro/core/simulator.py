@@ -143,14 +143,15 @@ def run_simulation(graph: Graph, x0: np.ndarray, grad_fn: Callable,
 
 def run_superstep_oracle(x0: np.ndarray, grad_fn: Callable, perms, H: int,
                          eta: float, nonblocking: bool = False,
-                         dtype=np.float32) -> np.ndarray:
+                         dtype=np.float32, h_schedule=None,
+                         masks=None) -> np.ndarray:
     """Sequential numpy replay of the engine's superstep semantics
     (`core/swarm.py`), the reference side of the simulator↔engine parity
-    oracle (tests/test_async_pipeline.py).
+    oracle (tests/test_async_pipeline.py, tests/test_sched_parity.py).
 
     Unlike `run_simulation` — the paper's one-edge-at-a-time process — this
-    models the engine's synchronous-superstep parallelization: EVERY node
-    runs exactly H local SGD steps, then the given matching `perm` (an
+    models the engine's synchronous-superstep parallelization: every node
+    runs its local SGD steps, then the given matching `perm` (an
     involution over nodes, identity at unmatched nodes) averages matched
     pairs. With ``nonblocking=True`` it applies the engine's Algorithm-2
     staleness of depth exactly ONE interaction: the partner contribution is
@@ -163,6 +164,12 @@ def run_superstep_oracle(x0: np.ndarray, grad_fn: Callable, perms, H: int,
     which is exactly what both the plain non-blocking and the overlapped
     (double-buffered) engine supersteps compute in exact mode.
 
+    Heterogeneous traces (the scheduler bridge, sched/bridge.py):
+    `h_schedule` ([T, n] int — per-node local-step counts, 0 = idle;
+    defaults to the homogeneous `H` everywhere) and `masks` ([T, n] bool —
+    participation; the effective matching is `(perm != arange) & mask`,
+    defaults to all-True) replay the engine's masked superstep exactly.
+
     grad_fn(x, node, t, q) -> gradient for `node` at superstep t, local
     step q (must be deterministic for step-for-step parity). Computation is
     carried in `dtype` (fp32 to match the engine). Returns the [T, n, d]
@@ -174,11 +181,15 @@ def run_superstep_oracle(x0: np.ndarray, grad_fn: Callable, perms, H: int,
     traj = []
     for t, perm in enumerate(perms):
         perm = np.asarray(perm)
+        h_t = np.full(n, H, np.int64) if h_schedule is None \
+            else np.asarray(h_schedule[t])
         S = X.copy()
         for i in range(n):
-            for q in range(H):
+            for q in range(int(h_t[i])):
                 X[i] = X[i] - eta * np.asarray(grad_fn(X[i], i, t, q), dtype)
         matched = perm != np.arange(n)
+        if masks is not None:
+            matched = matched & np.asarray(masks[t], bool)
         if nonblocking:
             new_x = (S + S[perm]) * dtype(0.5) + (X - S)
         else:
@@ -186,6 +197,47 @@ def run_superstep_oracle(x0: np.ndarray, grad_fn: Callable, perms, H: int,
         X = np.where(matched[:, None], new_x, X).astype(dtype)
         traj.append(X.copy())
     return np.stack(traj)
+
+
+def run_events_oracle(x0: np.ndarray, grad_fn: Callable, pairs, hs,
+                      event_bin, eta: float, nonblocking: bool = False,
+                      dtype=np.float32) -> np.ndarray:
+    """One-event-at-a-time replay of a scheduler trace — the ground truth
+    the bridge's binned execution is validated against.
+
+    For each event e with endpoints (i, j) and accrued step counts
+    (h_i, h_j): both endpoints run their local steps from their current
+    models, then average — blocking: post-step models; non-blocking:
+    pre-step models with each side's fresh delta on top (the Algorithm-2 /
+    superstep-start staleness the engine implements). Because events within
+    a bridge bin are node-disjoint, this sequential replay computes exactly
+    the same values as the binned superstep oracle above when grads are
+    indexed identically — `event_bin` (from `BinnedSchedule`) maps each
+    event to its superstep so grad_fn(x, node, bin, q) draws the same data
+    the engine's batched input would. Returns the [E, n, d] post-event
+    trajectory.
+    """
+    X = x0.astype(dtype).copy()
+    eta = dtype(eta)
+    traj = []
+    for e, (i, j) in enumerate(np.asarray(pairs)):
+        i, j = int(i), int(j)
+        t = int(event_bin[e])
+        Si, Sj = X[i].copy(), X[j].copy()
+        for q in range(int(hs[e][0])):
+            X[i] = X[i] - eta * np.asarray(grad_fn(X[i], i, t, q), dtype)
+        for q in range(int(hs[e][1])):
+            X[j] = X[j] - eta * np.asarray(grad_fn(X[j], j, t, q), dtype)
+        if nonblocking:
+            base = (Si + Sj) * dtype(0.5)
+            X[i] = base + (X[i] - Si)
+            X[j] = base + (X[j] - Sj)
+        else:
+            avg = (X[i] + X[j]) * dtype(0.5)
+            X[i] = avg.copy()
+            X[j] = avg.copy()
+        traj.append(X.copy())
+    return np.stack(traj) if traj else np.zeros((0,) + X.shape, dtype)
 
 
 # ---------------------------------------------------------------------------

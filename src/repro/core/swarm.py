@@ -57,8 +57,10 @@ Identity = lambda x, kind: x  # noqa: E731
 class SwarmConfig:
     n_nodes: int
     H: int = 2                   # (mean) local steps per interaction
-    h_mode: str = "fixed"        # fixed | geometric
-    h_max: int = 8               # static loop bound for geometric sampling
+    h_mode: str = "fixed"        # fixed | geometric | trace (h supplied by
+    # the scheduler bridge, sched/bridge.py — any non-"fixed" mode bounds
+    # the local-step loop by h_max instead of H)
+    h_max: int = 8               # static loop bound for variable h modes
     nonblocking: bool = False    # Algorithm 2 semantics
     overlap: bool = False        # pipelined non-blocking superstep: the
     # encoded payload of interaction t is carried in SwarmState.inflight and
@@ -80,6 +82,14 @@ class SwarmConfig:
     gossip_impl: str = field(default_factory=lambda: os.environ.get(
         "REPRO_DEFAULT_GOSSIP_IMPL", "gather"))
     pool_size: int = 8
+
+    @property
+    def h_loop_bound(self) -> int:
+        """Static bound of the local-step fori_loop (and the batch's
+        per-superstep depth): H for fixed h, h_max for the variable modes
+        (geometric sampling / scheduler traces). THE single source of
+        truth — engine, driver, and benchmarks all resolve through it."""
+        return self.H if self.h_mode == "fixed" else self.h_max
 
 
 @dataclass
@@ -318,11 +328,23 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
                     lr_fn: Callable, shard: Callable = Identity, *,
                     mesh=None, param_specs=None, node_axes=None,
                     static_pairs=None, matching_pool=None):
-    """Returns superstep(state, batch, perm, h_counts, rng) -> (state, metrics).
+    """Returns superstep(state, batch, perm, h_counts, rng, mask=None)
+    -> (state, metrics).
 
     loss_fn(params, microbatch) -> scalar; batch leaves are
     [n_nodes, h_max, local_batch, ...]; perm: [n_nodes] int32 involution;
-    h_counts: [n_nodes] int32 (# local steps this superstep, <= h_max).
+    h_counts: [n_nodes] int32 (# local steps this superstep, <= h_max;
+    0 = node idle this superstep).
+
+    `mask` (optional bool [n_nodes]) is the scheduler bridge's
+    participation gate (sched/bridge.py): the effective matching is
+    `(perm != arange) & mask`, so the static-matching transports (ppermute,
+    ppermute_pool — whose wire pairs are compiled in) can land a PARTIAL
+    matching: every pair still exchanges on the wire, but only pairs whose
+    endpoints interacted this bin average. With mask=None (default) or an
+    all-True mask the computation is bitwise identical to the unmasked
+    engine. Supported on the flat transports and the gather_legacy oracle;
+    the per-leaf ppermute legacy oracles reject it.
 
     gossip_impl="ppermute" additionally needs (mesh, node_axes,
     static_pairs): the exchange is a shard_map collective-permute with a
@@ -337,7 +359,7 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
     pipeline_prologue) and dispatches that payload's collective before the
     local-step loop — see DESIGN.md §Pipeline.
     """
-    h_max = cfg.h_max if cfg.h_mode == "geometric" else cfg.H
+    h_max = cfg.h_loop_bound
     legacy = cfg.gossip_impl.endswith("_legacy")
     base_impl = cfg.gossip_impl[:-len("_legacy")] if legacy \
         else cfg.gossip_impl
@@ -398,7 +420,22 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
             return stacked_pool[pool_idx], pool_idx
         return perm, None
 
-    def pipelined_superstep(state: SwarmState, batch, perm, h_counts, rng):
+    def _metrics(losses, matched, mask, lr):
+        # masked runs report the loss over PARTICIPANTS (idle lanes carry
+        # zeros); the unmasked mean is kept bitwise for mask=None
+        if mask is None:
+            loss = jnp.mean(losses)
+        else:
+            loss = jnp.sum(jnp.where(mask, losses, 0.0)) / \
+                jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
+        return {
+            "loss": loss,
+            "lr": lr,
+            "matched_frac": jnp.mean(matched.astype(jnp.float32)),
+        }
+
+    def pipelined_superstep(state: SwarmState, batch, perm, h_counts, rng,
+                            mask=None):
         """Software-pipelined STEADY STATE (cfg.overlap; DESIGN.md
         §Pipeline). The payload of interaction t was packed/encoded at the
         end of superstep t-1 and rides in `state.inflight`; here its wire
@@ -417,6 +454,8 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         layout = B.build_layout(S, block=cfg.quant.block)
         node_perm, pool_idx = resolve_node_perm(perm)
         matched = node_perm != jnp.arange(cfg.n_nodes)
+        if mask is not None:
+            matched = matched & mask
 
         # 1. dispatch the in-flight payload's collective FIRST
         payload = (infl["q"], infl["s"]) if cfg.quantize else (infl["sbuf"],)
@@ -465,22 +504,26 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         else:
             new_infl = {"sbuf": new_buf}
 
-        metrics = {
-            "loss": jnp.mean(losses),
-            "lr": lr,
-            "matched_frac": jnp.mean(matched.astype(jnp.float32)),
-        }
+        metrics = _metrics(losses, matched, mask, lr)
         if cfg.track_potential:
             metrics["gamma"] = gamma_potential(params)
         return SwarmState(params, opt, None, state.step + 1,
                           new_infl), metrics
 
-    def superstep(state: SwarmState, batch, perm, h_counts, rng):
+    def superstep(state: SwarmState, batch, perm, h_counts, rng, mask=None):
+        if mask is not None and base_impl != "gather" and \
+                (legacy or (cfg.quantize and cfg.quant.bits > 8)):
+            raise NotImplementedError(
+                "participation masks are supported on the flat transports "
+                "and the gather_legacy oracle only; the per-leaf ppermute "
+                "legacy oracles bake a full static matching")
         lr = lr_fn(state.step)
         S = state.params                       # superstep-start models
         params, opt, losses = run_local_steps(state, batch, h_counts, lr)
         node_perm, _ = resolve_node_perm(perm)
         matched = node_perm != jnp.arange(cfg.n_nodes)
+        if mask is not None:
+            matched = matched & mask
 
         def exchange(tree, use_quant: bool):
             """Average each node's `tree` entry with its partner's — over
@@ -509,15 +552,16 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
                 buf = (B.gossip_flat_quantized(cfg.quant, buf, pbuf, perm,
                                                matched, rng)
                        if use_quant else
-                       B.gossip_flat_exact(buf, perm, matched))
+                       B.gossip_flat_exact(
+                           buf, perm, matched if mask is not None else None))
             elif base_impl == "ppermute":
                 buf = B.gossip_flat_ppermute(
                     buf, mesh, node_axes, static_pairs, quant=quant,
-                    prev_buf=pbuf, rng=rng)
+                    prev_buf=pbuf, rng=rng, mask=mask)
             else:
                 buf = B.gossip_flat_ppermute_pool(
                     buf, mesh, node_axes, matching_pool, perm.reshape(-1)[0],
-                    quant=quant, prev_buf=pbuf, rng=rng)
+                    quant=quant, prev_buf=pbuf, rng=rng, mask=mask)
             return B.unpack(layout, buf)
 
         if cfg.nonblocking:
@@ -555,11 +599,7 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
                     matched.reshape((-1,) + (1,) * (p.ndim - 1)), p, pv),
                 state.prev, src)
 
-        metrics = {
-            "loss": jnp.mean(losses),
-            "lr": lr,
-            "matched_frac": jnp.mean(matched.astype(jnp.float32)),
-        }
+        metrics = _metrics(losses, matched, mask, lr)
         if cfg.track_potential:
             metrics["gamma"] = gamma_potential(params)
         return SwarmState(params, opt, new_prev, state.step + 1), metrics
@@ -591,5 +631,9 @@ def sample_h_counts(cfg: SwarmConfig, rng) -> "np.ndarray":  # noqa: F821
     import numpy as np
     if cfg.h_mode == "fixed":
         return np.full((cfg.n_nodes,), cfg.H, np.int32)
-    h = rng.geometric(1.0 / cfg.H, size=cfg.n_nodes)
-    return np.clip(h, 1, cfg.h_max).astype(np.int32)
+    if cfg.h_mode == "geometric":
+        h = rng.geometric(1.0 / cfg.H, size=cfg.n_nodes)
+        return np.clip(h, 1, cfg.h_max).astype(np.int32)
+    raise ValueError(
+        f"h_mode={cfg.h_mode!r}: per-node counts come from the scheduler "
+        "bridge (sched/bridge.py engine_inputs), not from sampling")

@@ -36,7 +36,7 @@ def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
                   graph_kind: str = "complete", seed: int = 0,
                   h_mode: str = "fixed", momentum: float = 0.9,
                   gossip_impl: str = None, pool_size: int = 8,
-                  overlap: bool = False,
+                  overlap: bool = False, h_max: int = 8,
                   quant: ModularQuantConfig = None):
     graph = make_graph(graph_kind, n_nodes)
     opt = make_optimizer("sgd", lr=lr, momentum=momentum,
@@ -45,7 +45,8 @@ def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
     lr_fn = lambda s: lr  # noqa: E731
 
     if algo == "swarm":
-        skw = dict(n_nodes=n_nodes, H=H, h_mode=h_mode, quantize=quantize,
+        skw = dict(n_nodes=n_nodes, H=H, h_mode=h_mode, h_max=h_max,
+                   quantize=quantize,
                    nonblocking=nonblocking or overlap, overlap=overlap,
                    quant=quant or ModularQuantConfig(), pool_size=pool_size)
         if gossip_impl is not None:
@@ -103,6 +104,118 @@ def _gossip_kwargs(scfg: SwarmConfig, graph, seed: int,
     return kw
 
 
+def parse_straggler(spec: "str | None"):
+    """--straggler FRAC:SLOWDOWN[:FAIL_RATE:FAIL_DURATION] -> StragglerConfig.
+    e.g. "0.25:10" = slowest quarter of the nodes 10x slower;
+    "0.25:10:0.01:5" additionally fails nodes at rate 0.01/unit-time for 5
+    units (sched/clocks.py failure injection)."""
+    from repro.sched import StragglerConfig
+    if not spec:
+        return StragglerConfig()
+    parts = [float(x) for x in spec.split(":")]
+    if len(parts) not in (2, 4):
+        raise ValueError(f"--straggler {spec!r}: want FRAC:SLOWDOWN"
+                         "[:FAIL_RATE:FAIL_DURATION]")
+    kw = dict(fraction=parts[0], slowdown=parts[1])
+    if len(parts) == 4:
+        kw.update(fail_rate=parts[2], fail_duration=parts[3])
+    return StragglerConfig(**kw)
+
+
+def build_schedule(args, graph, scfg):
+    """--rate-profile plumbing: generate the event trace and compile it to
+    a binned engine schedule (DESIGN.md §Sched). Returns (schedule, trace,
+    clocks) — clocks is None for the synchronous uniform profile, whose
+    trace reproduces the plain driver's matchings (and therefore its
+    trajectory) bit-exactly on a complete graph."""
+    from repro import sched as S
+    tseed = args.trace_seed if args.trace_seed is not None else args.seed
+    if scfg.gossip_impl not in ("gather", "gather_legacy"):
+        raise ValueError(
+            "--rate-profile drives the engine through arbitrary per-bin "
+            "matchings, which only the gather transports accept from the "
+            "driver; the ppermute/pool transports run heterogeneous traces "
+            "via sched.bridge (pool_edges/static pairs restriction — see "
+            "tests/test_sched_parity.py)")
+    if args.rate_profile == "uniform":
+        if graph.name != "complete" or graph.n % 2:
+            # bit-exactness with the unscheduled driver needs every
+            # sampled matching to be PERFECT (unmatched nodes still run
+            # H local steps in the plain engine but accrue none in the
+            # event model) — only complete graphs with even n guarantee
+            # that. The schedule itself is still valid.
+            print(json.dumps({"sched_warning":
+                              "uniform profile is bit-exact with "
+                              "--rate-profile none only on a complete "
+                              f"graph with even n (got {graph.name}, "
+                              f"n={graph.n})"}))
+        rng = np.random.default_rng(tseed)
+        trace = S.synchronous_trace(graph, args.steps, H=args.H, rng=rng)
+        # persist the matching stream's rng so a resumed run continues
+        # the SAME matching sequence (sched_checkpoint_meta)
+        trace.meta["matching_rng"] = rng.bit_generator.state
+        clocks = None
+    else:
+        kind = "uniform" if args.rate_profile == "uniform_async" \
+            else args.rate_profile
+        profile = S.RateProfile(kind, sigma=args.rate_sigma)
+        straggler = parse_straggler(args.straggler)
+        clocks = S.PoissonClocks(graph, profile.make_rates(args.nodes, tseed),
+                                 tseed, straggler)
+        n_events = args.steps * max(1, args.nodes // 2)
+        trace = S.generate_trace(graph, profile, n_events, H=args.H,
+                                 h_max=scfg.h_max, h_mode="rate",
+                                 seed=tseed, clocks=clocks)
+    return S.bin_trace(trace), trace, clocks
+
+
+def sched_checkpoint_meta(args, trace, clocks) -> dict:
+    """JSON-serializable scheduler state for checkpoint metadata: restoring
+    `clocks` via PoissonClocks.from_state + `last_t` into generate_trace
+    continues the exact event sequence (tests/test_sched.py)."""
+    return {
+        "profile": args.rate_profile,
+        "rate_sigma": args.rate_sigma,
+        "trace_seed": args.trace_seed if args.trace_seed is not None
+        else args.seed,
+        "straggler": args.straggler,
+        "n_nodes": args.nodes,
+        "n_events_done": int(trace.n_events),
+        "clocks": clocks.state_dict() if clocks is not None else None,
+        "last_t": trace.meta.get("last_t"),
+        "matching_rng": trace.meta.get("matching_rng"),
+    }
+
+
+def restore_sched_clocks(meta: dict, graph):
+    """Inverse of `sched_checkpoint_meta`: rebuild the event source from
+    checkpoint metadata so a continued run generates the SAME sequence the
+    uninterrupted run would have (bit-for-bit; asserted in
+    tests/test_sched.py). Returns (clocks, last_t, matching_rng):
+    asynchronous profiles get (PoissonClocks, last_t, None) — feed both to
+    `generate_trace(..., clocks=..., last_t=...)`; the synchronous uniform
+    profile gets (None, None, rng) — feed the rng to
+    `synchronous_trace(..., rng=...)`."""
+    from repro.sched import PoissonClocks, RateProfile
+    if meta.get("clocks") is None:
+        rng = None
+        if meta.get("matching_rng") is not None:
+            rng = np.random.default_rng(int(meta["trace_seed"]))
+            rng.bit_generator.state = meta["matching_rng"]
+        return None, None, rng
+    kind = "uniform" if meta["profile"] == "uniform_async" \
+        else meta["profile"]
+    profile = RateProfile(kind, sigma=meta.get("rate_sigma", 0.5))
+    seed = int(meta["trace_seed"])
+    rates = profile.make_rates(int(meta["n_nodes"]), seed)
+    clocks = PoissonClocks.from_state(
+        meta["clocks"], graph, rates, seed,
+        straggler=parse_straggler(meta.get("straggler")))
+    last_t = np.asarray(meta["last_t"]) if meta.get("last_t") is not None \
+        else None
+    return clocks, last_t, None
+
+
 def static_ppermute_matching(graph, seed: int) -> "np.ndarray":
     """THE static involution the plain-ppermute transport is compiled
     against — shared by _gossip_kwargs (which bakes it into the collective)
@@ -136,6 +249,9 @@ def main():
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--H", type=int, default=2)
     ap.add_argument("--h-mode", default="fixed", choices=["fixed", "geometric"])
+    ap.add_argument("--h-max", type=int, default=8,
+                    help="static local-step loop bound for variable h modes "
+                         "(geometric sampling / scheduler traces)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=4, help="per node per local step")
     ap.add_argument("--seq", type=int, default=128)
@@ -156,6 +272,30 @@ def main():
                     help="K precompiled matchings for the ppermute_pool "
                          "lax.switch transport")
     ap.add_argument("--graph", default="complete")
+    # validate the env-provided default HERE: argparse only checks values
+    # given on the command line, so a typo'd REPRO_RATE_PROFILE would
+    # otherwise surface as a confusing failure deep inside RateProfile
+    rate_profiles = ["none", "uniform", "uniform_async", "lognormal"]
+    env_profile = os.environ.get("REPRO_RATE_PROFILE", "none")
+    if env_profile not in rate_profiles:
+        ap.error(f"REPRO_RATE_PROFILE={env_profile!r}: choose from "
+                 f"{rate_profiles}")
+    ap.add_argument("--rate-profile", "--rate_profile",
+                    default=env_profile, choices=rate_profiles,
+                    help="drive training from a discrete-event scheduler "
+                         "trace (sched/; DESIGN.md §Sched): per-node "
+                         "Poisson clocks at uniform_async/lognormal rates "
+                         "binned into masked supersteps. 'uniform' is the "
+                         "synchronous idealization (bit-exact with 'none' "
+                         "on a complete graph). Env default: "
+                         "REPRO_RATE_PROFILE")
+    ap.add_argument("--rate-sigma", type=float, default=0.5,
+                    help="lognormal rate-profile shape")
+    ap.add_argument("--straggler", default=None,
+                    help="FRAC:SLOWDOWN[:FAIL_RATE:FAIL_DURATION] straggler "
+                         "and transient-failure injection, e.g. 0.25:10")
+    ap.add_argument("--trace-seed", type=int, default=None,
+                    help="scheduler clock seed (default: --seed)")
     ap.add_argument("--non-iid", type=float, default=None,
                     help="Dirichlet alpha for per-node data skew")
     ap.add_argument("--reduced", action="store_true",
@@ -178,29 +318,57 @@ def main():
                    seed=args.seed, non_iid_alpha=args.non_iid),
         n_nodes=args.nodes)
 
+    sched_on = args.rate_profile != "none"
+    if sched_on and args.algo != "swarm":
+        raise ValueError("--rate-profile schedules the swarm engine; "
+                         "baselines run the synchronous path")
+    h_mode = args.h_mode
+    if sched_on and args.rate_profile != "uniform":
+        h_mode = "trace"           # per-node counts come from the bridge
     step, state, scfg, graph = build_trainer(
         cfg, args.algo, args.nodes, args.H, args.lr, args.quantize,
-        args.nonblocking, args.graph, args.seed, args.h_mode,
+        args.nonblocking, args.graph, args.seed, h_mode,
         gossip_impl=args.gossip_impl, pool_size=args.pool_size,
-        overlap=args.overlap)
+        overlap=args.overlap, h_max=args.h_max)
     rng_np = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed + 1)
-    h_max = scfg.h_max if scfg.h_mode == "geometric" else scfg.H
+    h_max = scfg.h_loop_bound
+
+    schedule = trace = clocks = None
+    n_steps = args.steps
+    if sched_on:
+        from repro.sched import trace_stats
+        schedule, trace, clocks = build_schedule(args, graph, scfg)
+        n_steps = schedule.n_supersteps
+        print(json.dumps({"sched": {
+            "profile": args.rate_profile, "n_events": trace.n_events,
+            "n_supersteps": n_steps, "density": schedule.density(),
+            **{k: v for k, v in trace_stats(trace).items()
+               if not isinstance(v, list)}}}))
 
     history = []
     t0 = time.time()
-    for t in range(args.steps):
+    for t in range(n_steps):
         nb = make_node_batches(ds, t, args.batch * h_max)
         batch = {k: jnp.asarray(v.reshape(args.nodes, h_max, args.batch,
                                           args.seq))
                  for k, v in nb.items()}
-        perm = jnp.asarray(sample_gossip_perm(scfg, graph, rng_np, args.seed)
-                           if args.algo == "swarm" else
-                           sample_matching(graph, rng_np))
-        h = jnp.asarray(sample_h_counts(scfg, rng_np))
+        if sched_on:
+            from repro.sched import engine_inputs
+            perm_np, h_np, mask_np = engine_inputs(schedule, t,
+                                                   scfg.gossip_impl)
+            perm, h = jnp.asarray(perm_np), jnp.asarray(h_np)
+            mask = jnp.asarray(mask_np)
+        else:
+            perm = jnp.asarray(
+                sample_gossip_perm(scfg, graph, rng_np, args.seed)
+                if args.algo == "swarm" else sample_matching(graph, rng_np))
+            h = jnp.asarray(sample_h_counts(scfg, rng_np))
+            mask = None
         key, sub = jax.random.split(key)
-        state, m = step(state, batch, perm, h, sub)
-        if t % args.log_every == 0 or t == args.steps - 1:
+        state, m = (step(state, batch, perm, h, sub, mask) if sched_on
+                    else step(state, batch, perm, h, sub))
+        if t % args.log_every == 0 or t == n_steps - 1:
             rec = {"step": t, "loss": float(m["loss"]),
                    "gamma": float(m.get("gamma", 0.0)),
                    "wall_s": round(time.time() - t0, 1)}
@@ -214,15 +382,28 @@ def main():
                 rec.update({k: float(v) for k, v in em.items()})
             history.append(rec)
             print(json.dumps(rec))
+    predicted = None
+    if sched_on:
+        # price the trace end-to-end with the wall-clock cost model —
+        # the predicted multi-node time for this (arch, transport, quant,
+        # rate profile) configuration (DESIGN.md §Sched)
+        from repro.sched import cost_params_from_model, predict_all_modes
+        cp = cost_params_from_model(cfg, seq_len=args.seq,
+                                    local_batch=args.batch,
+                                    quantize=args.quantize)
+        predicted = predict_all_modes(trace, cp)
+        print(json.dumps({"sched_cost": predicted}))
     if args.ckpt:
-        save_checkpoint(args.ckpt, jax.device_get(state.params),
-                        {"arch": cfg.name, "algo": args.algo,
-                         "steps": args.steps})
+        meta = {"arch": cfg.name, "algo": args.algo, "steps": args.steps}
+        if sched_on:
+            meta["sched"] = sched_checkpoint_meta(args, trace, clocks)
+        save_checkpoint(args.ckpt, jax.device_get(state.params), meta)
         print("checkpoint ->", args.ckpt)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
-            json.dump({"args": vars(args), "history": history}, f, indent=1)
+            json.dump({"args": vars(args), "history": history,
+                       "sched_cost": predicted}, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""Discrete-event asynchronous gossip scheduler (DESIGN.md §Sched).
+
+Generates the paper's actual stochastic process — per-node Poisson clocks
+over a (possibly heterogeneous, possibly failing) swarm — as virtual-time
+event traces, prices them with a wall-clock cost model, and compiles them
+into masked supersteps the SPMD engine executes without losing its
+vectorized form.
+"""
+from repro.sched.bridge import (  # noqa: F401
+    BinnedSchedule, bin_trace, engine_inputs, pool_edges,
+)
+from repro.sched.clocks import (  # noqa: F401
+    PoissonClocks, RateProfile, StragglerConfig, participation_rates,
+)
+from repro.sched.cost import (  # noqa: F401
+    CostParams, analytic_walltime, cost_params_from_model, predict_all_modes,
+    predict_walltime,
+)
+from repro.sched.trace import (  # noqa: F401
+    Trace, generate_trace, synchronous_trace, trace_stats,
+)

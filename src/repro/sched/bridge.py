@@ -1,0 +1,195 @@
+"""Trace → superstep compiler: run asynchronous traces on the SPMD engine.
+
+The engine (`core/swarm.py`) executes synchronous supersteps: one matching,
+all nodes, vectorized. An asynchronous trace is a *sequence of single
+events*. The bridge reconciles the two by greedy time-ordered binning:
+consecutive events are packed into a bin as long as the bin stays a
+matching (each node at most once); the bin becomes one engine superstep
+with a *participation mask* (who interacted this bin), an involution perm
+(who with whom), and *per-node h counts* (each participant's accrued local
+steps). Non-participants are masked out of both the local-step loop
+(h = 0) and the gossip average — the engine keeps its SPMD shape, idle
+lanes just carry masked work.
+
+Why binning is exact (not an approximation): events within a bin are
+node-disjoint, and a node's state only changes at its own local steps and
+interactions, so any two events in one bin commute — the binned execution
+computes the same values as the sequential event process, in both blocking
+and non-blocking (superstep-start staleness) semantics. This is asserted
+against the sequential oracle in `core/simulator.py::run_events_oracle`
+(tests/test_sched_parity.py).
+
+Transport constraints: the `gather` transport takes any per-bin involution.
+The `ppermute` transport's pairs are compiled in — bins must be subsets of
+that one static matching (generate the trace with `edges=static pairs`).
+The `ppermute_pool` transport switches between K compiled matchings — each
+bin must be a subset of ONE pool matching; `bin_trace(pool=...)` tracks the
+set of still-compatible pool indices per bin and closes the bin when it
+would become empty (generate the trace with `edges=pool_edges(pool)` so
+every single event is representable).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.sched.trace import Trace
+
+
+@dataclass
+class BinnedSchedule:
+    """Compiled engine schedule: one row per superstep (bin)."""
+    perms: np.ndarray            # [S, n] int32 involutions (identity off-bin)
+    h: np.ndarray                # [S, n] int32, 0 at non-participants
+    mask: np.ndarray             # [S, n] bool participation
+    event_bin: np.ndarray        # [E] int32 — bin id of each trace event
+    pool_idx: Optional[np.ndarray] = None   # [S] int32 (pool transport only)
+
+    @property
+    def n_supersteps(self) -> int:
+        return len(self.perms)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.perms.shape[1]
+
+    def validate(self) -> "BinnedSchedule":
+        S, n = self.perms.shape
+        idx = np.arange(n)
+        for s in range(S):
+            p = self.perms[s]
+            assert (p[p] == idx).all(), f"bin {s}: perm not an involution"
+            m = p != idx
+            assert (self.mask[s] == m).all(), f"bin {s}: mask != matched"
+            assert ((self.h[s] > 0) == m).all(), \
+                f"bin {s}: h>0 must be exactly the participants"
+        return self
+
+    def density(self) -> float:
+        """Mean fraction of nodes active per superstep — the SPMD
+        utilization the engine gets out of this trace (1.0 = today's fully
+        synchronous supersteps)."""
+        return float(self.mask.mean()) if self.mask.size else 0.0
+
+
+def _pairs_of(pool_perm: np.ndarray) -> set:
+    return {(int(min(i, j)), int(max(i, j)))
+            for i, j in enumerate(pool_perm) if i < pool_perm[i]}
+
+
+def pool_edges(pool: Sequence[np.ndarray]) -> np.ndarray:
+    """Union of a matching pool's pairs as an edge array — the interaction
+    edge set to generate pool-transport traces on (every event is then in
+    at least one pool matching)."""
+    es = set()
+    for p in pool:
+        es |= _pairs_of(np.asarray(p))
+    return np.asarray(sorted(es), np.int64)
+
+
+def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
+              static_pairs: Optional[Sequence] = None) -> BinnedSchedule:
+    """Greedy time-ordered binning of a trace into engine supersteps.
+
+    An event opens a new bin when its endpoints collide with the current
+    bin, or (pool mode) when no single pool matching contains the bin plus
+    the event. Preserves event order within each node, total interaction
+    count, and per-node step counts exactly (hypothesis property in
+    tests/test_sched.py).
+    """
+    n, E = trace.n_nodes, trace.n_events
+    if pool is not None and static_pairs is not None:
+        raise ValueError("pool and static_pairs are mutually exclusive")
+    pool_sets: Optional[List[set]] = None
+    static_set = None
+    if pool is not None:
+        pool_sets = [_pairs_of(np.asarray(p)) for p in pool]
+    if static_pairs is not None:
+        static_set = {(min(int(a), int(b)), max(int(a), int(b)))
+                      for a, b in static_pairs if int(a) != int(b)}
+
+    perms: List[np.ndarray] = []
+    hs: List[np.ndarray] = []
+    pool_ids: List[int] = []
+    event_bin = np.empty(E, np.int32)
+
+    cur_perm = np.arange(n, dtype=np.int32)
+    cur_h = np.zeros(n, np.int32)
+    cur_used = np.zeros(n, bool)
+    cur_cand = list(range(len(pool_sets))) if pool_sets is not None else None
+    cur_count = 0
+
+    def close():
+        nonlocal cur_perm, cur_h, cur_used, cur_cand, cur_count
+        if cur_count == 0:
+            return
+        perms.append(cur_perm)
+        hs.append(cur_h)
+        if pool_sets is not None:
+            pool_ids.append(cur_cand[0])
+        cur_perm = np.arange(n, dtype=np.int32)
+        cur_h = np.zeros(n, np.int32)
+        cur_used = np.zeros(n, bool)
+        cur_cand = list(range(len(pool_sets))) if pool_sets is not None \
+            else None
+        cur_count = 0
+
+    for e in range(E):
+        i, j = int(trace.pairs[e, 0]), int(trace.pairs[e, 1])
+        key = (min(i, j), max(i, j))
+        if static_set is not None and key not in static_set:
+            raise ValueError(
+                f"event {e} pair {key} is not in the static ppermute "
+                "matching — generate the trace with edges=static pairs")
+        if pool_sets is not None:
+            if not any(key in ps for ps in pool_sets):
+                raise ValueError(
+                    f"event {e} pair {key} is in no pool matching — "
+                    "generate the trace with edges=pool_edges(pool)")
+            new_cand = [k for k in cur_cand if key in pool_sets[k]]
+        else:
+            new_cand = None
+        if cur_used[i] or cur_used[j] or (new_cand is not None
+                                          and not new_cand):
+            close()
+            if pool_sets is not None:
+                new_cand = [k for k in range(len(pool_sets))
+                            if key in pool_sets[k]]
+        cur_perm[i], cur_perm[j] = j, i
+        cur_h[i], cur_h[j] = trace.h[e, 0], trace.h[e, 1]
+        cur_used[i] = cur_used[j] = True
+        if new_cand is not None:
+            cur_cand = new_cand
+        event_bin[e] = len(perms)
+        cur_count += 1
+    close()
+
+    sched = BinnedSchedule(
+        perms=np.stack(perms) if perms else np.zeros((0, n), np.int32),
+        h=np.stack(hs) if hs else np.zeros((0, n), np.int32),
+        mask=None,  # filled below
+        event_bin=event_bin,
+        pool_idx=np.asarray(pool_ids, np.int32) if pool_sets is not None
+        else None,
+    )
+    sched.mask = sched.perms != np.arange(n)[None, :]
+    return sched.validate()
+
+
+def engine_inputs(sched: BinnedSchedule, s: int, gossip_impl: str = "gather"):
+    """(perm, h, mask) arrays for superstep `s`, in the form the engine's
+    `superstep(state, batch, perm, h, rng, mask=...)` expects: the pool
+    transport takes the broadcast pool index as `perm` (its lax.switch
+    selects the compiled matching) with the bin's participation mask
+    gating which of that matching's pairs actually land."""
+    n = sched.n_nodes
+    if gossip_impl.startswith("ppermute_pool"):
+        assert sched.pool_idx is not None, \
+            "schedule was not binned with pool=...; cannot drive the pool " \
+            "transport"
+        perm = np.full((n,), sched.pool_idx[s], np.int32)
+    else:
+        perm = sched.perms[s]
+    return perm, sched.h[s], sched.mask[s]

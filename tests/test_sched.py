@@ -1,0 +1,448 @@
+"""Scheduler subsystem (sched/; DESIGN.md §Sched): clocks, traces, binning,
+cost model, weighted/irregular graph sampling, and checkpointable clock
+state. Pure host-side (numpy) except the checkpoint roundtrip.
+
+The free rate-profile parameter follows REPRO_RATE_PROFILE: unset, these
+tests run the uniform-rate clocks; the CI scheduler-path job sets
+`lognormal` to run the SAME suite over heterogeneous clocks."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.graph import (irregular_graph, make_graph, sample_matching,
+                              sample_weighted_matching)
+from repro.sched import (PoissonClocks, RateProfile, StragglerConfig,
+                         bin_trace, generate_trace, pool_edges,
+                         synchronous_trace, trace_stats)
+from repro.sched.clocks import participation_rates
+
+PROFILE = os.environ.get("REPRO_RATE_PROFILE", "uniform")
+N = 8
+
+
+def _profile():
+    return RateProfile(PROFILE if PROFILE in ("uniform", "lognormal")
+                       else "lognormal", sigma=0.8)
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+
+
+def test_rate_profiles():
+    assert (RateProfile("uniform").make_rates(N) == 1.0).all()
+    a = RateProfile("lognormal", sigma=0.7).make_rates(N, seed=3)
+    b = RateProfile("lognormal", sigma=0.7).make_rates(N, seed=3)
+    np.testing.assert_array_equal(a, b)          # deterministic per seed
+    assert abs(a.mean() - 1.0) < 1e-12 and (a > 0).all()
+    c = RateProfile("explicit", rates=tuple([1.0] * 7 + [9.0])).make_rates(N)
+    assert c[-1] / c[0] == pytest.approx(9.0)
+    with pytest.raises(ValueError):
+        RateProfile("explicit").make_rates(N)
+    with pytest.raises(ValueError):
+        RateProfile("explicit", rates=(1.0,) * 3).make_rates(N)
+    with pytest.raises(ValueError):
+        RateProfile("explicit", rates=(1.0,) * 7 + (-1.0,)).make_rates(N)
+    with pytest.raises(ValueError):
+        RateProfile("nope").make_rates(N)
+
+
+def test_straggler_config():
+    rates = np.ones(N)
+    out, mask = StragglerConfig(fraction=0.25, slowdown=10.0).apply(rates, 0)
+    assert mask.sum() == 2 and np.allclose(out[mask], 0.1) \
+        and np.allclose(out[~mask], 1.0)
+    out2, mask2 = StragglerConfig(fraction=0.25, slowdown=10.0).apply(rates, 0)
+    np.testing.assert_array_equal(mask, mask2)   # seed-deterministic
+    # heterogeneous base rates: the SLOWEST nodes straggle, as documented
+    het = np.asarray([4.0, 1.0, 0.5, 3.0, 0.25, 2.0, 5.0, 6.0])
+    _, mh = StragglerConfig(fraction=0.25, slowdown=10.0).apply(het, 1)
+    assert set(np.nonzero(mh)[0]) == {2, 4}      # rates 0.5 and 0.25
+    with pytest.raises(ValueError):
+        StragglerConfig(fraction=1.5).apply(rates, 0)
+    with pytest.raises(ValueError):
+        StragglerConfig(fraction=0.5, slowdown=0.5).apply(rates, 0)
+
+
+def test_clocks_deterministic_and_rate_biased():
+    g = make_graph("complete", N)
+    rates = RateProfile("explicit",
+                        rates=tuple([0.25] * 4 + [4.0] * 4)).make_rates(N)
+    evs1 = [PoissonClocks(g, rates, seed=5).next_event() for _ in range(1)]
+    c = PoissonClocks(g, rates, seed=5)
+    evs = [c.next_event() for _ in range(400)]
+    assert evs[0] == evs1[0]
+    part = np.zeros(N)
+    for _, i, j in evs:
+        part[i] += 1
+        part[j] += 1
+    # fast nodes (16x the clock rate) must participate far more often
+    assert part[4:].sum() > 2.0 * part[:4].sum()
+    # and the analytic participation rates predict the same ordering
+    pr = participation_rates(c)
+    assert pr[4:].min() > pr[:4].max()
+
+
+def test_clocks_failure_injection_thins():
+    g = make_graph("complete", N)
+    rates = np.ones(N)
+    c = PoissonClocks(g, rates, seed=1,
+                      straggler=StragglerConfig(fail_rate=0.5,
+                                                fail_duration=2.0))
+    for _ in range(200):
+        c.next_event()
+    assert c.n_thinned > 0                      # some rings hit a down node
+    c0 = PoissonClocks(g, rates, seed=1)        # no failures: no thinning
+    for _ in range(200):
+        c0.next_event()
+    assert c0.n_thinned == 0
+
+
+def test_clock_state_roundtrips_bit_exact():
+    """Satellite: persisted clock state resumes the exact event sequence —
+    through a JSON round trip, as checkpoint metadata stores it."""
+    g = make_graph("complete", N)
+    rates = _profile().make_rates(N, seed=7)
+    strag = StragglerConfig(fraction=0.25, slowdown=4.0, fail_rate=0.1,
+                            fail_duration=1.0)
+    full = PoissonClocks(g, rates, 7, strag)
+    evs_full = [full.next_event() for _ in range(80)]
+    c1 = PoissonClocks(g, rates, 7, strag)
+    head = [c1.next_event() for _ in range(40)]
+    state = json.loads(json.dumps(c1.state_dict()))
+    c2 = PoissonClocks.from_state(state, g, rates, 7, strag)
+    tail = [c2.next_event() for _ in range(40)]
+    assert evs_full == head + tail
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+
+def test_generate_trace_valid_and_calibrated():
+    g = make_graph("complete", N)
+    tr = generate_trace(g, _profile(), 400, H=3, h_max=12, h_mode="rate",
+                        seed=2)
+    tr.validate()
+    st = trace_stats(tr)
+    # μ calibration: rate-weighted mean h ≈ H, and saturation is rare
+    assert abs(st["effective_H"] - 3.0) < 0.5
+    assert st["h_at_max_frac"] < 0.1
+    assert st["participation_min"] >= 1
+
+
+def test_generate_trace_resumes_bit_exact():
+    """Satellite: trace generation continues bit-exactly from persisted
+    clock state + per-node accrual times (the checkpoint contents)."""
+    g = make_graph("complete", N)
+    prof = _profile()
+    rates = prof.make_rates(N, seed=9)
+    full = generate_trace(g, prof, 60, H=2, h_max=8, seed=9,
+                          clocks=PoissonClocks(g, rates, 9))
+    c = PoissonClocks(g, rates, 9)
+    head = generate_trace(g, prof, 30, H=2, h_max=8, seed=9, clocks=c)
+    state = json.loads(json.dumps(c.state_dict()))
+    c2 = PoissonClocks.from_state(state, g, rates, 9)
+    tail = generate_trace(g, prof, 30, H=2, h_max=8, seed=9, clocks=c2,
+                          last_t=np.asarray(head.meta["last_t"]))
+    np.testing.assert_array_equal(full.times,
+                                  np.concatenate([head.times, tail.times]))
+    np.testing.assert_array_equal(full.pairs,
+                                  np.concatenate([head.pairs, tail.pairs]))
+    np.testing.assert_array_equal(full.h,
+                                  np.concatenate([head.h, tail.h]))
+
+
+def test_synchronous_trace_matches_driver_matchings():
+    g = make_graph("complete", N)
+    tr = synchronous_trace(g, 6, H=2, rng=np.random.default_rng(0))
+    sched = bin_trace(tr)
+    assert sched.n_supersteps == 6 and sched.density() == 1.0
+    rng = np.random.default_rng(0)
+    for s in range(6):
+        np.testing.assert_array_equal(sched.perms[s], sample_matching(g, rng))
+        assert (sched.h[s] == 2).all()
+
+
+# ---------------------------------------------------------------------------
+# binning
+# ---------------------------------------------------------------------------
+
+
+def _counts_preserved(tr, sched):
+    n = tr.n_nodes
+    # total interaction count: two matched nodes per event
+    assert int(sched.mask.sum()) == 2 * tr.n_events
+    # per-node local-step counts preserved EXACTLY
+    steps_trace = np.zeros(n, np.int64)
+    for e in range(tr.n_events):
+        steps_trace[tr.pairs[e, 0]] += tr.h[e, 0]
+        steps_trace[tr.pairs[e, 1]] += tr.h[e, 1]
+    np.testing.assert_array_equal(sched.h.sum(axis=0), steps_trace)
+    # event order: bin ids nondecreasing, every event binned
+    assert (np.diff(sched.event_bin) >= 0).all()
+    assert sched.event_bin[-1] == sched.n_supersteps - 1
+
+
+def test_binning_preserves_counts():
+    g = make_graph("complete", N)
+    tr = generate_trace(g, _profile(), 300, H=2, h_max=8, seed=11)
+    sched = bin_trace(tr).validate()
+    _counts_preserved(tr, sched)
+
+
+def test_binning_pool_mode_bins_within_one_matching():
+    from repro.core.swarm import make_matching_pool
+    g = make_graph("complete", N)
+    pool = make_matching_pool(g, K=4, seed=0)
+    tr = generate_trace(g, _profile(), 150, H=2, h_max=8, seed=4,
+                        edges=pool_edges(pool))
+    sched = bin_trace(tr, pool=pool).validate()
+    _counts_preserved(tr, sched)
+    for s in range(sched.n_supersteps):
+        pm = np.asarray(pool[sched.pool_idx[s]])
+        active = np.nonzero(sched.mask[s])[0]
+        np.testing.assert_array_equal(sched.perms[s][active], pm[active])
+
+
+def test_binning_rejects_unrepresentable_events():
+    """Events outside the pool's pair universe are a configuration error
+    (generate the trace with edges=pool_edges(pool)), not silent drops."""
+    from repro.core.swarm import make_matching_pool
+    g = make_graph("complete", N)
+    pool = make_matching_pool(g, K=2, seed=0)
+    covered = {tuple(e) for e in pool_edges(pool).tolist()}
+    # a complete graph on 8 nodes has 28 edges; K=2 covers at most 8 — find
+    # a seed whose trace leaves the pool (any non-degenerate one does)
+    tr = generate_trace(g, _profile(), 100, H=2, h_max=8, seed=4)
+    assert any((min(int(a), int(b)), max(int(a), int(b))) not in covered
+               for a, b in tr.pairs), "trace unexpectedly inside the pool"
+    with pytest.raises(ValueError, match="pool"):
+        bin_trace(tr, pool=pool)
+
+
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), n_events=st.integers(1, 120),
+           n=st.sampled_from([4, 8, 9, 16]))
+    def test_binning_property(seed, n_events, n):
+        """Hypothesis: for ANY trace, binning preserves the total
+        interaction count and per-node step counts exactly, every bin is a
+        valid partial matching, and event order is respected."""
+        g = make_graph("complete", n)
+        tr = generate_trace(g, RateProfile("lognormal", sigma=1.0), n_events,
+                            H=2, h_max=6, seed=seed)
+        sched = bin_trace(tr).validate()
+        _counts_preserved(tr, sched)
+except ImportError:  # pragma: no cover
+    pass
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_mode_ordering_and_straggler_wait():
+    from repro.sched import CostParams, predict_all_modes, predict_walltime
+    g = make_graph("complete", N)
+    cp = CostParams(flops_per_step=1e9, hbm_bytes_per_step=1e7,
+                    payload_bytes=4_000_000)
+    slow = generate_trace(g, RateProfile("lognormal", sigma=1.0), 200, H=2,
+                          h_max=8, seed=3,
+                          straggler=StragglerConfig(fraction=0.25,
+                                                    slowdown=8.0))
+    out = predict_all_modes(slow, cp)
+    # Algorithm 2's point: no rendezvous -> never slower than blocking;
+    # overlap additionally hides the exchange -> never slower than plain
+    assert out["blocking"]["simulated_s"] >= out["nonblocking"]["simulated_s"]
+    assert out["nonblocking"]["simulated_s"] >= out["overlap"]["simulated_s"]
+    uni = generate_trace(g, RateProfile("uniform"), 200, H=2, h_max=8, seed=3)
+    # stragglers slow the blocking system down end-to-end; rendezvous
+    # removal (Algorithm 2) never hurts, and buys a real speedup when the
+    # makespan is rendezvous-skew-bound (homogeneous rates, skewed
+    # histories) rather than bound by one ultra-slow node's own compute
+    assert predict_walltime(slow, cp, mode="blocking")["total_s"] > \
+        predict_walltime(uni, cp, mode="blocking")["total_s"]
+    assert out["speedup_nonblocking_vs_blocking"] >= 1.0
+    assert predict_all_modes(uni, cp)[
+        "speedup_nonblocking_vs_blocking"] > 1.05
+    # closed form within a loose envelope of the replay
+    for mode in ("blocking", "nonblocking", "overlap"):
+        r = out[mode]["predicted_s"] / out[mode]["simulated_s"]
+        assert 0.2 < r < 5.0, (mode, r)
+
+
+def test_cost_params_price_real_payload():
+    from repro.configs import get_config, reduced
+    from repro.sched import cost_params_from_model
+    cfg = reduced(get_config("transformer-wmt"), n_layers=1, d_model=64)
+    fp32 = cost_params_from_model(cfg, seq_len=32, local_batch=2)
+    q8 = cost_params_from_model(cfg, seq_len=32, local_batch=2, quantize=True)
+    assert fp32.payload_bytes > 3.5 * q8.payload_bytes   # ~4x wire saving
+    assert fp32.flops_per_step > 0 and fp32.hbm_bytes_per_step > 0
+    assert fp32.step_time_s(0.5) == pytest.approx(2 * fp32.step_time_s(1.0))
+
+
+# ---------------------------------------------------------------------------
+# weighted / irregular graph sampling (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_matching_validation_and_support():
+    g = make_graph("complete", 6)
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        sample_weighted_matching(g, rng, np.ones(3))        # wrong shape
+    with pytest.raises(ValueError):
+        sample_weighted_matching(g, rng, -np.ones(g.m))     # negative
+    with pytest.raises(ValueError):
+        sample_weighted_matching(g, rng, np.zeros(g.m))     # all zero
+    with pytest.raises(ValueError):
+        sample_weighted_matching(g, rng, np.full(g.m, np.nan))
+    # zero-weight edges never enter the matching; result is an involution
+    w = np.ones(g.m)
+    w[:g.m // 2] = 0.0
+    banned = {tuple(e) for e in g.edges[:g.m // 2].tolist()}
+    for _ in range(25):
+        perm = sample_weighted_matching(g, rng, w)
+        assert (perm[perm] == np.arange(6)).all()
+        for i, j in enumerate(perm):
+            if i < j:
+                assert (i, int(j)) not in banned
+
+
+def test_weighted_matching_biases_toward_heavy_edges():
+    g = make_graph("complete", 4)
+    w = np.ones(g.m)
+    heavy = 0                          # edge (0, 1)
+    w[heavy] = 50.0
+    rng = np.random.default_rng(1)
+    hits = sum(sample_weighted_matching(g, rng, w)[0] == 1
+               for _ in range(200))
+    assert hits > 120                  # ~1/3 under uniform, ~>0.9 weighted
+
+
+def test_irregular_graph_error_path_and_entry_point():
+    # star graph: regular _finalize must refuse with a pointer to the
+    # irregular entry points
+    edges = [(0, i) for i in range(1, 6)]
+    with pytest.raises(ValueError, match="not regular"):
+        from repro.core.graph import _finalize
+        _finalize("star6", 6, edges)
+    g = irregular_graph("star6", 6, edges)
+    assert not g.is_regular and g.r == 5
+    np.testing.assert_array_equal(g.degrees, [5, 1, 1, 1, 1, 1])
+    assert g.lambda2 > 0               # connected
+    with pytest.raises(ValueError, match="isolated"):
+        irregular_graph("lonely", 3, [(0, 1)])
+    # the scheduler accepts irregular graphs directly
+    tr = generate_trace(g, RateProfile("uniform"), 50, H=2, h_max=4, seed=0)
+    assert trace_stats(tr)["participation_min"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integration (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_sched_state_survives_checkpoint_metadata(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint.checkpoint import load_metadata
+    g = make_graph("complete", N)
+    rates = _profile().make_rates(N, seed=3)
+    c = PoissonClocks(g, rates, 3)
+    head = generate_trace(g, _profile(), 25, H=2, h_max=8, seed=3, clocks=c)
+    meta = {"sched": {"clocks": c.state_dict(),
+                      "last_t": head.meta["last_t"],
+                      "rates": rates}}            # ndarray: sanitizer path
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.zeros(3, np.float32)}, meta)
+    restored = load_metadata(path)["sched"]
+    c2 = PoissonClocks.from_state(restored["clocks"], g,
+                                  np.asarray(restored["rates"]), 3)
+    tail = generate_trace(g, _profile(), 25, H=2, h_max=8, seed=3, clocks=c2,
+                          last_t=np.asarray(restored["last_t"]))
+    full = generate_trace(g, _profile(), 50, H=2, h_max=8, seed=3,
+                          clocks=PoissonClocks(g, rates, 3))
+    np.testing.assert_array_equal(full.pairs,
+                                  np.concatenate([head.pairs, tail.pairs]))
+    np.testing.assert_array_equal(full.h, np.concatenate([head.h, tail.h]))
+
+
+def test_driver_sched_checkpoint_roundtrip(tmp_path):
+    """Driver-level satellite: build_schedule -> sched_checkpoint_meta ->
+    checkpoint -> restore_sched_clocks continues the event sequence the
+    uninterrupted driver would have generated, bit-exactly."""
+    from types import SimpleNamespace
+
+    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint.checkpoint import load_metadata
+    from repro.core import SwarmConfig
+    from repro.launch.train import (build_schedule, restore_sched_clocks,
+                                    sched_checkpoint_meta)
+    from repro.sched import generate_trace
+
+    args = SimpleNamespace(rate_profile="lognormal", rate_sigma=0.8,
+                           trace_seed=None, seed=3, straggler="0.25:4",
+                           nodes=N, steps=10, H=2)
+    g = make_graph("complete", N)
+    scfg = SwarmConfig(n_nodes=N, H=2, h_mode="trace", h_max=8,
+                       gossip_impl="gather")
+    sched1, trace1, clocks = build_schedule(args, g, scfg)
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.zeros(2, np.float32)},
+                    {"sched": sched_checkpoint_meta(args, trace1, clocks)})
+    meta = load_metadata(path)["sched"]
+    c2, last_t, _ = restore_sched_clocks(meta, g)
+    prof = RateProfile("lognormal", sigma=0.8)
+    tail = generate_trace(g, prof, 20, H=2, h_max=scfg.h_max,
+                          h_mode="rate", seed=3, clocks=c2, last_t=last_t)
+    # uninterrupted reference: same clock construction, head + tail events
+    from repro.launch.train import parse_straggler
+    from repro.sched import PoissonClocks
+    rates = prof.make_rates(N, 3)
+    ref_clock = PoissonClocks(g, rates, 3, parse_straggler("0.25:4"))
+    full = generate_trace(g, prof, trace1.n_events + 20, H=2,
+                          h_max=scfg.h_max, h_mode="rate", seed=3,
+                          clocks=ref_clock)
+    np.testing.assert_array_equal(full.pairs[trace1.n_events:], tail.pairs)
+    np.testing.assert_array_equal(full.h[trace1.n_events:], tail.h)
+    np.testing.assert_allclose(full.times[trace1.n_events:], tail.times,
+                               rtol=0, atol=0)
+
+
+def test_driver_uniform_matching_rng_resumes_bit_exact(tmp_path):
+    """The synchronous uniform profile persists its matching-stream rng in
+    checkpoint metadata; restoring it continues the SAME matching sequence
+    the uninterrupted run would have drawn."""
+    from types import SimpleNamespace
+
+    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint.checkpoint import load_metadata
+    from repro.core import SwarmConfig
+    from repro.launch.train import (build_schedule, restore_sched_clocks,
+                                    sched_checkpoint_meta)
+
+    args = SimpleNamespace(rate_profile="uniform", rate_sigma=0.5,
+                           trace_seed=None, seed=11, straggler=None,
+                           nodes=N, steps=5, H=2)
+    g = make_graph("complete", N)
+    scfg = SwarmConfig(n_nodes=N, H=2, gossip_impl="gather")
+    _, trace1, clocks = build_schedule(args, g, scfg)
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.zeros(2, np.float32)},
+                    {"sched": sched_checkpoint_meta(args, trace1, clocks)})
+    _, _, rng = restore_sched_clocks(load_metadata(path)["sched"], g)
+    assert rng is not None
+    tail = synchronous_trace(g, 5, H=2, rng=rng)
+    ref_rng = np.random.default_rng(11)
+    full = synchronous_trace(g, 10, H=2, rng=ref_rng)
+    np.testing.assert_array_equal(full.pairs[trace1.n_events:], tail.pairs)

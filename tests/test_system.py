@@ -22,7 +22,7 @@ def _run(algo="swarm", steps=30, quantize=False, nonblocking=False,
     ds = SyntheticLMDataset(DataConfig(cfg.vocab_size, seq, seed=0), n_nodes)
     rng_np = np.random.default_rng(0)
     key = jax.random.PRNGKey(1)
-    h_max = scfg.h_max if scfg.h_mode == "geometric" else scfg.H
+    h_max = scfg.h_loop_bound
     losses = []
     for t in range(steps):
         nb = make_node_batches(ds, t, batch * h_max)
