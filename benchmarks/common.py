@@ -36,7 +36,7 @@ class BenchSetup:
 
 def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
           h_mode="fixed", gossip_impl=None, pool_size=4, overlap=False,
-          h_max=8):
+          h_max=8, rate_profile="none"):
     """Bench trainer = the ACTUAL launch/train.py build_trainer on the
     reduced bench transformer (one construction path, not a copy), with the
     bench quant config (safety 16 keeps the decode distance criterion valid
@@ -48,7 +48,8 @@ def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
         cfg, algo, setup.n_nodes, setup.H, setup.lr, quantize=quantize,
         nonblocking=nonblocking, graph_kind=setup.graph, seed=setup.seed,
         h_mode=h_mode, gossip_impl=gossip_impl, pool_size=pool_size,
-        overlap=overlap, h_max=h_max, quant=ModularQuantConfig(safety=16.0))
+        overlap=overlap, h_max=h_max, quant=ModularQuantConfig(safety=16.0),
+        rate_profile=rate_profile)
     ds = SyntheticLMDataset(
         DataConfig(vocab_size=cfg.vocab_size, seq_len=setup.seq,
                    seed=setup.seed), n_nodes=setup.n_nodes)

@@ -547,11 +547,125 @@ def t10_sched(quick=False):
     return out
 
 
+def t11_baselines(quick=False):
+    """DESIGN.md §Baselines: every algorithm on the unified exchange layer
+    under ONE lognormal rate profile — SwarmSGD vs AD-PSGD vs SGP vs
+    LocalSGD, fp32 + q8 where the capability matrix allows, each trained
+    end-to-end through the scheduler bridge (masked supersteps) with the
+    wall-clock cost model's predicted-vs-simulated end-to-end time:
+    pairwise algorithms (swarm/adpsgd/sgp) via per-event replay, the
+    bulk-synchronous LocalSGD via the per-bin global-rendezvous model.
+    Emits results/bench/t11_baselines.json (CI artifact)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import build
+    from repro.algorithms import CAPABILITIES
+    from repro.core.graph import make_graph
+    from repro.data import make_node_batches
+    from repro.sched import (RateProfile, bin_trace, bsp_payload_factor,
+                             cost_params_from_model, engine_inputs,
+                             generate_trace, predict_all_modes,
+                             predict_bsp_walltime)
+
+    steps = 8 if quick else 25
+    setup = BenchSetup()
+    n = setup.n_nodes
+    graph = make_graph("complete", n)
+    h_max_async = 8
+
+    algos = ["swarm", "adpsgd", "sgp", "localsgd"]
+    variants = [(a, q) for a in algos
+                for q in ([False, True] if CAPABILITIES[a].quantized
+                          else [False])]
+    out = {"profile": "lognormal", "sigma": 0.8, "steps": steps,
+           "n_nodes": n}
+    cost_cache = {}
+    for algo, quantize in variants:
+        caps = CAPABILITIES[algo]
+        H_eff = setup.H if caps.local_H else 1
+        h_max = h_max_async if caps.local_H else 1
+        trace = generate_trace(graph, RateProfile("lognormal", sigma=0.8),
+                               steps * (n // 2), H=H_eff, h_max=h_max,
+                               h_mode="rate", seed=setup.seed)
+        sched = bin_trace(trace)
+        cfg, g, scfg, step, state, ds = build(
+            setup, algo, quantize=quantize,
+            h_mode="trace" if caps.local_H else "fixed", h_max=h_max,
+            rate_profile="lognormal")
+        slots = scfg.h_loop_bound
+        key = jax.random.PRNGKey(setup.seed + 1)
+        losses, times = [], []
+        for s in range(sched.n_supersteps):
+            nb = make_node_batches(ds, s, setup.batch * slots)
+            batch = {k: jnp.asarray(v.reshape(n, slots, setup.batch,
+                                              setup.seq))
+                     for k, v in nb.items()}
+            perm, h, mask = engine_inputs(sched, s, scfg.gossip_impl)
+            key, sub = jax.random.split(key)
+            t0 = time.time()
+            state, m = step(state, batch, jnp.asarray(perm),
+                            jnp.asarray(h), sub, jnp.asarray(mask))
+            m = jax.device_get(m)
+            times.append(time.time() - t0)
+            losses.append(float(m["loss"]))
+        ck = quantize
+        if ck not in cost_cache:
+            cost_cache[ck] = cost_params_from_model(
+                cfg, seq_len=setup.seq, local_batch=setup.batch,
+                quantize=quantize)
+        cp = cost_cache[ck]
+        if caps.pricing == "pairwise":
+            pred = predict_all_modes(trace, cp)
+            wall = {"simulated_s": pred["blocking"]["simulated_s"],
+                    "predicted_s": pred["blocking"]["predicted_s"],
+                    "all_modes": pred}
+        else:
+            rep = predict_bsp_walltime(
+                trace, sched, cp,
+                payload_factor=bsp_payload_factor(algo, graph))
+            wall = {"simulated_s": rep["total_s"],
+                    "predicted_s": rep["analytic_s"],
+                    "wait_frac": rep["wait_frac"]}
+        name = f"{algo}_{'q8' if quantize else 'fp32'}"
+        out[name] = {
+            "pricing": caps.pricing,
+            "n_supersteps": sched.n_supersteps,
+            "density": sched.density(),
+            "final_loss": float(np.mean(losses[-5:])),
+            "host_us_per_superstep": float(np.mean(times[2:]) * 1e6)
+            if len(times) > 2 else float("nan"),
+            "walltime": wall,
+        }
+        emit(f"t11_baselines/{name}",
+             out[name]["host_us_per_superstep"],
+             f"final_loss={out[name]['final_loss']:.4f};"
+             f"bins={sched.n_supersteps};"
+             f"sim_s={wall['simulated_s']:.4g};"
+             f"pred_s={wall['predicted_s']:.4g};"
+             f"pred_over_sim="
+             f"{wall['predicted_s'] / max(wall['simulated_s'], 1e-30):.2f}")
+    # headline: predicted wall-clock of each baseline relative to swarm
+    # (same profile, same cost model — the paper's Fig 7 shape)
+    ref = out["swarm_fp32"]["walltime"]["simulated_s"]
+    for algo in algos[1:]:
+        k = f"{algo}_fp32"
+        out[f"{algo}_vs_swarm_walltime"] = \
+            out[k]["walltime"]["simulated_s"] / max(ref, 1e-30)
+        emit(f"t11_baselines/{algo}_vs_swarm", 0.0,
+             f"walltime_ratio={out[f'{algo}_vs_swarm_walltime']:.2f}x")
+    save("t11_baselines", out)
+    return out
+
+
 TABLES = {
     "t1": t1_convergence, "t2": t2_localsteps, "t3": t3_quantization,
     "t4": t4_comm_cost, "t5": t5_potential, "t6": t6_nonblocking,
     "t7": t7_roofline, "t8": t8_topology, "t8_transport": t8_transport,
     "t9": t9_node_scaling, "t9_async": t9_async, "t10_sched": t10_sched,
+    "t11_baselines": t11_baselines,
 }
 
 

@@ -2,4 +2,6 @@
 implemented as superstep factories over the same node-stacked state as
 SwarmSGD so they share the runtime, data pipeline and benchmarks.
 """
-from repro.algorithms.registry import ALGORITHMS, make_algorithm  # noqa: F401
+from repro.algorithms.registry import (  # noqa: F401
+    ALGORITHMS, CAPABILITIES, AlgoCaps, make_algorithm, validate_run_config,
+)

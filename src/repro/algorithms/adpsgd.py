@@ -1,31 +1,74 @@
 """AD-PSGD (Lian et al. [28]): asynchronous pairwise averaging with H=1 —
-one gradient step then average with a random matching partner every step.
-(= SwarmSGD with H=1, blocking; the paper's closest prior art.)"""
+one gradient step then average with a random matching partner every
+interaction. (= SwarmSGD with H=1; the paper's closest prior art.)
+
+Runs on the unified exchange layer (core/exchange.py): the pairwise
+average is the same flat-buffer `mix_pair` the swarm engine uses, so
+AD-PSGD gets the packed one-collective payload, the optional 8-bit modular
+quantization (prev comm-copy scale proxy included), non-blocking
+(Algorithm-2 style stale) averaging, and the scheduler bridge's
+participation masks — heterogeneous Poisson-clock traces drive it exactly
+like SwarmSGD (DESIGN.md §Baselines).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.algorithms.common import Identity, metrics_of, node_grad_step
-from repro.core.swarm import SwarmState, gossip_exact
+from repro.algorithms.common import (Identity, fold_batch, gated_grad_step,
+                                     metrics_of, node_grad_step,
+                                     refresh_prev)
+from repro.core.exchange import GossipTransport
+from repro.core.swarm import SwarmState
 
 
 def make_step(loss_fn, opt_update, lr_fn, n_nodes, shard=Identity,
-              track_potential: bool = True):
-    def step(state: SwarmState, batch, perm, h_counts, rng):
-        del h_counts, rng
+              track_potential: bool = True,
+              transport: GossipTransport = None,
+              quantize: bool = False, nonblocking: bool = False):
+    tr = transport or GossipTransport(n_nodes=n_nodes)
+    gs_plain = node_grad_step(loss_fn, opt_update)
+    gs_gated = gated_grad_step(loss_fn, opt_update)
+
+    def step(state: SwarmState, batch, perm, h_counts, rng, mask=None):
+        del h_counts
         lr = lr_fn(state.step)
-        gs = node_grad_step(loss_fn, opt_update)
+        S = state.params                     # pre-step models (staleness ref)
+        if mask is None:
+            params, opt, losses = jax.vmap(
+                lambda p, o, b: gs_plain(p, o, fold_batch(b), lr))(
+                    S, state.opt, batch)
+        else:
+            params, opt, losses = jax.vmap(
+                lambda p, o, b, a: gs_gated(p, o, fold_batch(b), lr, a))(
+                    S, state.opt, batch, mask)
+        node_perm, _ = tr.resolve_perm(perm)
+        matched = node_perm != jnp.arange(n_nodes)
+        if mask is not None:
+            matched = matched & mask
 
-        def one(p, o, b):
-            mb = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), b)
-            return gs(p, o, mb, lr)
-
-        params, opt, losses = jax.vmap(one)(state.params, state.opt, batch)
-        matched = perm != jnp.arange(n_nodes)
-        params = gossip_exact(params, perm, matched)
+        if nonblocking:
+            # stale averaging (the original AD-PSGD is asynchronous): the
+            # partner contribution is its PRE-STEP model, each node's fresh
+            # gradient delta rides on top — Algorithm 2 with H=1.
+            base = tr.mix_pair(S, perm, matched, quantize=quantize,
+                               prev=state.prev if quantize else None,
+                               rng=rng, mask=mask)
+            params = jax.tree.map(
+                lambda b, p, s: jnp.where(
+                    matched.reshape((-1,) + (1,) * (p.ndim - 1)),
+                    (b.astype(jnp.float32) + (p.astype(jnp.float32) -
+                                              s.astype(jnp.float32))
+                     ).astype(p.dtype), p),
+                base, params, S)
+        else:
+            params = tr.mix_pair(params, perm, matched, quantize=quantize,
+                                 prev=state.prev if quantize else None,
+                                 rng=rng, mask=mask)
         params = jax.tree.map(lambda x: shard(x, "param"), params)
-        return (SwarmState(params, opt, state.prev, state.step + 1),
-                metrics_of(params, losses, lr, track_potential,
+        new_prev = refresh_prev(state.prev, S if nonblocking else params,
+                                matched)
+        return (SwarmState(params, opt, new_prev, state.step + 1),
+                metrics_of(params, losses, lr, track_potential, mask,
                            matched_frac=jnp.mean(matched.astype(jnp.float32))))
     return step

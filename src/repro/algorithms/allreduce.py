@@ -1,38 +1,48 @@
 """Large-batch data-parallel SGD (the paper's LB-SGD baseline, tuned per
 Goyal et al. [16]): every step, gradients are averaged across ALL nodes
-(all-reduce) — the fully synchronous upper bound on communication."""
+(all-reduce) — the fully synchronous upper bound on communication.
+
+On the unified exchange layer the gradient all-reduce is the transport's
+`global_mean` over the packed gradient buffer. Under the scheduler bridge
+the mean runs over the bin's PARTICIPANTS and the averaged update is
+applied everywhere (backup-workers semantics: straggler gradients are
+dropped, consensus is preserved) — see DESIGN.md §Baselines.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.algorithms.common import Identity, metrics_of
+from repro.algorithms.common import Identity, fold_batch, metrics_of
+from repro.core.exchange import GossipTransport
 from repro.core.swarm import SwarmState
 
 
 def make_step(loss_fn, opt_update, lr_fn, n_nodes, shard=Identity,
-              track_potential: bool = True):
-    def step(state: SwarmState, batch, perm, h_counts, rng):
+              track_potential: bool = True,
+              transport: GossipTransport = None):
+    tr = transport or GossipTransport(n_nodes=n_nodes)
+    assert tr.base_impl == "gather", \
+        "AllReduce is a global gradient mean, not a pairwise permute; " \
+        "only the gather transports carry it (see DESIGN.md §Baselines)"
+
+    def step(state: SwarmState, batch, perm, h_counts, rng, mask=None):
         del perm, h_counts, rng
         lr = lr_fn(state.step)
 
         def node_loss(p, b):
             # every node contributes one microbatch; H slots are folded into
             # the batch (same tokens/superstep as swarm for fair comparison)
-            mb = jax.tree.map(
-                lambda x: x.reshape((-1,) + x.shape[2:]), b)
-            return loss_fn(p, mb)
+            return loss_fn(p, fold_batch(b))
 
         losses, grads = jax.vmap(jax.value_and_grad(node_loss))(
             state.params, batch)
-        # all-reduce: mean gradient across the node axis, applied everywhere
-        grads = jax.tree.map(
-            lambda g: jnp.broadcast_to(
-                jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True),
-                g.shape).astype(g.dtype), grads)
+        # all-reduce: mean gradient across the node axis (participants
+        # only under a schedule mask), applied everywhere
+        grads = tr.global_mean(grads, mask)
         params, opt = jax.vmap(opt_update, in_axes=(0, 0, 0, None))(
             state.params, grads, state.opt, lr)
         params = jax.tree.map(lambda x: shard(x, "param"), params)
         return (SwarmState(params, opt, state.prev, state.step + 1),
-                metrics_of(params, losses, lr, track_potential))
+                metrics_of(params, losses, lr, track_potential, mask))
     return step

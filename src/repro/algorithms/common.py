@@ -1,3 +1,13 @@
+"""Shared scaffolding for the baseline algorithms (DESIGN.md §Baselines).
+
+Every baseline is a superstep factory over the same node-stacked
+``SwarmState`` as SwarmSGD, with the same step signature
+``step(state, batch, perm, h_counts, rng, mask=None)`` — so the driver,
+the scheduler bridge (sched/bridge.py) and the benchmarks treat all
+algorithms uniformly. The exchange runs through a
+:class:`~repro.core.exchange.GossipTransport` (flat-buffer by default,
+``*_legacy`` per-leaf oracles for parity tests).
+"""
 from __future__ import annotations
 
 from typing import Callable
@@ -5,6 +15,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.exchange import make_local_steps, masked_mean_loss  # noqa: F401
 from repro.core.potential import gamma_potential
 
 Identity = lambda x, kind: x  # noqa: E731
@@ -19,8 +30,46 @@ def node_grad_step(loss_fn: Callable, opt_update: Callable):
     return f
 
 
-def metrics_of(params, losses, lr, track_potential=True, **extra):
-    m = {"loss": jnp.mean(losses), "lr": lr, **extra}
+def fold_batch(b):
+    """[n?, H, local_b, ...] node batch -> one [H*local_b, ...] microbatch
+    (the per-interaction batch of the H=1 baselines)."""
+    return jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), b)
+
+
+def gated_grad_step(loss_fn: Callable, opt_update: Callable):
+    """One vmappable, participation-gated SGD step: inactive lanes keep
+    their state and report a zero loss (the scheduler bridge's idle-lane
+    convention). With active=True the values are bitwise identical to the
+    ungated `node_grad_step`."""
+    gs = node_grad_step(loss_fn, opt_update)
+
+    def f(params_i, opt_i, mb, lr, active):
+        p2, o2, loss = gs(params_i, opt_i, mb, lr)
+        p = jax.tree.map(lambda a, b: jnp.where(active, b, a), params_i, p2)
+        o = jax.tree.map(lambda a, b: jnp.where(active, b, a), opt_i, o2)
+        return p, o, jnp.where(active, loss, 0.0)
+    return f
+
+
+# gated_local_loop IS the swarm engine's local-step loop — one definition
+# in core/exchange.py so the h-gating/loss convention cannot diverge
+gated_local_loop = make_local_steps
+
+
+def metrics_of(params, losses, lr, track_potential=True, mask=None, **extra):
+    m = {"loss": masked_mean_loss(losses, mask), "lr": lr, **extra}
     if track_potential:
         m["gamma"] = gamma_potential(params)
     return m
+
+
+def refresh_prev(prev, src, matched):
+    """Comm-copy refresh on interaction: matched nodes take `src` (the
+    value the NEXT quantized encode should measure its distance against),
+    unmatched keep their old copy — the swarm engine's rule."""
+    if prev is None:
+        return None
+    return jax.tree.map(
+        lambda pv, p: jnp.where(
+            matched.reshape((-1,) + (1,) * (p.ndim - 1)), p, pv),
+        prev, src)

@@ -1,13 +1,24 @@
 """D-PSGD (Lian et al. [27]): one SGD step, then averaging with ALL graph
 neighbors via a doubly-stochastic mixing matrix W (Metropolis weights),
-every step (H=1). The mixing is a dense [n,n] matmul over the node axis."""
+every step (H=1).
+
+On the unified exchange layer the mixing is the transport's `matrix_mix`:
+ONE dense [n, n] x [n, n_padded] matmul over the packed flat buffer
+instead of a per-leaf einsum. Under the scheduler bridge only edges whose
+BOTH endpoints are active this bin mix: W_eff = I + M (W - I) M with
+M = diag(mask), which stays symmetric doubly stochastic — inactive nodes
+are untouched, active rows renormalize onto the diagonal
+(DESIGN.md §Baselines).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.algorithms.common import Identity, metrics_of, node_grad_step
+from repro.algorithms.common import (Identity, fold_batch, gated_grad_step,
+                                     metrics_of, node_grad_step)
+from repro.core.exchange import GossipTransport
 from repro.core.graph import Graph
 from repro.core.swarm import SwarmState
 
@@ -26,27 +37,46 @@ def metropolis_weights(graph: Graph) -> np.ndarray:
     return W
 
 
-def make_step(loss_fn, opt_update, lr_fn, n_nodes, graph: Graph,
-              shard=Identity, track_potential: bool = True):
-    W = jnp.asarray(metropolis_weights(graph), jnp.float32)
+def masked_metropolis(W, mask):
+    """Mixing restricted to edges whose BOTH endpoints are active: the
+    off-diagonal is m_i m_j W_ij and every row's dropped mass folds back
+    onto its own diagonal (W_eff[i,i] = 1 - sum_{j!=i} m_i m_j W_ij), so
+    W_eff stays symmetric and doubly stochastic for every mask — inactive
+    rows are exactly identity; equals W at the all-True mask."""
+    m = mask.astype(jnp.float32)
+    eye = jnp.eye(W.shape[0], dtype=jnp.float32)
+    off = W * m[:, None] * m[None, :] * (1.0 - eye)
+    return off + jnp.diag(1.0 - off.sum(axis=1))
 
-    def step(state: SwarmState, batch, perm, h_counts, rng):
+
+def make_step(loss_fn, opt_update, lr_fn, n_nodes, graph: Graph,
+              shard=Identity, track_potential: bool = True,
+              transport: GossipTransport = None):
+    tr = transport or GossipTransport(n_nodes=n_nodes)
+    assert tr.base_impl == "gather", \
+        "D-PSGD's mixing is a dense matrix over the node axis, not a " \
+        "pairwise permute; only the gather transports carry it " \
+        "(see DESIGN.md §Baselines)"
+    W = jnp.asarray(metropolis_weights(graph), jnp.float32)
+    gs_plain = node_grad_step(loss_fn, opt_update)
+    gs_gated = gated_grad_step(loss_fn, opt_update)
+
+    def step(state: SwarmState, batch, perm, h_counts, rng, mask=None):
         del perm, h_counts, rng
         lr = lr_fn(state.step)
-        gs = node_grad_step(loss_fn, opt_update)
-
-        def one(p, o, b):
-            mb = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), b)
-            return gs(p, o, mb, lr)
-
-        params, opt, losses = jax.vmap(one, in_axes=(0, 0, 0))(
-            state.params, state.opt, batch)
-        # gossip-matrix mixing: X <- W X (einsum over the node axis)
-        params = jax.tree.map(
-            lambda x: jnp.einsum(
-                "nm,m...->n...", W, x.astype(jnp.float32)).astype(x.dtype),
-            params)
+        if mask is None:
+            params, opt, losses = jax.vmap(
+                lambda p, o, b: gs_plain(p, o, fold_batch(b), lr))(
+                    state.params, state.opt, batch)
+            W_eff = W
+        else:
+            params, opt, losses = jax.vmap(
+                lambda p, o, b, a: gs_gated(p, o, fold_batch(b), lr, a))(
+                    state.params, state.opt, batch, mask)
+            W_eff = masked_metropolis(W, mask)
+        # gossip-matrix mixing: X <- W X over the packed node axis
+        params = tr.matrix_mix(params, W_eff)
         params = jax.tree.map(lambda x: shard(x, "param"), params)
         return (SwarmState(params, opt, state.prev, state.step + 1),
-                metrics_of(params, losses, lr, track_potential))
+                metrics_of(params, losses, lr, track_potential, mask))
     return step

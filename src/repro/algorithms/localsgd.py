@@ -1,38 +1,41 @@
 """Local SGD [38, 29]: H local steps, then a FULL global average (the paper's
-Local-SGD baseline, communicating globally every H steps)."""
+Local-SGD baseline, communicating globally every H steps).
+
+On the unified exchange layer the resync is the transport's `global_mean`
+— one packed flat-buffer reduction instead of a per-leaf mean. Under the
+scheduler bridge the bin's participants run their accrued h_i local steps
+and the mean runs over PARTICIPANTS only, broadcast to everyone (the
+server-broadcast semantics of partial-participation synchronous training);
+stragglers neither contribute nor delay the round (DESIGN.md §Baselines).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.algorithms.common import Identity, metrics_of
+from repro.algorithms.common import Identity, gated_local_loop, metrics_of
+from repro.core.exchange import GossipTransport
 from repro.core.swarm import SwarmState
 
 
 def make_step(loss_fn, opt_update, lr_fn, n_nodes, H: int = 2,
-              shard=Identity, track_potential: bool = True):
-    def step(state: SwarmState, batch, perm, h_counts, rng):
-        del perm, h_counts, rng
+              shard=Identity, track_potential: bool = True,
+              transport: GossipTransport = None, h_max: int = None):
+    tr = transport or GossipTransport(n_nodes=n_nodes)
+    assert tr.base_impl == "gather", \
+        "LocalSGD's resync is a global mean, not a pairwise permute; only " \
+        "the gather transports carry it (see DESIGN.md §Baselines)"
+    bound = h_max or H
+    local = gated_local_loop(loss_fn, opt_update, bound)
+
+    def step(state: SwarmState, batch, perm, h_counts, rng, mask=None):
+        del perm, rng
         lr = lr_fn(state.step)
-
-        def local(params_i, opt_i, batch_i):
-            def body(q, carry):
-                p, o, ls = carry
-                mb = jax.tree.map(lambda x: x[q], batch_i)
-                loss, g = jax.value_and_grad(loss_fn)(p, mb)
-                p, o = opt_update(p, g, o, lr)
-                return (p, o, ls + loss)
-            p, o, ls = jax.lax.fori_loop(
-                0, H, body, (params_i, opt_i, jnp.zeros((), jnp.float32)))
-            return p, o, ls / H
-
-        params, opt, losses = jax.vmap(local)(state.params, state.opt, batch)
-        # periodic global model average (all nodes -> mean)
-        params = jax.tree.map(
-            lambda x: jnp.broadcast_to(
-                jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True),
-                x.shape).astype(x.dtype), params)
+        params, opt, losses = jax.vmap(local, in_axes=(0, 0, 0, 0, None))(
+            state.params, state.opt, batch, h_counts, lr)
+        # periodic global model average (participants -> mean -> everyone)
+        params = tr.global_mean(params, mask)
         params = jax.tree.map(lambda x: shard(x, "param"), params)
         return (SwarmState(params, opt, state.prev, state.step + 1),
-                metrics_of(params, losses, lr, track_potential))
+                metrics_of(params, losses, lr, track_potential, mask))
     return step

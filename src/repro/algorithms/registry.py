@@ -1,11 +1,117 @@
+"""Algorithm registry + per-algorithm capability matrix.
+
+Every algorithm — SwarmSGD included — is constructed through
+``make_algorithm(name, loss_fn=..., opt_update=..., lr_fn=...,
+n_nodes=..., ...)`` and returns a superstep with the uniform signature
+``step(state, batch, perm, h_counts, rng, mask=None)``.
+
+The :data:`CAPABILITIES` matrix is the single source of truth for which
+(transport, execution mode, quantization, scheduler) combination each
+algorithm supports — the driver validates a run configuration against it
+at config time (`validate_run_config`) instead of hard-coding
+"baselines run the synchronous path" (DESIGN.md §Baselines documents the
+matrix and the *why* per row).
+"""
 from __future__ import annotations
 
-from typing import Callable
+import os
+from dataclasses import dataclass
+from typing import Callable, Tuple
 
 from repro.algorithms import adpsgd, allreduce, dpsgd, localsgd, sgp
 
+
+@dataclass(frozen=True)
+class AlgoCaps:
+    """What one algorithm supports on the unified exchange layer.
+
+    transports — accepted base gossip impls (each also in its *_legacy
+                 per-leaf oracle form);
+    modes      — blocking / nonblocking / overlap execution semantics;
+    quantized  — 8-bit modular gossip supported (the pairwise decode
+                 scheme; dense/global collectives have no lattice
+                 reference, so they stay fp32);
+    sched      — runs under scheduler-bridge traces (--rate-profile):
+                 accepts the bridge's (perm, h, mask) inputs;
+    uses_matching — consumes `perm` as a pairwise matching (algorithms
+                 with fixed communication patterns ignore it);
+    local_H    — takes H > 1 local steps per superstep (H=1 algorithms
+                 interact every step and ignore h magnitudes);
+    pricing    — wall-clock cost-model family (sched/cost.py):
+                 "pairwise" = per-event replay, "bsp" = per-bin
+                 bulk-synchronous rendezvous;
+    why        — one-line rationale for the matrix row.
+    """
+    transports: Tuple[str, ...]
+    modes: Tuple[str, ...]
+    quantized: bool
+    sched: bool
+    uses_matching: bool
+    local_H: bool
+    pricing: str
+    why: str
+
+
+CAPABILITIES = {
+    "swarm": AlgoCaps(
+        ("gather", "ppermute", "ppermute_pool"),
+        ("blocking", "nonblocking", "overlap"), True, True, True, True,
+        "pairwise",
+        "the paper's method: pairwise matchings, H local steps, all "
+        "transports and modes"),
+    "adpsgd": AlgoCaps(
+        ("gather", "ppermute", "ppermute_pool"),
+        ("blocking", "nonblocking"), True, True, True, False, "pairwise",
+        "= SwarmSGD with H=1: same matchings, same pairwise average "
+        "(stale variant = the original asynchronous AD-PSGD); no overlap "
+        "pipeline (nothing to hide one grad step under)"),
+    "sgp": AlgoCaps(
+        ("gather",), ("blocking",), True, True, False, False, "pairwise",
+        "directed time-varying one-peer graph: the cyclic-shift perm "
+        "changes every step, so the static ppermute matchings cannot "
+        "carry it; push-sum (X, w) rides the payload as an extra row "
+        "group"),
+    "localsgd": AlgoCaps(
+        ("gather",), ("blocking",), False, True, False, True, "bsp",
+        "global resync (masked participants-mean under a schedule): a "
+        "mean has no pairwise permute form and no quantizer lattice "
+        "reference"),
+    "dpsgd": AlgoCaps(
+        ("gather",), ("blocking",), False, True, False, False, "bsp",
+        "dense doubly-stochastic W-mixing over the node axis (masked "
+        "Metropolis under a schedule); not pairwise, not quantizable"),
+    "allreduce": AlgoCaps(
+        ("gather",), ("blocking",), False, True, False, False, "bsp",
+        "global gradient mean applied everywhere (backup-workers drop "
+        "straggler gradients under a schedule); fully synchronous upper "
+        "bound"),
+}
+
+
+def _make_swarm(loss_fn, opt_update, lr_fn, n_nodes, H: int = 2, scfg=None,
+                shard=None, track_potential: bool = None, transport=None,
+                **gossip_kw):
+    """Route 'swarm' through the same factory signature as the baselines:
+    pass a full SwarmConfig via `scfg`, or let one be built from
+    (n_nodes, H) plus any SwarmConfig field given as a keyword."""
+    from repro.core.swarm import Identity, SwarmConfig, make_swarm_step
+    wiring = {k: gossip_kw.pop(k) for k in
+              ("mesh", "param_specs", "node_axes", "static_pairs",
+               "matching_pool") if k in gossip_kw}
+    if scfg is None:
+        if track_potential is not None:
+            gossip_kw["track_potential"] = track_potential
+        scfg = SwarmConfig(n_nodes=n_nodes, H=H, **gossip_kw)
+    elif gossip_kw or track_potential is not None:
+        raise TypeError(
+            f"pass either scfg or SwarmConfig fields, not both: "
+            f"{sorted(gossip_kw) + (['track_potential'] if track_potential is not None else [])}")
+    return make_swarm_step(scfg, loss_fn, opt_update, lr_fn,
+                           shard or Identity, transport=transport, **wiring)
+
+
 ALGORITHMS = {
-    "swarm": None,  # handled by repro.core.swarm (the paper's method)
+    "swarm": _make_swarm,          # the paper's method (repro.core.swarm)
     "allreduce": allreduce.make_step,
     "localsgd": localsgd.make_step,
     "dpsgd": dpsgd.make_step,
@@ -15,7 +121,48 @@ ALGORITHMS = {
 
 
 def make_algorithm(name: str, **kw) -> Callable:
-    if name not in ALGORITHMS or ALGORITHMS[name] is None:
-        raise ValueError(f"use make_swarm_step for 'swarm'; known baselines: "
-                         f"{[k for k, v in ALGORITHMS.items() if v]}")
+    if name not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {name!r}; known: "
+                         f"{sorted(ALGORITHMS)}")
     return ALGORITHMS[name](**kw)
+
+
+def validate_run_config(algo: str, *, gossip_impl: str = None,
+                        quantize: bool = False, nonblocking: bool = False,
+                        overlap: bool = False, rate_profile: str = "none"
+                        ) -> AlgoCaps:
+    """Config-time validation of a run against the capability matrix.
+
+    Raises ValueError with the algorithm's matrix row when the requested
+    (transport, mode, quantization, schedule) combination is unsupported;
+    returns the AlgoCaps row otherwise so callers can branch on it."""
+    if algo not in CAPABILITIES:
+        raise ValueError(f"unknown algorithm {algo!r}; known: "
+                         f"{sorted(CAPABILITIES)}")
+    caps = CAPABILITIES[algo]
+
+    def reject(what):
+        raise ValueError(
+            f"--algo {algo} does not support {what}: {algo} supports "
+            f"transports={list(caps.transports)}, modes={list(caps.modes)}, "
+            f"quantized={caps.quantized}, sched={caps.sched} "
+            f"({caps.why}). See DESIGN.md §Baselines.")
+
+    # gossip_impl=None resolves through the same env override the engine
+    # and transport use, so an env-selected transport cannot bypass the
+    # matrix (the CI legacy-oracle job rides through here)
+    if gossip_impl is None:
+        gossip_impl = os.environ.get("REPRO_DEFAULT_GOSSIP_IMPL", "gather")
+    base = gossip_impl[:-len("_legacy")] \
+        if gossip_impl.endswith("_legacy") else gossip_impl
+    if base not in caps.transports:
+        reject(f"--gossip-impl {gossip_impl}")
+    mode = "overlap" if overlap else \
+        ("nonblocking" if nonblocking else "blocking")
+    if mode not in caps.modes:
+        reject(f"the {mode} execution mode")
+    if quantize and not caps.quantized:
+        reject("--quantize (8-bit modular gossip)")
+    if rate_profile not in (None, "none") and not caps.sched:
+        reject(f"--rate-profile {rate_profile}")
+    return caps

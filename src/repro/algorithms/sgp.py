@@ -1,7 +1,26 @@
 """Stochastic Gradient Push (Assran et al. [5]): push-sum gossip over a
 directed one-peer exponential graph. Each node maintains (X, w); every step
-it halves both and pushes one half to its out-neighbor (cyclic offset
-2^(t mod log n)); the de-biased model is X/w."""
+it averages both with its in-neighbor (cyclic offset 2^(t mod log n)); the
+de-biased model is X/w.
+
+On the unified exchange layer (core/exchange.py) the push-sum pair rides
+as ONE payload: `state.params = {"model": X, "w": w}`, so the wire
+exchange is a single flat-buffer `mix_pair` whose packed buffer carries w
+as an extra row group — and `state.prev` is simply the comm copy of that
+payload tree, exactly the swarm convention. This fixes the historical
+collision where w squatted in `state.prev` and silently conflicted with
+quantized transports that use `prev` as the lattice scale proxy
+(tests/test_baseline_parity.py::test_sgp_quantized_*).
+
+Under the scheduler bridge (partial participation) the directed push is
+gated per edge: node i averages with its in-neighbor only when BOTH are
+active this bin. The resulting mixing matrix is row-stochastic but not
+doubly stochastic — which is exactly what the push-sum weights are for:
+X and w undergo the same linear dynamics, so X_i/w_i stays a convex
+combination of the initial models and the de-biased trajectory is
+consistent under arbitrary participation patterns (weighted-gossip
+correctness, Bénézit et al.).
+"""
 from __future__ import annotations
 
 import math
@@ -9,47 +28,86 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.algorithms.common import Identity, metrics_of, node_grad_step
+from repro.algorithms.common import (Identity, fold_batch, metrics_of,
+                                     node_grad_step, refresh_prev)
+from repro.core.exchange import GossipTransport
 from repro.core.swarm import SwarmState
 
 
+def sgp_init_state(state: SwarmState, n_nodes: int,
+                   quantize: bool = False) -> SwarmState:
+    """Wrap a fresh swarm state into SGP's payload layout: params becomes
+    the push-sum pair {"model": X, "w": 1}, prev (quantized runs only) its
+    comm copy — the quantizer's distance proxy, w included."""
+    payload = {"model": state.params,
+               "w": jnp.ones((n_nodes,), jnp.float32)}
+    prev = jax.tree.map(jnp.copy, payload) if quantize else None
+    return SwarmState(payload, state.opt, prev, state.step)
+
+
+def sgp_debias(payload) -> dict:
+    """De-biased node-stacked model tree X/w from the push-sum payload
+    `{"model": X, "w": w}` — what evaluation/serving should consume."""
+    w = payload["w"]
+    return jax.tree.map(
+        lambda x: (x.astype(jnp.float32) /
+                   w.reshape((-1,) + (1,) * (x.ndim - 1))).astype(x.dtype),
+        payload["model"])
+
+
 def make_step(loss_fn, opt_update, lr_fn, n_nodes, shard=Identity,
-              track_potential: bool = True):
+              track_potential: bool = True,
+              transport: GossipTransport = None, quantize: bool = False):
+    tr = transport or GossipTransport(n_nodes=n_nodes)
+    assert tr.base_impl == "gather", \
+        "SGP's one-peer exponential graph is directed and time-varying; " \
+        "only the gather transports carry it (see DESIGN.md §Baselines)"
     log_n = max(1, int(math.log2(n_nodes)))
+    gs = node_grad_step(loss_fn, opt_update)
+    idx = jnp.arange(n_nodes)
 
-    def step(state: SwarmState, batch, perm, h_counts, rng):
-        del perm, h_counts, rng
+    def step(state: SwarmState, batch, perm, h_counts, rng, mask=None):
+        del perm, h_counts
         lr = lr_fn(state.step)
-        gs = node_grad_step(loss_fn, opt_update)
-        # push-sum weight vector rides in state.prev ({"w": [n]})
-        w = state.prev["w"]
+        X, w = state.params["model"], state.params["w"]
 
-        def one(p, o, b, wi):
+        def one(p, o, b, wi, active):
             # de-bias before the gradient step (SGP evaluates at X/w)
-            pd = jax.tree.map(lambda x: (x.astype(jnp.float32) / wi).astype(x.dtype), p)
-            mb = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), b)
-            p2, o2, loss = gs(pd, o, mb, lr)
+            pd = jax.tree.map(
+                lambda x: (x.astype(jnp.float32) / wi).astype(x.dtype), p)
+            p2, o2, loss = gs(pd, o, fold_batch(b), lr)
             # re-bias: keep the push-sum numerator consistent
-            p2 = jax.tree.map(lambda x: (x.astype(jnp.float32) * wi).astype(x.dtype), p2)
+            p2 = jax.tree.map(
+                lambda x: (x.astype(jnp.float32) * wi).astype(x.dtype), p2)
+            if active is not None:
+                p2 = jax.tree.map(lambda a, b_: jnp.where(active, b_, a),
+                                  p, p2)
+                o2 = jax.tree.map(lambda a, b_: jnp.where(active, b_, a),
+                                  o, o2)
+                loss = jnp.where(active, loss, 0.0)
             return p2, o2, loss
 
-        params, opt, losses = jax.vmap(one)(state.params, state.opt, batch, w)
-        # one-peer exponential: send to (i + 2^(t mod log n)) mod n
+        if mask is None:
+            X, opt, losses = jax.vmap(
+                lambda p, o, b, wi: one(p, o, b, wi, None))(
+                    X, state.opt, batch, w)
+        else:
+            X, opt, losses = jax.vmap(one)(X, state.opt, batch, w, mask)
+
+        # one-peer exponential: average with in-neighbor (i - 2^(t mod k))
         shift = 2 ** (state.step % log_n)
-        idx = jnp.arange(n_nodes)
-        src = (idx - shift) % n_nodes      # who pushed to me
-        params = jax.tree.map(
-            lambda x: ((x.astype(jnp.float32) + x.astype(jnp.float32)[src]) * 0.5
-                       ).astype(x.dtype), params)
-        w = (w + w[src]) * 0.5
-        params = jax.tree.map(lambda x: shard(x, "param"), params)
-        debiased = jax.tree.map(
-            lambda x: (x.astype(jnp.float32) / w.reshape((-1,) + (1,) * (x.ndim - 1))
-                       ).astype(x.dtype), params)
-        return (SwarmState(params, opt, {"w": w}, state.step + 1),
-                metrics_of(debiased, losses, lr, track_potential))
+        src = (idx - shift) % n_nodes
+        # directed edge lands only when BOTH endpoints are active this bin
+        gate = jnp.ones((n_nodes,), bool) if mask is None else mask & mask[src]
+        payload = {"model": X, "w": w}
+        mixed = tr.mix_pair(payload, src, gate, quantize=quantize,
+                            prev=state.prev, rng=rng, mask=mask)
+        w = mixed["w"]
+        params = jax.tree.map(lambda x: shard(x, "param"), mixed["model"])
+        new_payload = {"model": params, "w": w}
+        new_prev = refresh_prev(state.prev, new_payload, gate)
+        debiased = sgp_debias(new_payload)
+        return (SwarmState(new_payload, opt, new_prev, state.step + 1),
+                metrics_of(debiased, losses, lr, track_potential, mask,
+                           matched_frac=jnp.mean(gate.astype(jnp.float32))))
     return step
-
-
-def sgp_init_prev(n_nodes: int):
-    return {"w": jnp.ones((n_nodes,), jnp.float32)}

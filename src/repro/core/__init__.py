@@ -3,6 +3,10 @@
 from repro.core.bucket import (  # noqa: F401
     BucketLayout, build_layout, pack, unpack,
 )
+from repro.core.exchange import (  # noqa: F401
+    GossipTransport, make_matching_pool, static_ppermute_matching,
+    transport_from_config,
+)
 from repro.core.graph import (  # noqa: F401
     Graph, irregular_graph, make_graph, sample_matching,
     sample_weighted_matching,

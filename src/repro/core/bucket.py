@@ -193,6 +193,27 @@ def gossip_flat_quantized(qcfg: ModularQuantConfig, buf, prev_buf, perm,
                         bits=qcfg.bits, tile_rows=tile_rows, backend=backend)
 
 
+def gossip_flat_mean(buf, mask=None):
+    """(Masked) global mean over the node axis, broadcast back — the flat
+    form of LocalSGD's resync / AllReduce's gradient averaging. With `mask`
+    the mean runs over PARTICIPANTS only and is still broadcast everywhere
+    (server-broadcast semantics under the scheduler bridge)."""
+    if mask is None:
+        mu = jnp.mean(buf, axis=0, keepdims=True)
+    else:
+        w = mask.astype(jnp.float32)
+        mu = jnp.sum(w[:, None] * buf, axis=0, keepdims=True) / \
+            jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.broadcast_to(mu, buf.shape)
+
+
+def gossip_flat_matrix(W, buf):
+    """Dense mixing X <- W X over the packed buffer: ONE [n, n] x
+    [n, n_padded] matmul for the whole model (D-PSGD's Metropolis mixing)
+    instead of one einsum per pytree leaf."""
+    return jnp.einsum("nm,mk->nk", W.astype(jnp.float32), buf)
+
+
 def _perm_from_pairs(n: int, pairs):
     perm = np.arange(n)
     for s, d in pairs:

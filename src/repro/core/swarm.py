@@ -22,33 +22,35 @@ Geometric local steps (Thm 4.1's H_i ~ Geom(H)) are supported by passing
 per-node step counts h_i <= h_max and masking the loop body; fixed H
 (Thm 4.2 / non-iid) is h_i = H for all i.
 
-Transport: all gossip modes default to the *bucketed flat-buffer transport*
-(core/bucket.py, DESIGN.md §Perf): the node-stacked pytree is packed once
-per superstep into a single padded [n_nodes, n_padded] fp32 buffer, so the
-exchange is ONE collective over ONE contiguous payload — fp32 exact, or the
-packed (uint8 q, fp32 block-scales) pair through the Pallas kernel wrappers
-(kernels/ops.py: quantize_mod encode, decode_avg fused decode+avg+mask).
-The historical one-collective-per-leaf transports remain available as
-gossip_impl="gather_legacy" / "ppermute_legacy" / "ppermute_pool_legacy"
-oracles for tests and A/B benchmarks (benchmarks/run.py t8_transport).
+Transport: the exchange machinery lives in `core/exchange.py` — a
+first-class :class:`~repro.core.exchange.GossipTransport` wrapping the
+bucketed flat-buffer pack/permute/decode paths (core/bucket.py, DESIGN.md
+§Perf): the node-stacked pytree is packed once per superstep into a single
+padded [n_nodes, n_padded] fp32 buffer, so the exchange is ONE collective
+over ONE contiguous payload — fp32 exact, or the packed (uint8 q, fp32
+block-scales) pair through the Pallas kernel wrappers (kernels/ops.py).
+The same transport drives every baseline algorithm in `algorithms/`
+(DESIGN.md §Baselines). The historical one-collective-per-leaf transports
+remain available as gossip_impl="gather_legacy" / "ppermute_legacy" /
+"ppermute_pool_legacy" oracles for tests and A/B benchmarks.
 """
 from __future__ import annotations
 
 import os
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.compat import shard_map_compat
 from repro.core import bucket as B
-from repro.core.potential import gamma_potential
-from repro.models import unroll as U
-from repro.quant.schemes import (
-    ModularQuantConfig, decode_modular, encode_modular,
+from repro.core.exchange import (  # noqa: F401  (re-exports: tests import
+    GossipTransport, _avg, gossip_exact, gossip_ppermute,  # these from here)
+    gossip_ppermute_pool, gossip_quantized, make_local_steps,
+    make_matching_pool, masked_mean_loss,
 )
+from repro.core.potential import gamma_potential
+from repro.quant.schemes import ModularQuantConfig
 
 Identity = lambda x, kind: x  # noqa: E731
 
@@ -178,148 +180,6 @@ def _has_leaves(tree) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Gossip averaging variants
-# ---------------------------------------------------------------------------
-
-
-def _avg(x, xp, matched):
-    """(x + x[perm])/2 where matched, else x."""
-    out = (x.astype(jnp.float32) + xp.astype(jnp.float32)) * 0.5
-    m = matched.reshape((-1,) + (1,) * (x.ndim - 1))
-    return jnp.where(m, out.astype(x.dtype), x)
-
-
-def gossip_exact(params, perm, matched):
-    return jax.tree.map(lambda x: _avg(x, x[perm], matched), params)
-
-
-def gossip_ppermute(params, param_specs, mesh, node_axes, pairs,
-                    quant: Optional[ModularQuantConfig] = None, prev=None,
-                    rng=None):
-    """LEGACY per-leaf transport (oracle for core/bucket.py's flat buffer).
-
-    Pairwise gossip via `collective-permute` under shard_map — the direct
-    TPU analogue of the paper's MPI sendrecv exchange: each matched node
-    sends exactly ONE model copy (or its uint8 encoding) to its partner,
-    instead of the O(n)-traffic all-gather that a dynamic `x[perm]` gather
-    lowers to. `pairs` is a STATIC involution [(src, dst), ...] (production
-    uses a lax.switch over a precompiled matching pool; see DESIGN.md §Perf).
-    Issues one collective PER LEAF — the flat-buffer transport replaces this
-    with one collective per payload tensor for the whole model.
-    """
-    from jax.sharding import PartitionSpec as P
-    import numpy as np
-
-    n_nodes = 1
-    for a in node_axes:
-        n_nodes *= mesh.shape[a]
-    if not node_axes or n_nodes == 1:
-        # all nodes live on one shard (CPU runs / single-node-per-mesh):
-        # the "permute" degenerates to a local static-perm average
-        leaves = jax.tree.leaves(params)
-        n = leaves[0].shape[0]
-        perm_arr = np.arange(n)
-        for s, d in pairs:
-            perm_arr[d] = s
-        perm_j = jnp.asarray(perm_arr)
-        matched = jnp.asarray(perm_arr != np.arange(n))
-        return gossip_exact(params, perm_j, matched) if quant is None else \
-            gossip_quantized(quant, params, prev, perm_j, matched, rng)
-    perm_arr = np.arange(n_nodes)
-    for s, d in pairs:
-        perm_arr[d] = s
-    matched_np = perm_arr != np.arange(n_nodes)
-    axis = node_axes if len(node_axes) > 1 else node_axes[0]
-    full_pairs = [(int(s), int(d)) for s, d in pairs]
-
-    def per_leaf(spec):
-        def f(x, pv, key):
-            # x: local shard [n_local=1 or n/|node|, ...]
-            if quant is not None:
-                nkeys = jax.random.split(key, x.shape[0])
-                q, s = jax.vmap(partial(encode_modular, quant))(x, pv, nkeys)
-                qp = jax.lax.ppermute(q, axis, full_pairs)
-                sp = jax.lax.ppermute(s, axis, full_pairs)
-                xh = jax.vmap(partial(decode_modular, quant))(qp, sp, x)
-            else:
-                xh = jax.lax.ppermute(x, axis, full_pairs)
-            idx = jax.lax.axis_index(axis)
-            m = jnp.asarray(matched_np)[idx]
-            out = (x.astype(jnp.float32) + xh.astype(jnp.float32)) * 0.5
-            return jnp.where(m, out.astype(x.dtype), x)
-        return f
-
-    leaves, tdef = jax.tree.flatten(params)
-    specs = jax.tree.leaves(param_specs, is_leaf=lambda s: isinstance(s, P))
-    prev_leaves = jax.tree.leaves(prev) if prev is not None else [None] * len(leaves)
-    keys = (list(jax.random.split(rng, len(leaves))) if rng is not None
-            else [jnp.zeros((2,), jnp.uint32)] * len(leaves))
-    out = []
-    for x, spec, pv, key in zip(leaves, specs, prev_leaves, keys):
-        if quant is not None:
-            fn = shard_map_compat(per_leaf(spec), mesh,
-                                  in_specs=(spec, spec, P()),
-                                  out_specs=spec)
-            out.append(fn(x, pv, key))
-        else:
-            fn = shard_map_compat(
-                lambda x_: per_leaf(spec)(x_, None, None), mesh,
-                in_specs=(spec,), out_specs=spec)
-            out.append(fn(x))
-    return jax.tree.unflatten(tdef, out)
-
-
-def make_matching_pool(graph, K: int, seed: int = 0):
-    """K precompiled random matchings of G (as involution perms). Production
-    ppermute gossip selects one per superstep via lax.switch — dynamic
-    partner choice with STATIC collective-permute HLO. For a complete graph
-    and K >= n-1 this can be a 1-factorization (round-robin tournament),
-    whose uniform selection has the same single-edge marginals as the
-    paper's uniform edge sampling."""
-    import numpy as np
-    from repro.core.graph import sample_matching
-    rng = np.random.default_rng(seed)
-    return [sample_matching(graph, rng) for _ in range(K)]
-
-
-def gossip_ppermute_pool(params, param_specs, mesh, node_axes, pool,
-                         pool_idx, quant=None, prev=None, rng=None):
-    """lax.switch over a static matching pool; each branch is a
-    gossip_ppermute with its own static source-target pairs."""
-    def branch(perm_arr):
-        pairs = B.pairs_from_perm(perm_arr)
-
-        def f(p):
-            return gossip_ppermute(p, param_specs, mesh, node_axes, pairs,
-                                   quant=quant, prev=prev, rng=rng)
-        return f
-
-    return jax.lax.switch(pool_idx, [branch(p) for p in pool], params)
-
-
-def gossip_quantized(qcfg, params, prev, perm, matched, rng):
-    """LEGACY per-leaf quantized transport (oracle for the flat buffer):
-    exchange the 8-bit modular encoding instead of raw values.
-
-    Each node encodes its model against its own `prev` comm copy (the
-    sender-local distance proxy); the *uint8 payload + fp32 block scales*
-    are what move along the node axis; the receiver decodes against its own
-    model (the lattice reference) and averages.
-    """
-    leaves, tdef = jax.tree.flatten(params)
-    prev_leaves = jax.tree.leaves(prev)
-    keys = jax.random.split(rng, len(leaves))
-    out = []
-    for x, pv, key in zip(leaves, prev_leaves, keys):
-        nkeys = jax.random.split(key, x.shape[0])
-        q, s = jax.vmap(partial(encode_modular, qcfg))(x, pv, nkeys)
-        qp, sp = q[perm], s[perm]          # <- quantized payload crosses nodes
-        xh = jax.vmap(partial(decode_modular, qcfg))(qp, sp, x)
-        out.append(_avg(x, xh, matched))
-    return jax.tree.unflatten(tdef, out)
-
-
-# ---------------------------------------------------------------------------
 # Superstep factory
 # ---------------------------------------------------------------------------
 
@@ -327,7 +187,8 @@ def gossip_quantized(qcfg, params, prev, perm, matched, rng):
 def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
                     lr_fn: Callable, shard: Callable = Identity, *,
                     mesh=None, param_specs=None, node_axes=None,
-                    static_pairs=None, matching_pool=None):
+                    static_pairs=None, matching_pool=None,
+                    transport: Optional[GossipTransport] = None):
     """Returns superstep(state, batch, perm, h_counts, rng, mask=None)
     -> (state, metrics).
 
@@ -346,13 +207,12 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
     engine. Supported on the flat transports and the gather_legacy oracle;
     the per-leaf ppermute legacy oracles reject it.
 
-    gossip_impl="ppermute" additionally needs (mesh, node_axes,
-    static_pairs): the exchange is a shard_map collective-permute with a
-    STATIC matching (production: lax.switch over a matching pool).
-    All modes run on the bucketed flat-buffer transport; the "*_legacy"
-    variants keep the historical per-leaf collectives (param_specs is only
-    required for the legacy shard_map modes, which shard each leaf by its
-    own spec instead of the one flat payload).
+    The exchange runs through a :class:`GossipTransport` (core/exchange.py)
+    — pass one via `transport`, or pass the raw wiring (mesh, node_axes,
+    static_pairs / matching_pool, and param_specs for the per-leaf legacy
+    or >8-bit modes) and one is built from cfg.gossip_impl. All modes run
+    on the bucketed flat-buffer transport; the "*_legacy" variants keep the
+    historical per-leaf collectives.
 
     With cfg.overlap the returned step is the software-pipelined steady
     state: it consumes `state.inflight` (primed by swarm_init /
@@ -360,76 +220,32 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
     local-step loop — see DESIGN.md §Pipeline.
     """
     h_max = cfg.h_loop_bound
-    legacy = cfg.gossip_impl.endswith("_legacy")
-    base_impl = cfg.gossip_impl[:-len("_legacy")] if legacy \
-        else cfg.gossip_impl
-    assert base_impl in ("gather", "ppermute", "ppermute_pool"), \
+    tr = transport or GossipTransport(
+        cfg.gossip_impl, cfg.n_nodes, quant=cfg.quant, mesh=mesh,
+        node_axes=node_axes, static_pairs=static_pairs,
+        matching_pool=matching_pool, param_specs=param_specs)
+    assert tr.base_impl in ("gather", "ppermute", "ppermute_pool"), \
         cfg.gossip_impl
     # bits > 8 payloads also route to the legacy per-leaf transport (the
     # uint8 flat kernels don't carry them), so they need param_specs too
-    needs_specs = legacy or (cfg.quantize and cfg.quant.bits > 8)
+    tr.check_specs(cfg.quantize)
     if cfg.overlap:
         assert cfg.nonblocking, \
             "overlap=True pipelines Algorithm 2: set nonblocking=True"
-        assert not legacy, \
-            "the pipelined overlap mode runs on the flat transport only " \
-            "(no *_legacy per-leaf oracles)"
-        assert not (cfg.quantize and cfg.quant.bits > 8), \
-            "the in-flight payload buffer carries uint8; bits > 8 needs " \
-            "the blocking legacy transport"
-    if base_impl == "ppermute":
-        assert mesh is not None and node_axes is not None \
-            and static_pairs is not None
-        assert not needs_specs or param_specs is not None, \
-            "legacy / >8-bit ppermute gossip requires param_specs"
-    if base_impl == "ppermute_pool":
-        assert mesh is not None and node_axes is not None \
-            and matching_pool is not None
-        assert not needs_specs or param_specs is not None, \
-            "legacy / >8-bit ppermute_pool gossip requires param_specs"
+        tr.check_overlap(cfg.quantize)
 
-    def local_steps(params_i, opt_i, batch_i, h_i, lr):
-        """One node's H local SGD steps (no collectives)."""
-        def body(q, carry):
-            p, o, lsum = carry
-            mb = jax.tree.map(lambda x: x[q], batch_i)
-            loss, g = jax.value_and_grad(loss_fn)(p, mb)
-            p2, o2 = opt_update(p, g, o, lr)
-            active = q < h_i
-            p = jax.tree.map(lambda a, b: jnp.where(active, b, a), p, p2)
-            o = jax.tree.map(lambda a, b: jnp.where(active, b, a), o, o2)
-            return (p, o, lsum + jnp.where(active, loss, 0.0))
-        params_i, opt_i, lsum = U.fori_loop(
-            0, h_max, body, (params_i, opt_i, jnp.zeros((), jnp.float32)))
-        return params_i, opt_i, lsum / jnp.maximum(h_i, 1)
+    # one node's H local SGD steps (no collectives) — THE shared loop
+    # (core/exchange.py), also used by the h-consuming baselines
+    local_steps = make_local_steps(loss_fn, opt_update, h_max)
 
     def run_local_steps(state, batch, h_counts, lr):
         params, opt, losses = jax.vmap(local_steps, in_axes=(0, 0, 0, 0, None))(
             state.params, state.opt, batch, h_counts, lr)
         return jax.tree.map(lambda x: shard(x, "param"), params), opt, losses
 
-    if base_impl == "ppermute_pool":
-        import numpy as _np
-        stacked_pool = jnp.asarray(_np.stack(matching_pool))
-
-    def resolve_node_perm(perm):
-        """`perm` carries the scalar pool index in ppermute_pool mode;
-        recover the actual node->partner involution from the pool."""
-        if base_impl == "ppermute_pool":
-            pool_idx = perm.reshape(-1)[0]
-            return stacked_pool[pool_idx], pool_idx
-        return perm, None
-
     def _metrics(losses, matched, mask, lr):
-        # masked runs report the loss over PARTICIPANTS (idle lanes carry
-        # zeros); the unmasked mean is kept bitwise for mask=None
-        if mask is None:
-            loss = jnp.mean(losses)
-        else:
-            loss = jnp.sum(jnp.where(mask, losses, 0.0)) / \
-                jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
         return {
-            "loss": loss,
+            "loss": masked_mean_loss(losses, mask),
             "lr": lr,
             "matched_frac": jnp.mean(matched.astype(jnp.float32)),
         }
@@ -452,23 +268,14 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         assert infl is not None, \
             "overlap superstep needs a primed pipeline (pipeline_prologue)"
         layout = B.build_layout(S, block=cfg.quant.block)
-        node_perm, pool_idx = resolve_node_perm(perm)
+        node_perm, pool_idx = tr.resolve_perm(perm)
         matched = node_perm != jnp.arange(cfg.n_nodes)
         if mask is not None:
             matched = matched & mask
 
         # 1. dispatch the in-flight payload's collective FIRST
         payload = (infl["q"], infl["s"]) if cfg.quantize else (infl["sbuf"],)
-        if base_impl == "gather":
-            recv = tuple(B.permute_rows(x, node_perm, cfg.n_nodes)
-                         for x in payload)
-        elif base_impl == "ppermute":
-            recv = B.permute_payload_ppermute(payload, mesh, node_axes,
-                                              static_pairs, cfg.n_nodes)
-        else:
-            recv = B.permute_payload_pool(payload, mesh, node_axes,
-                                          matching_pool, pool_idx,
-                                          cfg.n_nodes)
+        recv = tr.permute_inflight(payload, perm)
 
         # 2. local steps — overlappable with the in-flight exchange
         params, opt, losses = run_local_steps(state, batch, h_counts, lr)
@@ -511,58 +318,22 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
                           new_infl), metrics
 
     def superstep(state: SwarmState, batch, perm, h_counts, rng, mask=None):
-        if mask is not None and base_impl != "gather" and \
-                (legacy or (cfg.quantize and cfg.quant.bits > 8)):
-            raise NotImplementedError(
-                "participation masks are supported on the flat transports "
-                "and the gather_legacy oracle only; the per-leaf ppermute "
-                "legacy oracles bake a full static matching")
         lr = lr_fn(state.step)
         S = state.params                       # superstep-start models
         params, opt, losses = run_local_steps(state, batch, h_counts, lr)
-        node_perm, _ = resolve_node_perm(perm)
+        node_perm, _ = tr.resolve_perm(perm)
         matched = node_perm != jnp.arange(cfg.n_nodes)
         if mask is not None:
             matched = matched & mask
 
         def exchange(tree, use_quant: bool):
-            """Average each node's `tree` entry with its partner's — over
-            the flat-buffer transport unless a *_legacy oracle (or a >8-bit
-            payload, which the uint8 flat kernels don't carry) is selected.
-            `perm` carries the scalar pool index in ppermute_pool modes."""
-            quant = cfg.quant if use_quant else None
-            prev = state.prev if use_quant else None
-            if legacy or (use_quant and cfg.quant.bits > 8):
-                if base_impl == "ppermute":
-                    return gossip_ppermute(tree, param_specs, mesh,
-                                           node_axes, static_pairs,
-                                           quant=quant, prev=prev, rng=rng)
-                if base_impl == "ppermute_pool":
-                    return gossip_ppermute_pool(
-                        tree, param_specs, mesh, node_axes, matching_pool,
-                        perm.reshape(-1)[0], quant=quant, prev=prev, rng=rng)
-                if use_quant:
-                    return gossip_quantized(cfg.quant, tree, state.prev,
-                                            perm, matched, rng)
-                return gossip_exact(tree, perm, matched)
-            layout = B.build_layout(tree, block=cfg.quant.block)
-            buf = B.pack(layout, tree)
-            pbuf = B.pack(layout, state.prev) if use_quant else None
-            if base_impl == "gather":
-                buf = (B.gossip_flat_quantized(cfg.quant, buf, pbuf, perm,
-                                               matched, rng)
-                       if use_quant else
-                       B.gossip_flat_exact(
-                           buf, perm, matched if mask is not None else None))
-            elif base_impl == "ppermute":
-                buf = B.gossip_flat_ppermute(
-                    buf, mesh, node_axes, static_pairs, quant=quant,
-                    prev_buf=pbuf, rng=rng, mask=mask)
-            else:
-                buf = B.gossip_flat_ppermute_pool(
-                    buf, mesh, node_axes, matching_pool, perm.reshape(-1)[0],
-                    quant=quant, prev_buf=pbuf, rng=rng, mask=mask)
-            return B.unpack(layout, buf)
+            """Average each node's `tree` entry with its partner's through
+            the transport (flat-buffer unless a *_legacy oracle or a >8-bit
+            payload routes per-leaf). `perm` carries the scalar pool index
+            in ppermute_pool modes."""
+            return tr.mix_pair(tree, perm, matched, quantize=use_quant,
+                               prev=state.prev if use_quant else None,
+                               rng=rng, mask=mask)
 
         if cfg.nonblocking:
             # Algorithm 2: X_i <- (S_i + X_j') / 2 + (X_i - S_i), where the

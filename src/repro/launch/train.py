@@ -19,12 +19,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.algorithms import make_algorithm
-from repro.algorithms.sgp import sgp_init_prev
+from repro.algorithms import CAPABILITIES, make_algorithm, validate_run_config
+from repro.algorithms.sgp import sgp_init_state
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config, reduced
-from repro.core import SwarmConfig, make_graph, make_swarm_step, sample_matching, swarm_init
-from repro.core.swarm import SwarmState, sample_h_counts
+from repro.core import (SwarmConfig, make_graph, sample_matching, swarm_init,
+                        transport_from_config)
+from repro.core.exchange import static_ppermute_matching  # noqa: F401
+from repro.core.swarm import sample_h_counts
 from repro.data import DataConfig, SyntheticLMDataset, make_node_batches
 from repro.models import init_params, loss_fn as model_loss
 from repro.optim import make_optimizer
@@ -37,71 +39,59 @@ def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
                   h_mode: str = "fixed", momentum: float = 0.9,
                   gossip_impl: str = None, pool_size: int = 8,
                   overlap: bool = False, h_max: int = 8,
-                  quant: ModularQuantConfig = None):
+                  quant: ModularQuantConfig = None,
+                  rate_profile: str = "none"):
+    """One construction path for EVERY algorithm (DESIGN.md §Baselines):
+    validate the requested combination against the capability matrix,
+    build ONE GossipTransport, route all algorithms — swarm included —
+    through make_algorithm with the uniform factory signature."""
+    caps = validate_run_config(algo, gossip_impl=gossip_impl,
+                               quantize=quantize, nonblocking=nonblocking,
+                               overlap=overlap, rate_profile=rate_profile)
     graph = make_graph(graph_kind, n_nodes)
     opt = make_optimizer("sgd", lr=lr, momentum=momentum,
                          state_dtype=cfg.opt_state_dtype)
     lf = lambda p, mb: model_loss(cfg, p, mb)  # noqa: E731
     lr_fn = lambda s: lr  # noqa: E731
 
-    if algo == "swarm":
-        skw = dict(n_nodes=n_nodes, H=H, h_mode=h_mode, h_max=h_max,
-                   quantize=quantize,
-                   nonblocking=nonblocking or overlap, overlap=overlap,
-                   quant=quant or ModularQuantConfig(), pool_size=pool_size)
-        if gossip_impl is not None:
-            skw["gossip_impl"] = gossip_impl
-        scfg = SwarmConfig(**skw)
-        probe = jax.eval_shape(lambda k: init_params(k, cfg),
-                               jax.random.PRNGKey(0))
-        step = make_swarm_step(scfg, lf, opt.update, lr_fn,
-                               **_gossip_kwargs(scfg, graph, seed, probe))
+    # engine-side config: H=1 algorithms (adpsgd/sgp/dpsgd/allreduce)
+    # interact every step and consume exactly one batch slot; h-consuming
+    # algorithms (swarm, localsgd) keep the variable h modes
+    if caps.local_H:
+        algo_H, algo_h_mode = H, h_mode
     else:
-        kw = dict(loss_fn=lf, opt_update=opt.update, lr_fn=lr_fn,
-                  n_nodes=n_nodes)
+        algo_H, algo_h_mode = 1, "fixed"
+    skw = dict(n_nodes=n_nodes, H=algo_H, h_mode=algo_h_mode, h_max=h_max,
+               quantize=quantize,
+               nonblocking=nonblocking or overlap, overlap=overlap,
+               quant=quant or ModularQuantConfig(), pool_size=pool_size)
+    if gossip_impl is not None:
+        skw["gossip_impl"] = gossip_impl
+    scfg = SwarmConfig(**skw)
+    probe = jax.eval_shape(lambda k: init_params(k, cfg),
+                           jax.random.PRNGKey(0))
+    transport = transport_from_config(scfg, graph, seed, probe)
+
+    kw = dict(loss_fn=lf, opt_update=opt.update, lr_fn=lr_fn,
+              n_nodes=n_nodes, transport=transport)
+    if algo == "swarm":
+        kw["scfg"] = scfg
+    else:
         if algo == "localsgd":
-            kw["H"] = H
+            kw.update(H=H, h_max=scfg.h_loop_bound)
         if algo == "dpsgd":
             kw["graph"] = graph
-        step = make_algorithm(algo, **kw)
-        scfg = SwarmConfig(n_nodes=n_nodes, H=H if algo == "localsgd" else 1)
+        if caps.quantized:
+            kw["quantize"] = quantize
+        if "nonblocking" in caps.modes:
+            kw["nonblocking"] = nonblocking
+    step = make_algorithm(algo, **kw)
 
     rng = jax.random.PRNGKey(seed)
     state = swarm_init(rng, scfg, lambda k: init_params(k, cfg), opt.init)
     if algo == "sgp":
-        state = SwarmState(state.params, state.opt, sgp_init_prev(n_nodes),
-                           state.step)
+        state = sgp_init_state(state, n_nodes, quantize)
     return jax.jit(step), state, scfg, graph
-
-
-def _gossip_kwargs(scfg: SwarmConfig, graph, seed: int,
-                   param_probe=None) -> dict:
-    """Transport plumbing for the shard_map gossip modes on the single-host
-    training mesh (one shard: the collective degenerates to a local permute;
-    the same kwargs carry a real node mesh on multi-device runs).
-    `param_probe` is an abstract single-node param tree, only needed for the
-    per-leaf legacy (or >8-bit) modes, which shard each leaf by its own
-    replicated spec."""
-    base = scfg.gossip_impl[:-len("_legacy")] \
-        if scfg.gossip_impl.endswith("_legacy") else scfg.gossip_impl
-    if base == "gather":
-        return {}
-    from jax.sharding import PartitionSpec as P
-    from repro.core.swarm import make_matching_pool
-    from repro.launch.mesh import make_mesh_compat
-    mesh = make_mesh_compat((1,), ("node",))
-    kw = dict(mesh=mesh, node_axes=())
-    if param_probe is not None:
-        kw["param_specs"] = jax.tree.map(
-            lambda x: P(*((None,) * (x.ndim + 1))), param_probe)
-    if base == "ppermute":
-        from repro.core.bucket import pairs_from_perm
-        kw["static_pairs"] = pairs_from_perm(
-            static_ppermute_matching(graph, seed))
-    else:
-        kw["matching_pool"] = make_matching_pool(graph, K=scfg.pool_size,
-                                                 seed=seed)
-    return kw
 
 
 def parse_straggler(spec: "str | None"):
@@ -122,14 +112,17 @@ def parse_straggler(spec: "str | None"):
     return StragglerConfig(**kw)
 
 
-def build_schedule(args, graph, scfg):
+def build_schedule(args, graph, scfg, caps=None):
     """--rate-profile plumbing: generate the event trace and compile it to
     a binned engine schedule (DESIGN.md §Sched). Returns (schedule, trace,
     clocks) — clocks is None for the synchronous uniform profile, whose
     trace reproduces the plain driver's matchings (and therefore its
-    trajectory) bit-exactly on a complete graph."""
+    trajectory) bit-exactly on a complete graph. `caps` (the algorithm's
+    capability row) drops the trace's local-step accrual to H=1 for the
+    algorithms that interact every step (adpsgd/sgp/dpsgd/allreduce)."""
     from repro import sched as S
     tseed = args.trace_seed if args.trace_seed is not None else args.seed
+    H_eff = args.H if caps is None or caps.local_H else 1
     if scfg.gossip_impl not in ("gather", "gather_legacy"):
         raise ValueError(
             "--rate-profile drives the engine through arbitrary per-bin "
@@ -150,7 +143,7 @@ def build_schedule(args, graph, scfg):
                               f"graph with even n (got {graph.name}, "
                               f"n={graph.n})"}))
         rng = np.random.default_rng(tseed)
-        trace = S.synchronous_trace(graph, args.steps, H=args.H, rng=rng)
+        trace = S.synchronous_trace(graph, args.steps, H=H_eff, rng=rng)
         # persist the matching stream's rng so a resumed run continues
         # the SAME matching sequence (sched_checkpoint_meta)
         trace.meta["matching_rng"] = rng.bit_generator.state
@@ -163,9 +156,9 @@ def build_schedule(args, graph, scfg):
         clocks = S.PoissonClocks(graph, profile.make_rates(args.nodes, tseed),
                                  tseed, straggler)
         n_events = args.steps * max(1, args.nodes // 2)
-        trace = S.generate_trace(graph, profile, n_events, H=args.H,
-                                 h_max=scfg.h_max, h_mode="rate",
-                                 seed=tseed, clocks=clocks)
+        trace = S.generate_trace(graph, profile, n_events, H=H_eff,
+                                 h_max=scfg.h_max if H_eff > 1 else 1,
+                                 h_mode="rate", seed=tseed, clocks=clocks)
     return S.bin_trace(trace), trace, clocks
 
 
@@ -216,12 +209,11 @@ def restore_sched_clocks(meta: dict, graph):
     return clocks, last_t, None
 
 
-def static_ppermute_matching(graph, seed: int) -> "np.ndarray":
-    """THE static involution the plain-ppermute transport is compiled
-    against — shared by _gossip_kwargs (which bakes it into the collective)
-    and sample_gossip_perm (which must feed the engine the same matching,
-    or the matched mask would disagree with the actual data movement)."""
-    return sample_matching(graph, np.random.default_rng(seed))
+# static_ppermute_matching is re-exported from repro.core.exchange (line
+# ~28): THE static involution the ppermute transport compiles against,
+# shared by transport_from_config (which bakes it into the collective) and
+# sample_gossip_perm below (which must feed the engine the same matching,
+# or the matched mask would disagree with the actual data movement).
 
 
 def sample_gossip_perm(scfg: SwarmConfig, graph, rng_np,
@@ -319,17 +311,23 @@ def main():
         n_nodes=args.nodes)
 
     sched_on = args.rate_profile != "none"
-    if sched_on and args.algo != "swarm":
-        raise ValueError("--rate-profile schedules the swarm engine; "
-                         "baselines run the synchronous path")
+    # per-algorithm capability matrix (DESIGN.md §Baselines): every
+    # algorithm that supports it runs under the scheduler bridge; the
+    # unsupported combinations fail HERE, at config time, with the matrix
+    # row in the error message
+    caps = validate_run_config(
+        args.algo, gossip_impl=args.gossip_impl, quantize=args.quantize,
+        nonblocking=args.nonblocking, overlap=args.overlap,
+        rate_profile=args.rate_profile)
     h_mode = args.h_mode
-    if sched_on and args.rate_profile != "uniform":
+    if sched_on and args.rate_profile != "uniform" and caps.local_H:
         h_mode = "trace"           # per-node counts come from the bridge
     step, state, scfg, graph = build_trainer(
         cfg, args.algo, args.nodes, args.H, args.lr, args.quantize,
         args.nonblocking, args.graph, args.seed, h_mode,
         gossip_impl=args.gossip_impl, pool_size=args.pool_size,
-        overlap=args.overlap, h_max=args.h_max)
+        overlap=args.overlap, h_max=args.h_max,
+        rate_profile=args.rate_profile)
     rng_np = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed + 1)
     h_max = scfg.h_loop_bound
@@ -338,7 +336,7 @@ def main():
     n_steps = args.steps
     if sched_on:
         from repro.sched import trace_stats
-        schedule, trace, clocks = build_schedule(args, graph, scfg)
+        schedule, trace, clocks = build_schedule(args, graph, scfg, caps)
         n_steps = schedule.n_supersteps
         print(json.dumps({"sched": {
             "profile": args.rate_profile, "n_events": trace.n_events,
@@ -362,7 +360,7 @@ def main():
         else:
             perm = jnp.asarray(
                 sample_gossip_perm(scfg, graph, rng_np, args.seed)
-                if args.algo == "swarm" else sample_matching(graph, rng_np))
+                if caps.uses_matching else sample_matching(graph, rng_np))
             h = jnp.asarray(sample_h_counts(scfg, rng_np))
             mask = None
         key, sub = jax.random.split(key)
@@ -378,20 +376,34 @@ def main():
                 ev = make_mean_model_eval(lambda p, b: mlf(cfg, p, b))
                 eb = {"tokens": jnp.asarray(nb["tokens"][0].reshape(-1, args.seq)),
                       "targets": jnp.asarray(nb["targets"][0].reshape(-1, args.seq))}
-                em = ev(state.params, eb)
+                if args.algo == "sgp":
+                    # the push-sum payload evaluates at the de-biased X/w
+                    from repro.algorithms.sgp import sgp_debias
+                    em = ev(sgp_debias(state.params), eb)
+                else:
+                    em = ev(state.params, eb)
                 rec.update({k: float(v) for k, v in em.items()})
             history.append(rec)
             print(json.dumps(rec))
     predicted = None
     if sched_on:
         # price the trace end-to-end with the wall-clock cost model —
-        # the predicted multi-node time for this (arch, transport, quant,
-        # rate profile) configuration (DESIGN.md §Sched)
-        from repro.sched import cost_params_from_model, predict_all_modes
+        # the predicted multi-node time for this (algo, arch, transport,
+        # quant, rate profile) configuration (DESIGN.md §Sched). Pairwise
+        # algorithms (swarm/adpsgd/sgp) replay per event; bulk-synchronous
+        # baselines (localsgd/dpsgd/allreduce) pay a global rendezvous +
+        # collective per bridge bin
+        from repro.sched import (bsp_payload_factor, cost_params_from_model,
+                                 predict_all_modes, predict_bsp_walltime)
         cp = cost_params_from_model(cfg, seq_len=args.seq,
                                     local_batch=args.batch,
                                     quantize=args.quantize)
-        predicted = predict_all_modes(trace, cp)
+        if caps.pricing == "pairwise":
+            predicted = predict_all_modes(trace, cp)
+        else:
+            predicted = predict_bsp_walltime(
+                trace, schedule, cp,
+                payload_factor=bsp_payload_factor(args.algo, graph))
         print(json.dumps({"sched_cost": predicted}))
     if args.ckpt:
         meta = {"arch": cfg.name, "algo": args.algo, "steps": args.steps}

@@ -13,8 +13,8 @@ from repro.sched.clocks import (  # noqa: F401
     PoissonClocks, RateProfile, StragglerConfig, participation_rates,
 )
 from repro.sched.cost import (  # noqa: F401
-    CostParams, analytic_walltime, cost_params_from_model, predict_all_modes,
-    predict_walltime,
+    CostParams, analytic_walltime, bsp_payload_factor, cost_params_from_model,
+    predict_all_modes, predict_bsp_walltime, predict_walltime,
 )
 from repro.sched.trace import (  # noqa: F401
     Trace, generate_trace, synchronous_trace, trace_stats,

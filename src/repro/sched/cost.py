@@ -206,6 +206,65 @@ def analytic_walltime(trace: Trace, cost: CostParams, *,
     return lower + 0.5 * float(np.sum(gaps)) / max(n, 1)
 
 
+def bsp_payload_factor(algo: str, graph=None) -> float:
+    """Per-round wire multiplier for the bulk-synchronous baselines: ring
+    all-reduce moves ~2x the payload per node (reduce-scatter +
+    all-gather); D-PSGD exchanges one payload per graph neighbor."""
+    if algo == "dpsgd":
+        return float(graph.r) if graph is not None else 4.0
+    return 2.0
+
+
+def predict_bsp_walltime(trace: Trace, sched, cost: CostParams, *,
+                         speeds: Optional[np.ndarray] = None,
+                         payload_factor: float = 2.0) -> Dict:
+    """Wall-clock replay for the BULK-SYNCHRONOUS baselines (LocalSGD /
+    D-PSGD / AllReduce) on a bridged schedule: each bin is one global
+    round — participants run their accrued local steps, the round closes
+    with a global collective (`payload_factor` x payload over link_bw +
+    latency), and the next round cannot start before the SLOWEST
+    participant arrives. The global rendezvous is what the paper's
+    asynchronous pairwise process removes; pricing both from the same
+    trace makes the comparison direct (t11_baselines).
+
+    `sched` is the `BinnedSchedule` the engine actually executed (its h /
+    mask arrays define each round's work); `speeds` defaults to the
+    trace's clock rates, as in `predict_walltime`.
+    """
+    n = trace.n_nodes
+    speeds = trace.rates if speeds is None else np.asarray(speeds, np.float64)
+    step_t = np.asarray([cost.step_time_s(s) for s in speeds])
+    comm_t = cost.link_latency_s + \
+        payload_factor * cost.payload_bytes / cost.link_bw
+    busy = np.zeros(n, np.float64)
+    wait = np.zeros(n, np.float64)
+    total = 0.0
+    for s in range(sched.n_supersteps):
+        work = sched.h[s] * step_t * sched.mask[s]
+        round_compute = float(work.max()) if n else 0.0
+        busy += work
+        wait += (round_compute - work) * sched.mask[s]
+        total += round_compute + comm_t
+    return {
+        "mode": "bsp",
+        "total_s": total,
+        # closed-form envelope (no replay): the busiest node's serial work
+        # plus every round's collective — the BSP analogue of
+        # `analytic_walltime`, reported alongside the replay in t11
+        "analytic_s": float(busy.max() if n else 0.0) +
+        comm_t * sched.n_supersteps,
+        "rounds": int(sched.n_supersteps),
+        "events_per_s": trace.n_events / total if total > 0 else 0.0,
+        "compute_busy_s": busy.tolist(),
+        "rendezvous_wait_s": wait.tolist(),
+        "wait_frac": float(wait.sum() / max(busy.sum() + wait.sum(), 1e-30)),
+        "comm_total_s": comm_t * sched.n_supersteps,
+        "step_time_s": step_t.tolist(),
+        "comm_time_s": comm_t,
+        "payload_factor": payload_factor,
+    }
+
+
 def predict_all_modes(trace: Trace, cost: CostParams,
                       speeds: Optional[np.ndarray] = None) -> Dict:
     """Replay + closed form for all three execution modes — the

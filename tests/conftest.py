@@ -4,3 +4,23 @@ import sys
 # tests run on the single real CPU device (the 512-device override is ONLY
 # for launch/dryrun.py, which sets XLA_FLAGS before importing jax)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Shared hypothesis profile: ONE example-count cap for every property test
+# (kernels / transport / sched / bucket roundtrips) instead of per-test
+# max_examples. The heavy tests each JIT-compile per example, so the cap is
+# what keeps tier-1 inside its runtime budget as suites grow; raise it for
+# a deeper sweep via REPRO_HYPOTHESIS_MAX_EXAMPLES (CI keeps the default).
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "repro-tier1",
+        max_examples=int(os.environ.get("REPRO_HYPOTHESIS_MAX_EXAMPLES",
+                                        "12")),
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large],
+    )
+    settings.load_profile("repro-tier1")
+except ImportError:  # hypothesis-gated tests skip themselves
+    pass

@@ -7,9 +7,8 @@ import pytest
 
 from repro.algorithms import make_algorithm
 from repro.algorithms.dpsgd import metropolis_weights
-from repro.algorithms.sgp import sgp_init_prev
+from repro.algorithms.sgp import sgp_init_state
 from repro.core import SwarmConfig, make_graph, sample_matching, swarm_init
-from repro.core.swarm import SwarmState
 from repro.optim import make_optimizer
 
 N = 8
@@ -39,8 +38,7 @@ def run_algo(name, steps=60, H=2):
     scfg = SwarmConfig(n_nodes=N, H=H)
     state = swarm_init(jax.random.PRNGKey(0), scfg, tiny_init, opt.init)
     if name == "sgp":
-        state = SwarmState(state.params, state.opt, sgp_init_prev(N),
-                           state.step)
+        state = sgp_init_state(state, N)
     rng_np = np.random.default_rng(0)
     losses = gammas = None
     hist = []
@@ -94,6 +92,6 @@ def test_metropolis_weights_doubly_stochastic():
 
 def test_sgp_weights_stay_normalized():
     state, _ = run_algo("sgp", steps=20)
-    w = np.asarray(state.prev["w"])
+    w = np.asarray(state.params["w"])
     np.testing.assert_allclose(w.mean(), 1.0, atol=1e-5)  # push-sum invariant
     assert (w > 0).all()

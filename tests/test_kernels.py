@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, strategies as st
 except ImportError:
     # only the @given property tests need hypothesis — keep the direct
     # Pallas-vs-optim and block-alignment tests running without it
@@ -14,9 +14,6 @@ except ImportError:
         def __getattr__(self, name):
             return lambda *a, **k: None
     st = _AnyStrategy()
-
-    def settings(*a, **k):
-        return lambda f: f
 
     def given(*a, **k):
         return lambda f: pytest.mark.skip(
@@ -33,7 +30,6 @@ def _rand(rng, n, dtype=jnp.float32, scale=1.0):
     return jnp.asarray(rng.normal(size=(n,)) * scale).astype(dtype)
 
 
-@settings(max_examples=25, deadline=None)
 @given(n=SIZES, seed=st.integers(0, 2**31 - 1))
 def test_quantize_interpret_matches_ref(n, seed):
     rng = np.random.default_rng(seed)
@@ -46,7 +42,6 @@ def test_quantize_interpret_matches_ref(n, seed):
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
 
 
-@settings(max_examples=25, deadline=None)
 @given(n=SIZES, seed=st.integers(0, 2**31 - 1), dtype=DTYPES)
 def test_decode_avg_interpret_matches_ref(n, seed, dtype):
     rng = np.random.default_rng(seed)
@@ -60,7 +55,6 @@ def test_decode_avg_interpret_matches_ref(n, seed, dtype):
                                np.asarray(o2, np.float32), atol=1e-6)
 
 
-@settings(max_examples=25, deadline=None)
 @given(n=SIZES, seed=st.integers(0, 2**31 - 1),
        mu=st.floats(0.0, 0.99), wd=st.floats(0.0, 0.1),
        nesterov=st.booleans())

@@ -6,7 +6,7 @@ import pytest
 
 hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed in this environment")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis import given, strategies as st  # noqa: E402
 
 from repro.core.graph import make_graph, sample_matching
 from repro.core.potential import gamma_potential, mean_model
@@ -16,7 +16,6 @@ from repro.models.moe import capacity, dispatch_positions
 from repro.quant import ModularQuantConfig, decode_modular, encode_modular
 
 
-@settings(max_examples=20, deadline=None)
 @given(n=st.sampled_from([4, 8, 16]), d=st.integers(2, 64),
        seed=st.integers(0, 10_000))
 def test_gossip_mean_invariant_and_gamma_contraction(n, d, seed):
@@ -33,7 +32,6 @@ def test_gossip_mean_invariant_and_gamma_contraction(n, d, seed):
     assert float(gamma_potential(out)) <= float(gamma_potential(params)) + 1e-4
 
 
-@settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 10_000), dist=st.floats(1e-5, 1e-1),
        block=st.sampled_from([32, 64, 256]))
 def test_quant_error_scales_with_distance(seed, dist, block):
@@ -46,7 +44,6 @@ def test_quant_error_scales_with_distance(seed, dist, block):
     assert err <= dist * 8.0 / 128 * 1.001 + 1e-7
 
 
-@settings(max_examples=15, deadline=None)
 @given(t=st.integers(8, 200), e=st.sampled_from([4, 8]),
        k=st.sampled_from([1, 2]), seed=st.integers(0, 1000))
 def test_moe_dispatch_no_slot_collisions(t, e, k, seed):
@@ -72,7 +69,6 @@ def test_moe_dispatch_no_slot_collisions(t, e, k, seed):
                 slots.add(key)
 
 
-@settings(max_examples=10, deadline=None)
 @given(v=st.sampled_from([97, 512, 1000]), chunk=st.sampled_from([64, 256]),
        seed=st.integers(0, 1000))
 def test_chunked_ce_matches_dense(v, chunk, seed):
@@ -88,7 +84,6 @@ def test_chunked_ce_matches_dense(v, chunk, seed):
     np.testing.assert_allclose(got, want, rtol=1e-5)
 
 
-@settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000), theta=st.sampled_from([1e4, 1e6]),
        frac=st.sampled_from([0.5, 1.0]))
 def test_rope_preserves_norm_and_relativity(seed, theta, frac):
@@ -109,7 +104,6 @@ def test_rope_preserves_norm_and_relativity(seed, theta, frac):
     np.testing.assert_allclose(dot(3, 1), dot(7, 5), rtol=1e-3, atol=1e-4)
 
 
-@settings(max_examples=30, deadline=None)
 @given(data=st.data())
 def test_bucket_pack_unpack_roundtrip_ragged_pytrees(data):
     """Flat-buffer pack/unpack (core/bucket.py) is an exact roundtrip for

@@ -227,9 +227,8 @@ def test_binning_rejects_unrepresentable_events():
 
 try:
     import hypothesis  # noqa: F401
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, strategies as st
 
-    @settings(max_examples=25, deadline=None)
     @given(seed=st.integers(0, 10_000), n_events=st.integers(1, 120),
            n=st.sampled_from([4, 8, 9, 16]))
     def test_binning_property(seed, n_events, n):
