@@ -36,7 +36,7 @@ class BenchSetup:
 
 def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
           h_mode="fixed", gossip_impl=None, pool_size=4, overlap=False,
-          h_max=8, rate_profile="none"):
+          h_max=8, rate_profile="none", codec=None):
     """Bench trainer = the ACTUAL launch/train.py build_trainer on the
     reduced bench transformer (one construction path, not a copy), with the
     bench quant config (safety 16 keeps the decode distance criterion valid
@@ -49,7 +49,7 @@ def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
         nonblocking=nonblocking, graph_kind=setup.graph, seed=setup.seed,
         h_mode=h_mode, gossip_impl=gossip_impl, pool_size=pool_size,
         overlap=overlap, h_max=h_max, quant=ModularQuantConfig(safety=16.0),
-        rate_profile=rate_profile)
+        rate_profile=rate_profile, codec=codec)
     ds = SyntheticLMDataset(
         DataConfig(vocab_size=cfg.vocab_size, seq_len=setup.seq,
                    seed=setup.seed), n_nodes=setup.n_nodes)
@@ -108,23 +108,32 @@ def bench_stacked_params(setup: BenchSetup = None, n_nodes: int = None,
          for x, k in zip(jax.tree.leaves(one), keys)])
 
 
-def measured_payload(n_nodes: int = 8):
+def measured_payload(n_nodes: int = 8,
+                     codecs=("q8", "q4", "q16", "bf16", "topk:0.25")):
     """ACTUAL packed wire bytes per node through the flat-buffer transport
-    (exact fp32 + quantized uint8/scale pair), vs the analytic formula."""
+    — exact fp32 plus every wire codec's real encoded arrays — vs the
+    codec-declared WireLayout formula (must agree EXACTLY; asserted in
+    t4)."""
     from repro.core import bucket as B
+    from repro.quant.codecs import make_codec
     stacked = bench_stacked_params(n_nodes=n_nodes)
     qcfg = ModularQuantConfig()
     layout = B.build_layout(stacked, block=qcfg.block)
     buf = B.pack(layout, stacked)
-    q, s = B.encode_flat(qcfg, buf, buf, jax.random.PRNGKey(0))
-    return {
+    out = {
         "n_coords": int(layout.n_coords),
         "n_padded": int(layout.n_padded),
         "fp32_payload_bytes": int(buf.nbytes) // n_nodes,
-        "q8_payload_bytes": int(q.nbytes + s.nbytes) // n_nodes,
         "fp32_formula_bytes": layout.payload_num_bytes(),
-        "q8_formula_bytes": layout.payload_num_bytes(qcfg),
     }
+    for spec in codecs:
+        codec = make_codec(spec, qcfg)
+        wire = codec.encode(buf, buf + 0.01, jax.random.PRNGKey(0))
+        key = spec.replace(":", "_").replace(".", "")
+        out[f"{key}_payload_bytes"] = \
+            sum(int(jax.device_get(w).nbytes) for w in wire) // n_nodes
+        out[f"{key}_formula_bytes"] = layout.payload_num_bytes(codec)
+    return out
 
 
 def comm_bytes_per_superstep(algo: str, n_nodes: int, n_params: int,

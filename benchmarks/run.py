@@ -21,6 +21,13 @@ results/bench/. Paper mapping:
                      predicted vs simulated wall-clock per rate profile,
                      bridged-engine training on heterogeneous traces,
                      uniform profile bit-exact vs the plain engine
+  t11_baselines    — DESIGN.md §Baselines: every algorithm on the unified
+                     exchange layer under one lognormal profile, fp32+q8,
+                     predicted-vs-simulated wall-clock per pricing family
+  t12_codecs       — DESIGN.md §Codec: swarm + AD-PSGD × {fp32, q8, q4,
+                     topk} — measured packed wire bytes per codec
+                     (asserted == declared WireLayout) + codec-priced
+                     predicted-vs-simulated wall-clock
 """
 from __future__ import annotations
 
@@ -114,14 +121,20 @@ def t4_comm_cost(quick=False):
         emit(f"t4_comm_cost/n{n}", 0.0,
              ";".join(f"{k}={v / 1e6:.1f}MB" for k, v in row.items()))
     mp = measured_payload()
-    assert mp["fp32_payload_bytes"] == mp["fp32_formula_bytes"]
-    assert mp["q8_payload_bytes"] == mp["q8_formula_bytes"]
+    # byte truthfulness: EVERY codec's declared WireLayout == real arrays
+    for key in [k[:-len("_payload_bytes")] for k in mp
+                if k.endswith("_payload_bytes")]:
+        assert mp[f"{key}_payload_bytes"] == mp[f"{key}_formula_bytes"], key
     ratio = mp["fp32_payload_bytes"] / mp["q8_payload_bytes"]
     out["measured"] = {**mp, "wire_ratio": ratio}
     emit("t4_comm_cost/measured", 0.0,
          f"fp32={mp['fp32_payload_bytes']}B;q8={mp['q8_payload_bytes']}B;"
          f"wire_ratio={ratio:.2f}x;pad_overhead="
          f"{mp['n_padded'] / mp['n_coords'] - 1:.2%}")
+    codec_bytes = {k[:-len("_payload_bytes")]: v for k, v in mp.items()
+                   if k.endswith("_payload_bytes")}
+    emit("t4_comm_cost/per_codec", 0.0,
+         ";".join(f"{k}={v}B" for k, v in sorted(codec_bytes.items())))
     save("t4_comm_cost", out)
     return out
 
@@ -660,12 +673,118 @@ def t11_baselines(quick=False):
     return out
 
 
+def t12_codecs(quick=False):
+    """DESIGN.md §Codec: the codec sweep — swarm and AD-PSGD × {fp32, q8,
+    q4, topk:0.25} trained end-to-end through the scheduler bridge on ONE
+    lognormal rate profile, with (a) the MEASURED packed wire bytes of
+    each codec's real encoded arrays asserted against the declared
+    WireLayout, and (b) the wall-clock cost model's predicted-vs-simulated
+    end-to-end time priced from those codec bytes — the honest per-codec
+    communication story (q4 ≈ half the q8 wire; top-k below that at the
+    cost of the EF residual state). Emits results/bench/t12_codecs.json
+    (CI artifact)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import build, measured_payload
+    from repro.algorithms import CAPABILITIES
+    from repro.core.graph import make_graph
+    from repro.data import make_node_batches
+    from repro.sched import (RateProfile, bin_trace, cost_params_from_model,
+                             engine_inputs, generate_trace,
+                             predict_all_modes)
+
+    steps = 8 if quick else 25
+    setup = BenchSetup()
+    n = setup.n_nodes
+    graph = make_graph("complete", n)
+    h_max_async = 8
+
+    codecs = [None, "q8", "q4", "topk:0.25"]   # None = fp32 (no --quantize)
+    mp = measured_payload(codecs=("q8", "q4", "topk:0.25"))
+    out = {"profile": "lognormal", "sigma": 0.8, "steps": steps,
+           "n_nodes": n, "measured_payload": mp}
+    for key in [k[:-len("_payload_bytes")] for k in mp
+                if k.endswith("_payload_bytes")]:
+        assert mp[f"{key}_payload_bytes"] == mp[f"{key}_formula_bytes"], key
+    assert mp["q4_payload_bytes"] < 0.55 * mp["q8_payload_bytes"]
+
+    for algo in ["swarm", "adpsgd"]:
+        caps = CAPABILITIES[algo]
+        H_eff = setup.H if caps.local_H else 1
+        h_max = h_max_async if caps.local_H else 1
+        trace = generate_trace(graph, RateProfile("lognormal", sigma=0.8),
+                               steps * (n // 2), H=H_eff, h_max=h_max,
+                               h_mode="rate", seed=setup.seed)
+        sched = bin_trace(trace)
+        for codec in codecs:
+            quantize = codec is not None
+            cfg, g, scfg, step, state, ds = build(
+                setup, algo, quantize=quantize, codec=codec,
+                h_mode="trace" if caps.local_H else "fixed", h_max=h_max,
+                rate_profile="lognormal")
+            slots = scfg.h_loop_bound
+            key = jax.random.PRNGKey(setup.seed + 1)
+            losses, times = [], []
+            for s in range(sched.n_supersteps):
+                nb = make_node_batches(ds, s, setup.batch * slots)
+                batch = {k: jnp.asarray(v.reshape(n, slots, setup.batch,
+                                                  setup.seq))
+                         for k, v in nb.items()}
+                perm, h, mask = engine_inputs(sched, s, scfg.gossip_impl)
+                key, sub = jax.random.split(key)
+                t0 = time.time()
+                state, m = step(state, batch, jnp.asarray(perm),
+                                jnp.asarray(h), sub, jnp.asarray(mask))
+                m = jax.device_get(m)
+                times.append(time.time() - t0)
+                losses.append(float(m["loss"]))
+            cp = cost_params_from_model(cfg, seq_len=setup.seq,
+                                        local_batch=setup.batch,
+                                        quantize=quantize, codec=codec)
+            pred = predict_all_modes(trace, cp)
+            name = f"{algo}_{(codec or 'fp32').replace(':', '_')}"
+            out[name] = {
+                "codec": cp.meta["codec"],
+                "payload_bytes": cp.payload_bytes,
+                "n_supersteps": sched.n_supersteps,
+                "final_loss": float(np.mean(losses[-5:])),
+                "host_us_per_superstep": float(np.mean(times[2:]) * 1e6)
+                if len(times) > 2 else float("nan"),
+                "walltime": {
+                    "simulated_s": pred["blocking"]["simulated_s"],
+                    "predicted_s": pred["blocking"]["predicted_s"],
+                    "all_modes": pred},
+            }
+            emit(f"t12_codecs/{name}", out[name]["host_us_per_superstep"],
+                 f"final_loss={out[name]['final_loss']:.4f};"
+                 f"payload={cp.payload_bytes}B;"
+                 f"sim_s={pred['blocking']['simulated_s']:.4g};"
+                 f"pred_s={pred['blocking']['predicted_s']:.4g}")
+        # headline per algo: wire ratio + modeled wall-clock ratio vs fp32
+        fp = out[f"{algo}_fp32"]
+        for codec in codecs[1:]:
+            k = f"{algo}_{codec.replace(':', '_')}"
+            out[f"{k}_vs_fp32"] = {
+                "wire_ratio": fp["payload_bytes"] / out[k]["payload_bytes"],
+                "walltime_ratio": fp["walltime"]["simulated_s"] /
+                max(out[k]["walltime"]["simulated_s"], 1e-30),
+            }
+            emit(f"t12_codecs/{k}_vs_fp32", 0.0,
+                 f"wire={out[f'{k}_vs_fp32']['wire_ratio']:.2f}x;"
+                 f"walltime={out[f'{k}_vs_fp32']['walltime_ratio']:.2f}x")
+    save("t12_codecs", out)
+    return out
+
+
 TABLES = {
     "t1": t1_convergence, "t2": t2_localsteps, "t3": t3_quantization,
     "t4": t4_comm_cost, "t5": t5_potential, "t6": t6_nonblocking,
     "t7": t7_roofline, "t8": t8_topology, "t8_transport": t8_transport,
     "t9": t9_node_scaling, "t9_async": t9_async, "t10_sched": t10_sched,
-    "t11_baselines": t11_baselines,
+    "t11_baselines": t11_baselines, "t12_codecs": t12_codecs,
 }
 
 

@@ -46,14 +46,24 @@ def make_step(loss_fn, opt_update, lr_fn, n_nodes, shard=Identity,
         matched = node_perm != jnp.arange(n_nodes)
         if mask is not None:
             matched = matched & mask
+        ef = quantize and tr.codec.carries_residual
+        new_residual = state.residual
+
+        def mix(tree):
+            nonlocal new_residual
+            out = tr.mix_pair(tree, perm, matched, quantize=quantize,
+                              prev=state.prev if quantize else None,
+                              rng=rng, mask=mask,
+                              residual=state.residual if quantize else None)
+            if ef:
+                out, new_residual = out
+            return out
 
         if nonblocking:
             # stale averaging (the original AD-PSGD is asynchronous): the
             # partner contribution is its PRE-STEP model, each node's fresh
             # gradient delta rides on top — Algorithm 2 with H=1.
-            base = tr.mix_pair(S, perm, matched, quantize=quantize,
-                               prev=state.prev if quantize else None,
-                               rng=rng, mask=mask)
+            base = mix(S)
             params = jax.tree.map(
                 lambda b, p, s: jnp.where(
                     matched.reshape((-1,) + (1,) * (p.ndim - 1)),
@@ -62,13 +72,12 @@ def make_step(loss_fn, opt_update, lr_fn, n_nodes, shard=Identity,
                      ).astype(p.dtype), p),
                 base, params, S)
         else:
-            params = tr.mix_pair(params, perm, matched, quantize=quantize,
-                                 prev=state.prev if quantize else None,
-                                 rng=rng, mask=mask)
+            params = mix(params)
         params = jax.tree.map(lambda x: shard(x, "param"), params)
         new_prev = refresh_prev(state.prev, S if nonblocking else params,
                                 matched)
-        return (SwarmState(params, opt, new_prev, state.step + 1),
+        return (SwarmState(params, opt, new_prev, state.step + 1,
+                           residual=new_residual),
                 metrics_of(params, losses, lr, track_potential, mask,
                            matched_frac=jnp.mean(matched.astype(jnp.float32))))
     return step

@@ -28,9 +28,14 @@ class AlgoCaps:
     transports — accepted base gossip impls (each also in its *_legacy
                  per-leaf oracle form);
     modes      — blocking / nonblocking / overlap execution semantics;
-    quantized  — 8-bit modular gossip supported (the pairwise decode
-                 scheme; dense/global collectives have no lattice
+    quantized  — codec-compressed gossip supported (the pairwise decode
+                 schemes; dense/global collectives have no receiver-side
                  reference, so they stay fp32);
+    codecs     — accepted wire-codec FAMILIES (quant/codecs.py) when
+                 quantized: q8 (lattice, uint8), q4 (lattice, packed
+                 nibbles), q16 (lattice, uint16), bf16 (cast), topk
+                 (sparse + error feedback — needs the SwarmState.residual
+                 slot, so only the algorithms that carry one);
     sched      — runs under scheduler-bridge traces (--rate-profile):
                  accepts the bridge's (perm, h, mask) inputs;
     uses_matching — consumes `perm` as a pairwise matching (algorithms
@@ -45,6 +50,7 @@ class AlgoCaps:
     transports: Tuple[str, ...]
     modes: Tuple[str, ...]
     quantized: bool
+    codecs: Tuple[str, ...]
     sched: bool
     uses_matching: bool
     local_H: bool
@@ -52,36 +58,49 @@ class AlgoCaps:
     why: str
 
 
+#: every lattice/cast family — the codecs with no cross-superstep state
+_STATELESS_CODECS = ("q8", "q4", "q16", "bf16")
+
 CAPABILITIES = {
     "swarm": AlgoCaps(
         ("gather", "ppermute", "ppermute_pool"),
-        ("blocking", "nonblocking", "overlap"), True, True, True, True,
-        "pairwise",
+        ("blocking", "nonblocking", "overlap"), True,
+        _STATELESS_CODECS + ("topk",), True, True, True, "pairwise",
         "the paper's method: pairwise matchings, H local steps, all "
-        "transports and modes"),
+        "transports, modes and codecs (the superstep carries the "
+        "error-feedback residual slot; top-k itself is gather-only and "
+        "blocking/nonblocking-only — the residual neither threads "
+        "through shard_map nor learns the matched mask in time under "
+        "the overlap pipeline)"),
     "adpsgd": AlgoCaps(
         ("gather", "ppermute", "ppermute_pool"),
-        ("blocking", "nonblocking"), True, True, True, False, "pairwise",
+        ("blocking", "nonblocking"), True, _STATELESS_CODECS + ("topk",),
+        True, True, False, "pairwise",
         "= SwarmSGD with H=1: same matchings, same pairwise average "
-        "(stale variant = the original asynchronous AD-PSGD); no overlap "
-        "pipeline (nothing to hide one grad step under)"),
+        "(stale variant = the original asynchronous AD-PSGD), same codec "
+        "family incl. the error-feedback residual; no overlap pipeline "
+        "(nothing to hide one grad step under)"),
     "sgp": AlgoCaps(
-        ("gather",), ("blocking",), True, True, False, False, "pairwise",
+        ("gather",), ("blocking",), True, _STATELESS_CODECS,
+        True, False, False, "pairwise",
         "directed time-varying one-peer graph: the cyclic-shift perm "
         "changes every step, so the static ppermute matchings cannot "
         "carry it; push-sum (X, w) rides the payload as an extra row "
-        "group"),
+        "group and composes with every stateless codec — but not top-k: "
+        "the EF residual holds back mass between interactions, which "
+        "breaks the (X, w) joint linear dynamics the de-biasing relies "
+        "on"),
     "localsgd": AlgoCaps(
-        ("gather",), ("blocking",), False, True, False, True, "bsp",
+        ("gather",), ("blocking",), False, (), True, False, True, "bsp",
         "global resync (masked participants-mean under a schedule): a "
-        "mean has no pairwise permute form and no quantizer lattice "
-        "reference"),
+        "mean has no pairwise permute form and no receiver-side decode "
+        "reference, so no codec applies"),
     "dpsgd": AlgoCaps(
-        ("gather",), ("blocking",), False, True, False, False, "bsp",
+        ("gather",), ("blocking",), False, (), True, False, False, "bsp",
         "dense doubly-stochastic W-mixing over the node axis (masked "
         "Metropolis under a schedule); not pairwise, not quantizable"),
     "allreduce": AlgoCaps(
-        ("gather",), ("blocking",), False, True, False, False, "bsp",
+        ("gather",), ("blocking",), False, (), True, False, False, "bsp",
         "global gradient mean applied everywhere (backup-workers drop "
         "straggler gradients under a schedule); fully synchronous upper "
         "bound"),
@@ -129,13 +148,16 @@ def make_algorithm(name: str, **kw) -> Callable:
 
 def validate_run_config(algo: str, *, gossip_impl: str = None,
                         quantize: bool = False, nonblocking: bool = False,
-                        overlap: bool = False, rate_profile: str = "none"
-                        ) -> AlgoCaps:
+                        overlap: bool = False, rate_profile: str = "none",
+                        codec: str = None) -> AlgoCaps:
     """Config-time validation of a run against the capability matrix.
 
     Raises ValueError with the algorithm's matrix row when the requested
-    (transport, mode, quantization, schedule) combination is unsupported;
-    returns the AlgoCaps row otherwise so callers can branch on it."""
+    (transport, mode, quantization, codec, schedule) combination is
+    unsupported; returns the AlgoCaps row otherwise so callers can branch
+    on it. `codec` is the ``--codec`` spec (None follows the quant config
+    = the q8 lattice family; the env default REPRO_CODEC is resolved here
+    too, mirroring REPRO_DEFAULT_GOSSIP_IMPL)."""
     if algo not in CAPABILITIES:
         raise ValueError(f"unknown algorithm {algo!r}; known: "
                          f"{sorted(CAPABILITIES)}")
@@ -145,8 +167,9 @@ def validate_run_config(algo: str, *, gossip_impl: str = None,
         raise ValueError(
             f"--algo {algo} does not support {what}: {algo} supports "
             f"transports={list(caps.transports)}, modes={list(caps.modes)}, "
-            f"quantized={caps.quantized}, sched={caps.sched} "
-            f"({caps.why}). See DESIGN.md §Baselines.")
+            f"quantized={caps.quantized}, codecs={list(caps.codecs)}, "
+            f"sched={caps.sched} "
+            f"({caps.why}). See DESIGN.md §Baselines / §Codec.")
 
     # gossip_impl=None resolves through the same env override the engine
     # and transport use, so an env-selected transport cannot bypass the
@@ -162,7 +185,28 @@ def validate_run_config(algo: str, *, gossip_impl: str = None,
     if mode not in caps.modes:
         reject(f"the {mode} execution mode")
     if quantize and not caps.quantized:
-        reject("--quantize (8-bit modular gossip)")
+        reject("--quantize (codec-compressed gossip)")
     if rate_profile not in (None, "none") and not caps.sched:
         reject(f"--rate-profile {rate_profile}")
+    if quantize:
+        # resolve the spec to its family through the same parser the
+        # transport uses — a bogus spec (q17, topk:2) raises HERE with
+        # the supported grammar, never deep inside the engine
+        from repro.quant.codecs import make_codec
+        if codec is None:
+            codec = os.environ.get("REPRO_CODEC") or None
+        c = make_codec(codec)
+        if c.family not in caps.codecs:
+            reject(f"--codec {c.name}")
+        if c.carries_residual:
+            # the residual slot's own restrictions (core/exchange.py):
+            # gather transport, blocking/nonblocking only
+            if base != "gather":
+                reject(f"--codec {c.name} with --gossip-impl {gossip_impl} "
+                       "(error-feedback residuals run on the gather "
+                       "transport)")
+            if overlap:
+                reject(f"--codec {c.name} with the overlap pipeline (the "
+                       "residual updates against a matched mask the "
+                       "pipelined encode learns one interaction late)")
     return caps

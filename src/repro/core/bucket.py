@@ -35,10 +35,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import shard_map_compat
+from repro.quant.codecs import LatticeCodec, WireCodec, make_codec
 from repro.quant.schemes import ModularQuantConfig, payload_bytes
 
 DEFAULT_BLOCK = 256      # coords per quant scale block (lane-dim multiple)
 DEFAULT_TILE_ROWS = 8    # kernel sublane tile: rows_per_node must divide
+
+
+def as_codec(quant_or_codec) -> Optional[WireCodec]:
+    """Normalize the transport's wire parameter: a WireCodec passes
+    through, a ModularQuantConfig wraps into the lattice codec (the
+    pre-codec behavior), None stays None (exact fp32)."""
+    if quant_or_codec is None or isinstance(quant_or_codec, WireCodec):
+        return quant_or_codec
+    assert isinstance(quant_or_codec, ModularQuantConfig), quant_or_codec
+    return LatticeCodec(quant_or_codec)
 
 
 @dataclass(frozen=True)
@@ -60,13 +71,20 @@ class BucketLayout:
     def rows_per_node(self) -> int:
         return self.n_padded // self.block
 
-    def payload_num_bytes(self, quant: Optional[ModularQuantConfig] = None
-                          ) -> int:
-        """Exact wire bytes PER NODE for one gossip send of this buffer."""
+    def payload_num_bytes(self, quant=None) -> int:
+        """Exact wire bytes PER NODE for one gossip send of this buffer.
+        `quant` is None (fp32), a ModularQuantConfig (lattice codec — the
+        pre-codec spelling) or any WireCodec; the codec's declared
+        WireLayout is the single pricing source (quant/codecs.py)."""
         if quant is None:
             return 4 * self.n_padded
-        assert quant.block == self.block, (quant.block, self.block)
-        return payload_bytes(quant, self.n_padded)
+        codec = as_codec(quant)
+        assert codec.block == self.block, (codec.block, self.block)
+        n = codec.payload_num_bytes(self.n_padded)
+        if isinstance(quant, ModularQuantConfig) and not codec.packed:
+            # the historical closed-form formula must agree with the layout
+            assert n == payload_bytes(quant, self.n_padded), (n, quant)
+        return n
 
 
 _LAYOUT_CACHE: dict = {}
@@ -151,46 +169,51 @@ def encode_flat(qcfg: ModularQuantConfig, buf, prev_buf, rng, *,
                 tile_rows: int = DEFAULT_TILE_ROWS, backend=None):
     """Encode the whole flat buffer: ONE quantize_mod kernel sweep.
 
-    -> (q uint8 [n_nodes*rows_per_node, block], s fp32 [same rows, 1]).
-    Scales are per block; prev_buf is the sender-local distance proxy.
-    """
-    from repro.kernels import ops as K
-    assert qcfg.bits <= 8, \
-        f"flat transport carries uint8 payloads; bits={qcfg.bits} must use " \
-        "the per-leaf *_legacy gossip (encode_modular widens to uint16)"
-    u = jax.random.uniform(rng, buf.shape, jnp.float32)
-    if qcfg.resolution is not None:
-        # fixed absolute resolution (the paper's ε): scale is a constant,
-        # no distance proxy needed — plain stochastic-rounded mod-encode
-        levels = 1 << qcfg.bits
-        xb = buf.reshape(-1, qcfg.block)
-        s = jnp.full((xb.shape[0], 1), qcfg.resolution, jnp.float32)
-        q = jnp.mod(jnp.floor(xb / s + u.reshape(-1, qcfg.block)), levels)
-        return q.astype(jnp.uint8), s
-    q, s, pad = K.quantize_mod(buf, prev_buf, u, block=qcfg.block,
-                               safety=qcfg.safety, min_scale=qcfg.min_scale,
-                               bits=qcfg.bits, tile_rows=tile_rows,
-                               backend=backend)
-    assert pad == 0, "flat buffer must be pre-aligned to the kernel layout"
-    return q, s
+    -> (q [n_nodes*rows_per_node, block or block/2] uint8/uint16, s fp32
+    [same rows, 1]). Scales are per block; prev_buf is the sender-local
+    distance proxy. Thin wrapper over the lattice WireCodec — bits <= 16
+    all run flat now (uint16 wire; sub-byte widths ship packed)."""
+    return as_codec(qcfg).encode(buf, prev_buf, rng, tile_rows=tile_rows,
+                                 backend=backend)
 
 
-def gossip_flat_quantized(qcfg: ModularQuantConfig, buf, prev_buf, perm,
-                          matched, rng, *, tile_rows: int = DEFAULT_TILE_ROWS,
-                          backend=None):
-    """Quantized flat gossip: encode once, permute the (q, s) payload pair,
-    decode+average+mask in one fused decode_avg sweep."""
-    from repro.kernels import ops as K
+def gossip_flat_coded(codec: WireCodec, buf, prev_buf, perm, matched, rng, *,
+                      residual=None, tile_rows: int = DEFAULT_TILE_ROWS,
+                      backend=None):
+    """Codec-parametric flat gossip: encode once (ONE kernel sweep),
+    permute every wire-group tensor, decode+average+mask in one fused
+    sweep. Returns (mixed, new_residual); new_residual is None unless the
+    codec carries an error-feedback slot, in which case the update is
+    gated by `matched` — an unconsumed payload leaves the residual (and
+    the un-refreshed comm copy) to re-enter the next encode."""
     n_nodes, n_padded = buf.shape
-    block = qcfg.block
-    rpn = n_padded // block
-    q, s = encode_flat(qcfg, buf, prev_buf, rng, tile_rows=tile_rows,
-                       backend=backend)
-    qp = q.reshape(n_nodes, rpn, block)[perm].reshape(-1, block)
-    sp = s.reshape(n_nodes, rpn, 1)[perm].reshape(-1, 1)
+    rpn = n_padded // codec.block
+    new_residual = None
+    if codec.carries_residual:
+        wire, res_after = codec.encode_ef(buf, prev_buf, rng, residual,
+                                          tile_rows=tile_rows,
+                                          backend=backend)
+        new_residual = jnp.where(matched[:, None], res_after,
+                                 residual if residual is not None
+                                 else jnp.zeros_like(buf))
+    else:
+        wire = codec.encode(buf, prev_buf, rng, tile_rows=tile_rows,
+                            backend=backend)
+    wire_p = tuple(permute_rows(w, perm, n_nodes) for w in wire)
     m_rows = jnp.repeat(matched, rpn)
-    return K.decode_avg(qp, sp, buf, matched=m_rows, block=block,
-                        bits=qcfg.bits, tile_rows=tile_rows, backend=backend)
+    out = codec.decode_avg(wire_p, buf, m_rows, tile_rows=tile_rows,
+                           backend=backend)
+    return out, new_residual
+
+
+def gossip_flat_quantized(qcfg, buf, prev_buf, perm, matched, rng, *,
+                          tile_rows: int = DEFAULT_TILE_ROWS, backend=None):
+    """Quantized flat gossip (lattice codec, pre-codec entry point):
+    encode once, permute the (q, s) payload pair, decode+average+mask in
+    one fused decode_avg sweep."""
+    out, _ = gossip_flat_coded(as_codec(qcfg), buf, prev_buf, perm, matched,
+                               rng, tile_rows=tile_rows, backend=backend)
+    return out
 
 
 def gossip_flat_mean(buf, mask=None):
@@ -291,20 +314,24 @@ def permute_payload_pool(payload, mesh, node_axes, pool, pool_idx,
 
 
 def gossip_flat_ppermute(buf, mesh, node_axes, pairs, *,
-                         quant: Optional[ModularQuantConfig] = None,
-                         prev_buf=None, rng=None, backend=None,
+                         quant=None, prev_buf=None, rng=None, backend=None,
                          tile_rows: int = DEFAULT_TILE_ROWS, mask=None):
     """shard_map collective-permute over the flat buffer: ONE ppermute per
-    payload tensor (fp32 buffer exact; uint8 q + fp32 scales quantized) —
-    vs one per pytree leaf in the legacy transport. `pairs` is a STATIC
-    involution [(src, dst), ...] over node/shard indices. `mask` (bool
-    [n_nodes/n_shards], dynamic) further gates which of the static pairs
-    land this superstep — the scheduler bridge's partial-participation
-    hook: the wire permute still runs (static HLO), unmasked receivers
-    keep their own model."""
+    payload tensor (fp32 buffer exact; one per codec wire group quantized)
+    — vs one per pytree leaf in the legacy transport. `quant` is a
+    ModularQuantConfig (lattice) or any non-residual WireCodec. `pairs` is
+    a STATIC involution [(src, dst), ...] over node/shard indices. `mask`
+    (bool [n_nodes/n_shards], dynamic) further gates which of the static
+    pairs land this superstep — the scheduler bridge's partial-
+    participation hook: the wire permute still runs (static HLO), unmasked
+    receivers keep their own model."""
     from jax.sharding import PartitionSpec as P
-    from repro.kernels import ops as K
 
+    codec = as_codec(quant)
+    assert codec is None or not codec.carries_residual, \
+        f"{codec.name}: error-feedback codecs run on the gather transport " \
+        "(the residual slot does not thread through shard_map; see the " \
+        "codec axis of algorithms/registry.py CAPABILITIES)"
     n_nodes = buf.shape[0]
     n_shards = 1
     for a in node_axes:
@@ -317,10 +344,11 @@ def gossip_flat_ppermute(buf, mesh, node_axes, pairs, *,
         matched = jnp.asarray(perm_arr != np.arange(len(perm_arr)))
         if mask is not None:
             matched = matched & mask
-        if quant is None:
+        if codec is None:
             return gossip_flat_exact(buf, perm_j, matched)
-        return gossip_flat_quantized(quant, buf, prev_buf, perm_j, matched,
-                                     rng, tile_rows=tile_rows, backend=backend)
+        out, _ = gossip_flat_coded(codec, buf, prev_buf, perm_j, matched,
+                                   rng, tile_rows=tile_rows, backend=backend)
+        return out
 
     axis = node_axes if len(node_axes) > 1 else node_axes[0]
     part = tuple(node_axes) if len(node_axes) > 1 else node_axes[0]
@@ -339,17 +367,16 @@ def gossip_flat_ppermute(buf, mesh, node_axes, pairs, *,
 
     def quantized(x, pv, key, mk=None):
         idx = jax.lax.axis_index(axis)
-        q, s = encode_flat(quant, x, pv, jax.random.fold_in(key, idx),
-                           tile_rows=tile_rows, backend=backend)
-        qp = jax.lax.ppermute(q, axis, full_pairs)     # payload tensor 1
-        sp = jax.lax.ppermute(s, axis, full_pairs)     # payload tensor 2
+        key = jax.random.fold_in(key, idx) if codec.needs_rng else key
+        wire = codec.encode(x, pv, key, tile_rows=tile_rows, backend=backend)
+        # ONE collective per codec wire group (q+s lattice; v bf16; ...)
+        wire_p = tuple(jax.lax.ppermute(w, axis, full_pairs) for w in wire)
         m = _local_mask(idx, mk)
-        m_rows = jnp.broadcast_to(m, (q.shape[0],))
-        return K.decode_avg(qp, sp, x, matched=m_rows, block=quant.block,
-                            bits=quant.bits, tile_rows=tile_rows,
-                            backend=backend)
+        m_rows = jnp.broadcast_to(m, (wire[0].shape[0],))
+        return codec.decode_avg(wire_p, x, m_rows, tile_rows=tile_rows,
+                                backend=backend)
 
-    if quant is None:
+    if codec is None:
         if mask is None:
             fn = shard_map_compat(exact, mesh, in_specs=(spec,),
                                   out_specs=spec)

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.compat import shard_map_compat
 from repro.core import bucket as B
+from repro.quant.codecs import LatticeCodec, WireCodec, make_codec
 from repro.quant.schemes import (
     ModularQuantConfig, decode_modular, encode_modular,
 )
@@ -267,6 +268,7 @@ class GossipTransport:
 
     def __init__(self, impl: Optional[str] = None, n_nodes: int = 0, *,
                  quant: Optional[ModularQuantConfig] = None,
+                 codec: Optional[WireCodec] = None,
                  mesh=None, node_axes=None, static_pairs=None,
                  matching_pool=None, param_specs=None):
         impl = impl if impl is not None else os.environ.get(
@@ -276,7 +278,26 @@ class GossipTransport:
         self.base_impl = impl[:-len("_legacy")] if self.legacy else impl
         assert self.base_impl in BASE_IMPLS, impl
         self.n_nodes = n_nodes
-        self.quant = quant or ModularQuantConfig()
+        # the wire codec owns the format; `quant` keeps seeding the lattice
+        # family (and the per-leaf legacy oracles, which speak encode/
+        # decode_modular and therefore carry lattice codecs only)
+        self.codec = codec if codec is not None \
+            else LatticeCodec(quant or ModularQuantConfig())
+        self.quant = self.codec.quant \
+            if isinstance(self.codec, LatticeCodec) \
+            else (quant or ModularQuantConfig(block=self.codec.block))
+        if self.legacy and not isinstance(self.codec, LatticeCodec):
+            raise ValueError(
+                f"codec {self.codec.name!r} has no per-leaf form: the "
+                "*_legacy oracles exchange encode_modular payloads "
+                "(lattice q2..q16 only; see the codec axis of "
+                "algorithms/registry.py CAPABILITIES)")
+        if self.codec.carries_residual and self.base_impl != "gather":
+            raise ValueError(
+                f"codec {self.codec.name!r} carries an error-feedback "
+                "residual, which only the gather transport threads "
+                f"(got --gossip-impl {impl}; see the codec axis of "
+                "algorithms/registry.py CAPABILITIES)")
         self.mesh = mesh
         self.node_axes = node_axes
         self.static_pairs = static_pairs
@@ -297,23 +318,28 @@ class GossipTransport:
     # -- capability / validation helpers ----------------------------------
 
     def routes_per_leaf(self, quantize: bool) -> bool:
-        """True when this exchange runs the per-leaf path: a *_legacy
-        oracle, or a >8-bit payload (which the uint8 flat kernels don't
-        carry)."""
-        return self.legacy or (quantize and self.quant.bits > 8)
+        """True when this exchange runs the per-leaf path — ONLY the
+        *_legacy oracles now: the flat transport carries every codec
+        (uint16 lattice included; the historical silent bits>8 per-leaf
+        fallback is gone — unsupported widths fail at codec construction
+        instead, never by degrading the transport)."""
+        del quantize
+        return self.legacy
 
     def check_specs(self, quantize: bool):
         if self.base_impl != "gather" and self.routes_per_leaf(quantize):
             assert self.param_specs is not None, \
-                "legacy / >8-bit shard_map gossip requires param_specs"
+                "legacy per-leaf shard_map gossip requires param_specs"
 
     def check_overlap(self, quantize: bool):
         assert not self.legacy, \
             "the pipelined overlap mode runs on the flat transport only " \
             "(no *_legacy per-leaf oracles)"
-        assert not (quantize and self.quant.bits > 8), \
-            "the in-flight payload buffer carries uint8; bits > 8 needs " \
-            "the blocking legacy transport"
+        assert not (quantize and self.codec.carries_residual), \
+            f"codec {self.codec.name}: the error-feedback residual " \
+            "updates at encode time against the matched mask, which the " \
+            "pipelined superstep only learns one interaction later — " \
+            "run top-k under blocking/nonblocking (capability matrix)"
 
     # -- perm plumbing -----------------------------------------------------
 
@@ -328,45 +354,57 @@ class GossipTransport:
     # -- exchange primitives ----------------------------------------------
 
     def mix_pair(self, tree, perm, matched, *, quantize: bool = False,
-                 prev=None, rng=None, mask=None):
+                 prev=None, rng=None, mask=None, residual=None):
         """Average each node's `tree` entry with its partner's — over the
-        flat-buffer transport unless a *_legacy oracle (or a >8-bit
-        payload) is selected. `perm` is the raw engine input (it carries
-        the scalar pool index in ppermute_pool modes); `matched` is the
-        already-gated landing mask ((perm != arange) & mask for matchings;
-        an arbitrary gate for directed exchanges). `mask` is additionally
-        threaded to the flat shard_map transports, whose wire pairs are
-        compiled in, so a dynamic gate can land a PARTIAL matching."""
+        flat-buffer transport unless a *_legacy oracle is selected. `perm`
+        is the raw engine input (it carries the scalar pool index in
+        ppermute_pool modes); `matched` is the already-gated landing mask
+        ((perm != arange) & mask for matchings; an arbitrary gate for
+        directed exchanges). `mask` is additionally threaded to the flat
+        shard_map transports, whose wire pairs are compiled in, so a
+        dynamic gate can land a PARTIAL matching.
+
+        When the transport's codec carries an error-feedback residual
+        (`self.codec.carries_residual`) the call takes and RETURNS the
+        buffer-shaped residual: -> (mixed_tree, new_residual); every other
+        codec returns the mixed tree alone (the pre-codec signature)."""
         if mask is not None and self.base_impl != "gather" and \
                 self.routes_per_leaf(quantize):
             raise NotImplementedError(
                 "participation masks are supported on the flat transports "
                 "and the gather_legacy oracle only; the per-leaf ppermute "
                 "legacy oracles bake a full static matching")
-        quant = self.quant if quantize else None
+        ef = quantize and self.codec.carries_residual
+        quant = self.codec if quantize else None
         if self.routes_per_leaf(quantize):
+            # per-leaf oracles speak the lattice scheme only (checked in
+            # __init__), and never carry a residual
+            lat = self.quant if quantize else None
             if self.base_impl == "ppermute":
                 return gossip_ppermute(tree, self.param_specs, self.mesh,
                                        self.node_axes, self.static_pairs,
-                                       quant=quant, prev=prev, rng=rng)
+                                       quant=lat, prev=prev, rng=rng)
             if self.base_impl == "ppermute_pool":
                 return gossip_ppermute_pool(
                     tree, self.param_specs, self.mesh, self.node_axes,
                     self.matching_pool, perm.reshape(-1)[0],
-                    quant=quant, prev=prev, rng=rng)
+                    quant=lat, prev=prev, rng=rng)
             if quantize:
-                return gossip_quantized(self.quant, tree, prev, perm,
+                return gossip_quantized(lat, tree, prev, perm,
                                         matched, rng)
             return gossip_exact(tree, perm, matched)
-        layout = B.build_layout(tree, block=self.quant.block)
+        layout = B.build_layout(tree, block=self.codec.block)
         buf = B.pack(layout, tree)
         pbuf = B.pack(layout, prev) if quantize else None
+        new_residual = None
         if self.base_impl == "gather":
-            buf = (B.gossip_flat_quantized(self.quant, buf, pbuf, perm,
-                                           matched, rng)
-                   if quantize else
-                   B.gossip_flat_exact(
-                       buf, perm, matched if mask is not None else None))
+            if quantize:
+                buf, new_residual = B.gossip_flat_coded(
+                    self.codec, buf, pbuf, perm, matched, rng,
+                    residual=residual)
+            else:
+                buf = B.gossip_flat_exact(
+                    buf, perm, matched if mask is not None else None)
         elif self.base_impl == "ppermute":
             buf = B.gossip_flat_ppermute(
                 buf, self.mesh, self.node_axes, self.static_pairs,
@@ -376,7 +414,8 @@ class GossipTransport:
                 buf, self.mesh, self.node_axes, self.matching_pool,
                 perm.reshape(-1)[0], quant=quant, prev_buf=pbuf, rng=rng,
                 mask=mask)
-        return B.unpack(layout, buf)
+        out = B.unpack(layout, buf)
+        return (out, new_residual) if ef else out
 
     def global_mean(self, tree, mask=None):
         """(Masked) mean over the node axis, broadcast back to every node —
@@ -400,7 +439,7 @@ class GossipTransport:
                 mu = jnp.sum(wx, axis=0, keepdims=True) / denom
                 return jnp.broadcast_to(mu, x.shape).astype(x.dtype)
             return jax.tree.map(leaf_mean, tree)
-        layout = B.build_layout(tree, block=self.quant.block)
+        layout = B.build_layout(tree, block=self.codec.block)
         return B.unpack(layout, B.gossip_flat_mean(B.pack(layout, tree),
                                                    mask))
 
@@ -413,7 +452,7 @@ class GossipTransport:
                 lambda x: jnp.einsum(
                     "nm,m...->n...", W,
                     x.astype(jnp.float32)).astype(x.dtype), tree)
-        layout = B.build_layout(tree, block=self.quant.block)
+        layout = B.build_layout(tree, block=self.codec.block)
         return B.unpack(layout, B.gossip_flat_matrix(W, B.pack(layout,
                                                                tree)))
 
@@ -434,9 +473,19 @@ class GossipTransport:
             pool_idx, self.n_nodes)
 
     def payload_num_bytes(self, tree, quantize: bool = False) -> int:
-        """Exact wire bytes per node for one gossip send of `tree`."""
-        layout = B.build_layout(tree, block=self.quant.block)
-        return layout.payload_num_bytes(self.quant if quantize else None)
+        """Exact wire bytes per node for one gossip send of `tree` —
+        priced from the codec's declared WireLayout (quant/codecs.py)."""
+        layout = B.build_layout(tree, block=self.codec.block)
+        return layout.payload_num_bytes(self.codec if quantize else None)
+
+    def residual_like(self, tree):
+        """Zero-initialized error-feedback residual for `tree` (the
+        buffer-shaped [n_nodes, n_padded] slot SwarmState carries when
+        the codec does), or None for residual-free codecs."""
+        if not self.codec.carries_residual:
+            return None
+        layout = B.build_layout(tree, block=self.codec.block)
+        return jnp.zeros((layout.n_nodes, layout.n_padded), jnp.float32)
 
 
 def transport_from_config(scfg, graph, seed: int = 0, param_probe=None
@@ -445,11 +494,19 @@ def transport_from_config(scfg, graph, seed: int = 0, param_probe=None
     single-host training mesh (one shard: the collective degenerates to a
     local permute; the same wiring carries a real node mesh on multi-device
     runs). `param_probe` is an abstract single-node param tree, only needed
-    for the per-leaf legacy (or >8-bit) shard_map modes, which shard each
-    leaf by its own replicated spec."""
+    for the per-leaf legacy shard_map modes, which shard each leaf by its
+    own replicated spec.
+
+    The wire format comes from `scfg.codec` (+ `scfg.quant` seeding the
+    lattice family). Every supported codec runs the FLAT transport — the
+    historical silent bits>8 per-leaf fallback is gone: an unsupported
+    width/impl combination raises HERE, at config time, naming the codec
+    matrix, never by quietly degrading to the slow path."""
     impl = scfg.gossip_impl
     base = impl[:-len("_legacy")] if impl.endswith("_legacy") else impl
-    kw = dict(quant=getattr(scfg, "quant", None))
+    quant = getattr(scfg, "quant", None)
+    codec = make_codec(getattr(scfg, "codec", None), quant)
+    kw = dict(quant=quant, codec=codec)
     if base != "gather":
         from jax.sharding import PartitionSpec as P
 

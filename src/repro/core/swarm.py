@@ -50,6 +50,7 @@ from repro.core.exchange import (  # noqa: F401  (re-exports: tests import
     make_matching_pool, masked_mean_loss,
 )
 from repro.core.potential import gamma_potential
+from repro.quant.codecs import make_codec
 from repro.quant.schemes import ModularQuantConfig
 
 Identity = lambda x, kind: x  # noqa: E731
@@ -71,6 +72,12 @@ class SwarmConfig:
     # nonblocking=True and a flat (non-legacy, bits<=8) transport.
     quantize: bool = False       # Extension 3
     quant: ModularQuantConfig = ModularQuantConfig()
+    # wire codec for the quantized exchange (quant/codecs.py): None follows
+    # `quant` (the lattice scheme at quant.bits — the pre-codec default);
+    # "q2".."q16" | "bf16" | "topk:<frac>" select explicitly. Env default:
+    # REPRO_CODEC (like REPRO_DEFAULT_GOSSIP_IMPL for the transport).
+    codec: Optional[str] = field(default_factory=lambda: os.environ.get(
+        "REPRO_CODEC") or None)
     average_momentum: bool = False  # paper averages MODELS only
     track_potential: bool = True
     # gather (GSPMD gather) | ppermute (shard_map, one static matching) |
@@ -103,12 +110,18 @@ class SwarmState:
     # overlap mode only (DESIGN.md §Pipeline): the double-buffered comm
     # state — {"sbuf": packed params at the last superstep boundary,
     # and when quantized "prev": packed comm copy (the encode proxy),
-    # "q"/"s": the encoded in-flight payload awaiting its collective}.
+    # "wire": the encoded in-flight payload tuple awaiting its collective}.
     inflight: Any = None
+    # error-feedback codecs only (DESIGN.md §Codec): the untransmitted
+    # remainder of the last encode, buffer-shaped [n_nodes, n_padded] fp32
+    # — re-enters the next encode; checkpoint it alongside prev so a
+    # resumed run continues the top-k event sequence bit-exactly
+    # (codec_checkpoint_tree below).
+    residual: Any = None
 
     def tree_flatten(self):
         return (self.params, self.opt, self.prev, self.step,
-                self.inflight), None
+                self.inflight, self.residual), None
 
 
 jax.tree_util.register_pytree_node(
@@ -138,7 +151,36 @@ def swarm_init(rng, cfg: SwarmConfig, param_init: Callable, opt_init: Callable,
         return pipeline_prologue(cfg, state, jax.random.fold_in(rng, 0x1F))
     prev = jax.tree.map(jnp.copy, params) if (cfg.quantize or cfg.nonblocking) \
         else None
-    return SwarmState(params, opt, prev, jnp.zeros((), jnp.int32))
+    residual = None
+    if cfg.quantize:
+        codec = make_codec(cfg.codec, cfg.quant)
+        if codec.carries_residual:
+            layout = B.build_layout(params, block=codec.block)
+            residual = jnp.zeros((cfg.n_nodes, layout.n_padded), jnp.float32)
+    return SwarmState(params, opt, prev, jnp.zeros((), jnp.int32),
+                      residual=residual)
+
+
+def codec_checkpoint_tree(state: SwarmState) -> dict:
+    """What a quantized run must persist to resume its codec state
+    bit-exactly: params, the comm copy (the lattice scale / top-k delta
+    reference) and — for error-feedback codecs — the residual. Feed to
+    checkpoint.save_checkpoint; restore with load_checkpoint against the
+    same structure and `restore_codec_state` (tests/test_codecs.py)."""
+    tree = {"params": state.params}
+    if state.prev is not None:
+        tree["prev"] = state.prev
+    if state.residual is not None:
+        tree["residual"] = state.residual
+    return tree
+
+
+def restore_codec_state(state: SwarmState, tree: dict) -> SwarmState:
+    """Inverse of `codec_checkpoint_tree`: overlay the persisted codec
+    state onto a freshly initialized SwarmState (same config)."""
+    return SwarmState(tree["params"], state.opt,
+                      tree.get("prev", state.prev), state.step,
+                      state.inflight, tree.get("residual", state.residual))
 
 
 def pipeline_prologue(cfg: SwarmConfig, state: SwarmState, rng) -> SwarmState:
@@ -148,13 +190,14 @@ def pipeline_prologue(cfg: SwarmConfig, state: SwarmState, rng) -> SwarmState:
     cfg.overlap; it is also the re-entry point after `pipeline_epilogue`."""
     assert cfg.nonblocking, "overlap pipelining implements Algorithm 2: " \
         "set nonblocking=True"
-    layout = B.build_layout(state.params, block=cfg.quant.block)
+    codec = make_codec(cfg.codec, cfg.quant)
+    layout = B.build_layout(state.params, block=codec.block)
     buf = B.pack(layout, state.params)
     if cfg.quantize:
         prev_buf = B.pack(layout, state.prev) if state.prev is not None \
             else buf
-        q, s = B.encode_flat(cfg.quant, buf, prev_buf, rng)
-        infl = {"sbuf": buf, "prev": prev_buf, "q": q, "s": s}
+        wire = codec.encode(buf, prev_buf, rng)
+        infl = {"sbuf": buf, "prev": prev_buf, "wire": wire}
     else:
         infl = {"sbuf": buf}
     return SwarmState(state.params, state.opt, None, state.step, infl)
@@ -170,7 +213,8 @@ def pipeline_epilogue(cfg: SwarmConfig, state: SwarmState) -> SwarmState:
     Use before checkpointing/serving a pipelined run."""
     prev = state.prev
     if state.inflight is not None and "prev" in state.inflight:
-        layout = B.build_layout(state.params, block=cfg.quant.block)
+        codec = make_codec(cfg.codec, cfg.quant)
+        layout = B.build_layout(state.params, block=codec.block)
         prev = B.unpack(layout, state.inflight["prev"])
     return SwarmState(state.params, state.opt, prev, state.step, None)
 
@@ -221,14 +265,14 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
     """
     h_max = cfg.h_loop_bound
     tr = transport or GossipTransport(
-        cfg.gossip_impl, cfg.n_nodes, quant=cfg.quant, mesh=mesh,
+        cfg.gossip_impl, cfg.n_nodes, quant=cfg.quant,
+        codec=make_codec(cfg.codec, cfg.quant), mesh=mesh,
         node_axes=node_axes, static_pairs=static_pairs,
         matching_pool=matching_pool, param_specs=param_specs)
     assert tr.base_impl in ("gather", "ppermute", "ppermute_pool"), \
         cfg.gossip_impl
-    # bits > 8 payloads also route to the legacy per-leaf transport (the
-    # uint8 flat kernels don't carry them), so they need param_specs too
     tr.check_specs(cfg.quantize)
+    ef = cfg.quantize and tr.codec.carries_residual   # error-feedback codec
     if cfg.overlap:
         assert cfg.nonblocking, \
             "overlap=True pipelines Algorithm 2: set nonblocking=True"
@@ -260,21 +304,21 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         decode+average lands against the STALE packed model exactly as
         Algorithm 2 specifies, and the next payload is packed/encoded from
         the post-interaction model on the way out."""
-        from repro.kernels import ops as K
-
         lr = lr_fn(state.step)
         S = state.params                       # superstep-start models
         infl = state.inflight
         assert infl is not None, \
             "overlap superstep needs a primed pipeline (pipeline_prologue)"
-        layout = B.build_layout(S, block=cfg.quant.block)
+        codec = tr.codec
+        layout = B.build_layout(S, block=codec.block)
         node_perm, pool_idx = tr.resolve_perm(perm)
         matched = node_perm != jnp.arange(cfg.n_nodes)
         if mask is not None:
             matched = matched & mask
 
-        # 1. dispatch the in-flight payload's collective FIRST
-        payload = (infl["q"], infl["s"]) if cfg.quantize else (infl["sbuf"],)
+        # 1. dispatch the in-flight payload's collective FIRST — one
+        # permute per codec wire group (quantized) or the fp32 buffer
+        payload = infl["wire"] if cfg.quantize else (infl["sbuf"],)
         recv = tr.permute_inflight(payload, perm)
 
         # 2. local steps — overlappable with the in-flight exchange
@@ -284,9 +328,7 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         sbuf = infl["sbuf"]
         if cfg.quantize:
             m_rows = jnp.repeat(matched, layout.rows_per_node)
-            base_buf = K.decode_avg(recv[0], recv[1], sbuf, matched=m_rows,
-                                    block=cfg.quant.block,
-                                    bits=cfg.quant.bits)
+            base_buf = codec.decode_avg(recv, sbuf, m_rows)
         else:
             base_buf = (sbuf + recv[0]) * 0.5
         # X_i <- (S_i + X_j')/2 + (X_i - S_i), flat: one pack of the
@@ -306,8 +348,8 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         # Γ sample, never the degenerate zero a post-model refresh would give
         if cfg.quantize:
             prev_buf = jnp.where(m_col, sbuf, infl["prev"])
-            q2, s2 = B.encode_flat(cfg.quant, new_buf, prev_buf, rng)
-            new_infl = {"sbuf": new_buf, "prev": prev_buf, "q": q2, "s": s2}
+            wire2 = codec.encode(new_buf, prev_buf, rng)
+            new_infl = {"sbuf": new_buf, "prev": prev_buf, "wire": wire2}
         else:
             new_infl = {"sbuf": new_buf}
 
@@ -326,14 +368,23 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         if mask is not None:
             matched = matched & mask
 
+        new_residual = state.residual
+
         def exchange(tree, use_quant: bool):
             """Average each node's `tree` entry with its partner's through
-            the transport (flat-buffer unless a *_legacy oracle or a >8-bit
-            payload routes per-leaf). `perm` carries the scalar pool index
-            in ppermute_pool modes."""
-            return tr.mix_pair(tree, perm, matched, quantize=use_quant,
-                               prev=state.prev if use_quant else None,
-                               rng=rng, mask=mask)
+            the transport (flat-buffer unless a *_legacy oracle routes
+            per-leaf). `perm` carries the scalar pool index in
+            ppermute_pool modes. Error-feedback codecs additionally thread
+            the residual slot through the encode (closed over, since only
+            one quantized exchange runs per superstep)."""
+            nonlocal new_residual
+            out = tr.mix_pair(tree, perm, matched, quantize=use_quant,
+                              prev=state.prev if use_quant else None,
+                              rng=rng, mask=mask,
+                              residual=state.residual if use_quant else None)
+            if use_quant and ef:
+                out, new_residual = out
+            return out
 
         if cfg.nonblocking:
             # Algorithm 2: X_i <- (S_i + X_j') / 2 + (X_i - S_i), where the
@@ -373,7 +424,8 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         metrics = _metrics(losses, matched, mask, lr)
         if cfg.track_potential:
             metrics["gamma"] = gamma_potential(params)
-        return SwarmState(params, opt, new_prev, state.step + 1), metrics
+        return SwarmState(params, opt, new_prev, state.step + 1,
+                          residual=new_residual), metrics
 
     return pipelined_superstep if cfg.overlap else superstep
 

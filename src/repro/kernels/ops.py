@@ -36,40 +36,50 @@ def _to_blocks(x, block: int, tile_rows: int):
 
 def quantize_mod(x, ref, u, *, block: int = 256, safety: float = 8.0,
                  min_scale: float = 1e-8, bits: int = 8,
-                 backend: str | None = None, tile_rows: int = 8):
+                 backend: str | None = None, tile_rows: int = 8,
+                 pack4: bool = False):
+    """pack4 (bits <= 4): q ships packed [R, block/2], two codes per byte
+    (half-split nibble layout; fused into the encode tile — the Pallas
+    path is gated behind the same ref fallback as every kernel, so
+    CPU-only CI runs the jnp oracle)."""
     backend = backend or DEFAULT_BACKEND
     xb, pad = _to_blocks(x, block, tile_rows)
     rb, _ = _to_blocks(ref, block, tile_rows)
     ub, _ = _to_blocks(u, block, tile_rows)
     if backend == "ref":
         q, s = ref_ops.quantize_mod_ref(xb, rb, ub, safety=safety,
-                                        min_scale=min_scale, bits=bits)
+                                        min_scale=min_scale, bits=bits,
+                                        pack4=pack4)
     else:
         q, s = quantize_mod_pallas(xb, rb, ub, safety=safety,
                                    min_scale=min_scale, bits=bits,
                                    tile_rows=tile_rows,
-                                   interpret=(backend == "interpret"))
+                                   interpret=(backend == "interpret"),
+                                   pack4=pack4)
     return q, s, pad
 
 
 def decode_avg(q, s, y, *, block: int = 256, bits: int = 8,
                average: bool = True, matched=None,
-               backend: str | None = None, tile_rows: int = 8):
+               backend: str | None = None, tile_rows: int = 8,
+               pack4: bool = False):
     """q,s from quantize_mod; y: the receiver tensor (original shape).
 
     matched: optional per-row [R] mask (R = q.shape[0]); rows with mask==0
     return y unchanged — the gossip "unmatched keeps own model" select, fused
-    into the decode+average pass.
+    into the decode+average pass. pack4: q arrives packed [R, block/2]; the
+    unpack is fused into the decode tile.
     """
     backend = backend or DEFAULT_BACKEND
     yb, pad = _to_blocks(y, block, tile_rows)
     if backend == "ref":
         out = ref_ops.decode_avg_ref(q, s, yb, bits=bits, average=average,
-                                     matched=matched)
+                                     matched=matched, pack4=pack4)
     else:
         out = decode_avg_pallas(q, s, yb, bits=bits, average=average,
                                 matched=matched, tile_rows=tile_rows,
-                                interpret=(backend == "interpret"))
+                                interpret=(backend == "interpret"),
+                                pack4=pack4)
     flat = out.reshape(-1)
     if pad:
         flat = flat[:-pad]

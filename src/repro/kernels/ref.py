@@ -4,20 +4,47 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def pack_nibbles_ref(q):
+    """[R, B] uint8 codes in [0, 16) -> [R, B/2] uint8, two codes per byte.
+
+    Half-split layout: the LOW nibble of byte c holds column c, the HIGH
+    nibble holds column c + B/2 — lane-aligned halves (no strided access),
+    so the Pallas tiles pack/unpack with two plain sub-block slices
+    (kernels/quantize_mod.py, kernels/decode_avg.py use the same layout)."""
+    half = q.shape[-1] // 2
+    lo = q[..., :half].astype(jnp.uint8)
+    hi = q[..., half:].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles_ref(packed):
+    """Inverse of `pack_nibbles_ref`: [R, B/2] uint8 -> [R, B] uint8."""
+    lo = packed & jnp.uint8(0x0F)
+    hi = (packed >> 4) & jnp.uint8(0x0F)
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
 def quantize_mod_ref(x, ref, u, *, safety: float = 8.0,
-                     min_scale: float = 1e-8, bits: int = 8):
+                     min_scale: float = 1e-8, bits: int = 8,
+                     pack4: bool = False):
     levels = 1 << bits
     half = levels // 2
     xf = x.astype(jnp.float32)
     rf = ref.astype(jnp.float32)
     dist = jnp.max(jnp.abs(xf - rf), axis=1, keepdims=True)
     s = jnp.maximum(dist * (safety / half), min_scale)
-    q = jnp.mod(jnp.floor(xf / s + u), levels).astype(jnp.uint8)
+    wire_dtype = jnp.uint8 if bits <= 8 else jnp.uint16
+    q = jnp.mod(jnp.floor(xf / s + u), levels).astype(wire_dtype)
+    if pack4:
+        assert bits <= 4, f"nibble packing needs bits <= 4, got {bits}"
+        q = pack_nibbles_ref(q)
     return q, s
 
 
 def decode_avg_ref(q, s, y, *, bits: int = 8, average: bool = True,
-                   matched=None):
+                   matched=None, pack4: bool = False):
+    if pack4:
+        q = unpack_nibbles_ref(q)
     levels = 1 << bits
     half = levels // 2
     yf = y.astype(jnp.float32)

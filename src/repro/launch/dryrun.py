@@ -90,18 +90,23 @@ def build_train(cfg, shape, mesh, gossip: str, quantize: bool = False,
     if overlap:
         # pipelined mode: the comm copy + in-flight payload live packed in
         # SwarmState.inflight (DESIGN.md §Pipeline); BucketLayout works on
-        # ShapeDtypeStructs, so the wire shapes come out without an init
+        # ShapeDtypeStructs, so the wire shapes come out without an init —
+        # the codec's declared WireLayout supplies the wire-group SDS
         from repro.core import bucket as B
-        lay = B.build_layout(psds, block=scfg.quant.block)
+        from repro.quant.codecs import make_codec
+        codec = make_codec(scfg.codec, scfg.quant)
+        lay = B.build_layout(psds, block=codec.block)
         buf = jax.ShapeDtypeStruct((n_nodes, lay.n_padded), jnp.float32)
         infl_sds = {"sbuf": buf}
+        infl_spec = {"sbuf": P(node_part, None)}
         if quantize:
             rows = n_nodes * lay.rows_per_node
             infl_sds.update(
-                prev=buf,
-                q=jax.ShapeDtypeStruct((rows, scfg.quant.block), jnp.uint8),
-                s=jax.ShapeDtypeStruct((rows, 1), jnp.float32))
-        infl_spec = {k: P(node_part, None) for k in infl_sds}
+                prev=buf, wire=codec.wire_layout().wire_sds(rows))
+            infl_spec.update(
+                prev=P(node_part, None),
+                wire=tuple(P(node_part, None)
+                           for _ in infl_sds["wire"]))
     state_sds = SwarmState(psds, msds, prev_sds,
                            jax.ShapeDtypeStruct((), jnp.int32), infl_sds)
     state_spec = SwarmState(pspec, {"m": pspec},

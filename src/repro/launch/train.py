@@ -40,14 +40,17 @@ def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
                   gossip_impl: str = None, pool_size: int = 8,
                   overlap: bool = False, h_max: int = 8,
                   quant: ModularQuantConfig = None,
-                  rate_profile: str = "none"):
+                  rate_profile: str = "none", codec: str = None):
     """One construction path for EVERY algorithm (DESIGN.md §Baselines):
     validate the requested combination against the capability matrix,
-    build ONE GossipTransport, route all algorithms — swarm included —
-    through make_algorithm with the uniform factory signature."""
+    build ONE GossipTransport (whose wire codec comes from `codec`, the
+    ``--codec`` spec — None follows the quant config = the q8 lattice),
+    route all algorithms — swarm included — through make_algorithm with
+    the uniform factory signature."""
     caps = validate_run_config(algo, gossip_impl=gossip_impl,
                                quantize=quantize, nonblocking=nonblocking,
-                               overlap=overlap, rate_profile=rate_profile)
+                               overlap=overlap, rate_profile=rate_profile,
+                               codec=codec)
     graph = make_graph(graph_kind, n_nodes)
     opt = make_optimizer("sgd", lr=lr, momentum=momentum,
                          state_dtype=cfg.opt_state_dtype)
@@ -65,6 +68,8 @@ def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
                quantize=quantize,
                nonblocking=nonblocking or overlap, overlap=overlap,
                quant=quant or ModularQuantConfig(), pool_size=pool_size)
+    if codec is not None:
+        skw["codec"] = codec
     if gossip_impl is not None:
         skw["gossip_impl"] = gossip_impl
     scfg = SwarmConfig(**skw)
@@ -249,6 +254,14 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--codec", default=os.environ.get("REPRO_CODEC") or None,
+                    help="wire codec for --quantize (DESIGN.md §Codec): "
+                         "q2..q16 (modular lattice — q4 and below pack two "
+                         "codes per byte, q9+ widen to a uint16 wire), bf16 "
+                         "(straight cast), topk:<frac> (per-row top-k + "
+                         "error feedback, e.g. topk:0.25). Default: the q8 "
+                         "lattice at the quant config's bit width. Env "
+                         "default: REPRO_CODEC")
     ap.add_argument("--nonblocking", action="store_true")
     ap.add_argument("--overlap", action="store_true",
                     help="pipelined non-blocking superstep: dispatch the "
@@ -318,7 +331,7 @@ def main():
     caps = validate_run_config(
         args.algo, gossip_impl=args.gossip_impl, quantize=args.quantize,
         nonblocking=args.nonblocking, overlap=args.overlap,
-        rate_profile=args.rate_profile)
+        rate_profile=args.rate_profile, codec=args.codec)
     h_mode = args.h_mode
     if sched_on and args.rate_profile != "uniform" and caps.local_H:
         h_mode = "trace"           # per-node counts come from the bridge
@@ -327,7 +340,7 @@ def main():
         args.nonblocking, args.graph, args.seed, h_mode,
         gossip_impl=args.gossip_impl, pool_size=args.pool_size,
         overlap=args.overlap, h_max=args.h_max,
-        rate_profile=args.rate_profile)
+        rate_profile=args.rate_profile, codec=args.codec)
     rng_np = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed + 1)
     h_max = scfg.h_loop_bound
@@ -397,7 +410,8 @@ def main():
                                  predict_all_modes, predict_bsp_walltime)
         cp = cost_params_from_model(cfg, seq_len=args.seq,
                                     local_batch=args.batch,
-                                    quantize=args.quantize)
+                                    quantize=args.quantize,
+                                    codec=args.codec)
         if caps.pricing == "pairwise":
             predicted = predict_all_modes(trace, cp)
         else:
@@ -409,7 +423,23 @@ def main():
         meta = {"arch": cfg.name, "algo": args.algo, "steps": args.steps}
         if sched_on:
             meta["sched"] = sched_checkpoint_meta(args, trace, clocks)
-        save_checkpoint(args.ckpt, jax.device_get(state.params), meta)
+        if args.quantize:
+            # persist the codec state (comm copy + error-feedback residual)
+            # alongside the params so a resumed quantized run continues
+            # the encode sequence bit-exactly (tests/test_codecs.py). A
+            # pipelined run drains FIRST: in overlap mode the comm copy
+            # lives packed in state.inflight, and the epilogue unpacks it
+            # back into prev so the checkpoint carries a LIVE scale proxy
+            from repro.core.swarm import codec_checkpoint_tree
+            if scfg.overlap:
+                from repro.core import pipeline_epilogue
+                state = pipeline_epilogue(scfg, state)
+            tree = codec_checkpoint_tree(state)
+            meta["codec"] = {"spec": args.codec or "q8",
+                             "state": sorted(tree)}
+            save_checkpoint(args.ckpt, jax.device_get(tree), meta)
+        else:
+            save_checkpoint(args.ckpt, jax.device_get(state.params), meta)
         print("checkpoint ->", args.ckpt)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

@@ -1,3 +1,7 @@
+from repro.quant.codecs import (  # noqa: F401
+    CODEC_FAMILIES, Bf16Codec, LatticeCodec, TopKCodec, WireCodec,
+    WireGroup, WireLayout, make_codec,
+)
 from repro.quant.schemes import (  # noqa: F401
     ModularQuantConfig, decode_modular, encode_modular, payload_bytes,
     quantized_pair_average,

@@ -1,0 +1,356 @@
+"""Pluggable wire codecs (DESIGN.md §Codec).
+
+The paper's communication reduction hinges on ONE quantizer Q (the modular
+lattice scheme of `schemes.py`), but the codec is exactly where
+decentralized methods differentiate — quantized push-sum, DIGEST-style
+frugal local updates, top-k sparsification. This module makes the wire
+format a first-class axis: a :class:`WireCodec` owns
+
+* a declared :class:`WireLayout` — ordered row groups with per-group dtype
+  and width over the bucketed ``[rows, block]`` layout, from which the
+  EXACT per-node payload bytes follow (``payload_num_bytes``; asserted
+  against the real packed arrays in tests/test_codecs.py);
+* ``encode(buf, prev_buf, rng) -> wire`` — the sender half, producing one
+  array per wire group, every array row-grouped (leading dim = n_rows of
+  the blocked buffer) so the transport's permute/ppermute machinery moves
+  any codec's payload without knowing its format;
+* ``decode_avg(wire, ybuf, matched_rows) -> mixed`` — the fused receiver
+  half: decode against the receiver's own buffer, average, apply the
+  per-row matched mask (unmatched rows keep y bitwise).
+
+Codecs:
+
+``q2..q8``  — the paper's modular lattice on a uint8 wire (q4 and below
+              pack TWO codes per byte: lo nibble = cols [0, B/2), hi
+              nibble = cols [B/2, B) of the same row — the half-split
+              keeps the packed array lane-aligned for the Pallas kernels,
+              kernels/quantize_mod.py);
+``q9..q16`` — the same lattice on a uint16 wire (lifts the historical
+              ``bits <= 8`` flat-transport restriction);
+``bf16``    — straight bfloat16 cast, no scales, no rng, no reference:
+              2 bytes/coordinate, the "just send less precision" baseline;
+``topk:F``  — per-row top-k(+error feedback) of the movement since the
+              comm copy: ships ceil(F·B) (value fp32, index uint8) pairs
+              per row; the untransmitted remainder is carried as a
+              residual in ``SwarmState.residual`` and re-enters the next
+              encode (EF keeps the compression unbiased in the long run).
+
+The default ``q8`` codec routes through EXACTLY the same kernel calls the
+pre-codec transport hard-wired, so default-codec trajectories stay bitwise
+identical (tests/test_baseline_parity.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.schemes import ModularQuantConfig
+
+#: codec families the capability matrix speaks in (algorithms/registry.py)
+CODEC_FAMILIES = ("q8", "q4", "q16", "bf16", "topk")
+
+
+@dataclass(frozen=True)
+class WireGroup:
+    """One tensor of the wire payload: [n_rows, cols] of `dtype`."""
+    name: str
+    dtype: str          # numpy dtype name ("uint8", "float32", ...)
+    cols: int
+
+    @property
+    def bytes_per_row(self) -> int:
+        return self.cols * np.dtype(self.dtype).itemsize
+
+
+@dataclass(frozen=True)
+class WireLayout:
+    """The codec's declared wire format over the [rows, block] bucket
+    layout — the single source of truth the cost model, the benchmarks
+    and the byte-truthfulness tests all price from."""
+    block: int
+    groups: Tuple[WireGroup, ...]
+
+    @property
+    def bytes_per_row(self) -> int:
+        return sum(g.bytes_per_row for g in self.groups)
+
+    def payload_num_bytes(self, n_padded: int) -> int:
+        """Exact wire bytes PER NODE for a [*, n_padded] buffer."""
+        assert n_padded % self.block == 0, (n_padded, self.block)
+        return (n_padded // self.block) * self.bytes_per_row
+
+    def wire_sds(self, n_rows: int):
+        """ShapeDtypeStructs of the wire arrays for `n_rows` blocked rows —
+        what the dry-run lowers without a real init (launch/dryrun.py)."""
+        return tuple(jax.ShapeDtypeStruct((n_rows, g.cols),
+                                          jnp.dtype(g.dtype))
+                     for g in self.groups)
+
+
+class WireCodec:
+    """Base: one wire format threaded kernels -> bucket -> exchange ->
+    algorithms -> cost model -> CLI. Subclasses set the class attributes
+    and implement `wire_layout` / `encode` / `decode_avg`."""
+
+    name: str = "?"
+    family: str = "?"            # capability-matrix family (CODEC_FAMILIES)
+    block: int = 256
+    needs_prev: bool = False     # encode reads the sender's comm copy
+    needs_rng: bool = False      # stochastic rounding
+    carries_residual: bool = False  # error-feedback slot in SwarmState
+
+    def wire_layout(self) -> WireLayout:
+        raise NotImplementedError
+
+    def payload_num_bytes(self, n_padded: int) -> int:
+        return self.wire_layout().payload_num_bytes(n_padded)
+
+    def encode(self, buf, prev_buf, rng, *, tile_rows: int = 8,
+               backend=None) -> Tuple[jax.Array, ...]:
+        """[*, n_padded] buffer -> wire tuple (one array per WireGroup,
+        leading dim = total blocked rows, node-contiguous)."""
+        raise NotImplementedError
+
+    def encode_ef(self, buf, prev_buf, rng, residual, *, tile_rows: int = 8,
+                  backend=None):
+        """Error-feedback encode: -> (wire, residual_after_send) where
+        `residual` is buffer-shaped ([*, n_padded] fp32). Only meaningful
+        when `carries_residual`; the caller gates the residual update by
+        the matched mask (unsent payloads leave the residual untouched)."""
+        assert not self.carries_residual, \
+            f"{self.name}: carries_residual codecs must override encode_ef"
+        return self.encode(buf, prev_buf, rng, tile_rows=tile_rows,
+                           backend=backend), residual
+
+    def decode_avg(self, wire, ybuf, matched_rows=None, *,
+                   tile_rows: int = 8, backend=None) -> jax.Array:
+        """wire (already permuted to the receiver) + receiver's [*,
+        n_padded] buffer -> (y + decode(wire; y)) / 2, per-row masked."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Lattice family: q2..q16 (the paper's modular scheme, packed below 5 bits)
+# ---------------------------------------------------------------------------
+
+
+class LatticeCodec(WireCodec):
+    """Davies-et-al. modular lattice on a uint8/uint16 wire. ``packed``
+    (bits <= 4) ships two codes per byte via the half-split nibble layout;
+    bits in 9..16 widen the wire to uint16 — both through the same fused
+    Pallas quantize_mod / decode_avg tiles (kernels/, ref fallback for
+    CPU-only CI)."""
+
+    needs_rng = True
+
+    def __init__(self, quant: ModularQuantConfig):
+        if quant.bits > 16:
+            raise ValueError(
+                f"lattice codec: bits={quant.bits} exceeds the uint16 wire; "
+                "supported codecs: q2..q16, bf16, topk:<frac> "
+                "(see the codec axis of algorithms/registry.py CAPABILITIES)")
+        self.quant = quant
+        self.block = quant.block
+        self.packed = quant.bits <= 4
+        self.name = f"q{quant.bits}"
+        self.family = ("q4" if quant.bits <= 4 else
+                       "q8" if quant.bits <= 8 else "q16")
+        # fixed-resolution encodes need no distance proxy
+        self.needs_prev = quant.resolution is None
+
+    def wire_layout(self) -> WireLayout:
+        if self.packed:
+            q = WireGroup("q", "uint8", self.block // 2)
+        elif self.quant.bits <= 8:
+            q = WireGroup("q", "uint8", self.block)
+        else:
+            q = WireGroup("q", "uint16", self.block)
+        return WireLayout(self.block, (q, WireGroup("s", "float32", 1)))
+
+    def encode(self, buf, prev_buf, rng, *, tile_rows: int = 8,
+               backend=None):
+        from repro.kernels import ops as K
+        qcfg = self.quant
+        u = jax.random.uniform(rng, buf.shape, jnp.float32)
+        if qcfg.resolution is not None:
+            # fixed absolute resolution (the paper's ε): scale is a
+            # constant, no distance proxy — plain stochastic-rounded
+            # mod-encode, packed afterwards for the sub-byte wire
+            levels = 1 << qcfg.bits
+            xb = buf.reshape(-1, qcfg.block)
+            s = jnp.full((xb.shape[0], 1), qcfg.resolution, jnp.float32)
+            q = jnp.mod(jnp.floor(xb / s + u.reshape(-1, qcfg.block)), levels)
+            q = q.astype(jnp.uint8 if qcfg.bits <= 8 else jnp.uint16)
+            if self.packed:
+                from repro.kernels import ref as R
+                q = R.pack_nibbles_ref(q)
+            return q, s
+        q, s, pad = K.quantize_mod(buf, prev_buf, u, block=qcfg.block,
+                                   safety=qcfg.safety,
+                                   min_scale=qcfg.min_scale, bits=qcfg.bits,
+                                   tile_rows=tile_rows, backend=backend,
+                                   pack4=self.packed)
+        assert pad == 0, "flat buffer must be pre-aligned to the kernel layout"
+        return q, s
+
+    def decode_avg(self, wire, ybuf, matched_rows=None, *,
+                   tile_rows: int = 8, backend=None):
+        from repro.kernels import ops as K
+        q, s = wire
+        return K.decode_avg(q, s, ybuf, matched=matched_rows,
+                            block=self.quant.block, bits=self.quant.bits,
+                            tile_rows=tile_rows, backend=backend,
+                            pack4=self.packed)
+
+
+# ---------------------------------------------------------------------------
+# bf16 cast: no scales, no rng, no reference — 2 bytes/coordinate
+# ---------------------------------------------------------------------------
+
+
+class Bf16Codec(WireCodec):
+    name = "bf16"
+    family = "bf16"
+
+    def __init__(self, block: int = 256):
+        self.block = block
+
+    def wire_layout(self) -> WireLayout:
+        return WireLayout(self.block,
+                          (WireGroup("v", "bfloat16", self.block),))
+
+    def encode(self, buf, prev_buf, rng, *, tile_rows: int = 8,
+               backend=None):
+        del prev_buf, rng
+        return (buf.reshape(-1, self.block).astype(jnp.bfloat16),)
+
+    def decode_avg(self, wire, ybuf, matched_rows=None, *,
+                   tile_rows: int = 8, backend=None):
+        yb = ybuf.reshape(-1, self.block).astype(jnp.float32)
+        xh = wire[0].astype(jnp.float32)
+        out = (yb + xh) * 0.5
+        if matched_rows is not None:
+            out = jnp.where(matched_rows.reshape(-1, 1) != 0, out, yb)
+        return out.reshape(ybuf.shape).astype(ybuf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# top-k + error feedback: sparse movement-since-comm-copy, residual carried
+# ---------------------------------------------------------------------------
+
+
+class TopKCodec(WireCodec):
+    """Per-row top-k of d = (x - prev) + residual: the k largest-|.|
+    coordinates of the sender's movement since its comm copy (plus the
+    error-feedback carry) ship as (fp32 value, uint8 in-row index) pairs;
+    the receiver reconstructs x̂ = y + c_sparse against its OWN model —
+    the same receiver-as-reference structure as the lattice decode — and
+    averages to y + c/2. The untransmitted remainder d - c becomes the
+    new residual, so compression error re-enters the next encode instead
+    of being dropped (error feedback)."""
+
+    needs_prev = True
+    carries_residual = True
+
+    def __init__(self, frac: float, block: int = 256):
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"topk fraction must be in (0, 1], got {frac}")
+        if block > 256:
+            raise ValueError("topk's uint8 in-row index needs block <= 256")
+        self.frac = float(frac)
+        self.block = block
+        self.k = max(1, int(round(frac * block)))
+        self.name = f"topk:{frac:g}"
+        self.family = "topk"
+
+    def wire_layout(self) -> WireLayout:
+        return WireLayout(self.block,
+                          (WireGroup("vals", "float32", self.k),
+                           WireGroup("idx", "uint8", self.k)))
+
+    def _select(self, d):
+        """[R, block] intended message -> (vals [R,k], idx int32 [R,k])."""
+        _, idx = jax.lax.top_k(jnp.abs(d), self.k)
+        return jnp.take_along_axis(d, idx, axis=1), idx
+
+    @staticmethod
+    def _scatter(d, idx, vals):
+        """The dense [R, block] transmitted part — only the error-feedback
+        residual needs it; the plain encode ships (vals, idx) alone."""
+        rows = jnp.arange(d.shape[0])[:, None]
+        return jnp.zeros_like(d).at[rows, idx].set(vals)
+
+    def encode(self, buf, prev_buf, rng, *, tile_rows: int = 8,
+               backend=None):
+        del rng
+        d = (buf - prev_buf).reshape(-1, self.block).astype(jnp.float32)
+        vals, idx = self._select(d)
+        return vals, idx.astype(jnp.uint8)
+
+    def encode_ef(self, buf, prev_buf, rng, residual, *, tile_rows: int = 8,
+                  backend=None):
+        del rng
+        d = (buf - prev_buf).reshape(-1, self.block).astype(jnp.float32)
+        if residual is not None:
+            d = d + residual.reshape(-1, self.block)
+        vals, idx = self._select(d)
+        res_after = (d - self._scatter(d, idx, vals)).reshape(buf.shape)
+        return (vals, idx.astype(jnp.uint8)), res_after
+
+    def decode_avg(self, wire, ybuf, matched_rows=None, *,
+                   tile_rows: int = 8, backend=None):
+        vals, idx = wire
+        yb = ybuf.reshape(-1, self.block).astype(jnp.float32)
+        rows = jnp.arange(yb.shape[0])[:, None]
+        c = jnp.zeros_like(yb).at[rows, idx.astype(jnp.int32)].set(
+            vals.astype(jnp.float32))
+        out = yb + 0.5 * c           # (y + (y + c)) / 2
+        if matched_rows is not None:
+            out = jnp.where(matched_rows.reshape(-1, 1) != 0, out, yb)
+        return out.reshape(ybuf.shape).astype(ybuf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing — the `--codec` grammar (launch/train.py, REPRO_CODEC)
+# ---------------------------------------------------------------------------
+
+
+def make_codec(spec: Optional[str] = None,
+               quant: Optional[ModularQuantConfig] = None) -> WireCodec:
+    """``q<bits>`` | ``bf16`` | ``topk:<frac>`` -> WireCodec.
+
+    `quant` seeds the lattice family's scale policy (block/safety/
+    resolution); a ``q<bits>`` spec overrides its bit width. ``spec=None``
+    follows the quant config itself (the pre-codec behavior: q8 default).
+    Unsupported specs raise at CONFIG time — never a silent fallback."""
+    q = quant or ModularQuantConfig()
+    if spec is None or spec == "":
+        return LatticeCodec(q)
+    if spec == "bf16":
+        return Bf16Codec(block=q.block)
+    if spec.startswith("topk:"):
+        try:
+            frac = float(spec.split(":", 1)[1])
+        except ValueError:
+            raise ValueError(f"--codec {spec!r}: want topk:<frac>, "
+                             "e.g. topk:0.25")
+        return TopKCodec(frac, block=q.block)
+    if spec.startswith("q"):
+        try:
+            bits = int(spec[1:])
+        except ValueError:
+            raise ValueError(f"--codec {spec!r}: unknown codec; supported: "
+                             "q2..q16, bf16, topk:<frac>")
+        if not 2 <= bits <= 16:
+            raise ValueError(
+                f"--codec {spec!r}: the lattice wire carries 2..16 bits "
+                "(uint8/uint16); see the codec axis of "
+                "algorithms/registry.py CAPABILITIES")
+        return LatticeCodec(dataclasses.replace(q, bits=bits))
+    raise ValueError(f"--codec {spec!r}: unknown codec; supported: "
+                     "q2..q16, bf16, topk:<frac>")

@@ -10,8 +10,9 @@ each trace event from the repo's own performance models:
   step, against per-chip peaks from `launch/mesh.py`), divided by the
   node's relative speed;
 * communication — the bucketed transport's EXACT packed payload bytes
-  (`BucketLayout.payload_num_bytes`, fp32 or the quantized uint8+scales
-  pair) over link bandwidth, plus a fixed per-message latency.
+  (`BucketLayout.payload_num_bytes`, fp32 or the selected wire codec's
+  declared layout — q8/q4/q16 lattice, bf16 cast, top-k sparse) over link
+  bandwidth, plus a fixed per-message latency.
 
 Two predictions are reported:
 
@@ -73,7 +74,7 @@ class CostParams:
 
 def cost_params_from_model(cfg, *, seq_len: int, local_batch: int,
                            quantize: bool = False, quant=None,
-                           link_latency_s: float = 5e-6,
+                           codec=None, link_latency_s: float = 5e-6,
                            link_bw: Optional[float] = None) -> CostParams:
     """Price one node's local step + one gossip payload for a model config.
 
@@ -81,7 +82,11 @@ def cost_params_from_model(cfg, *, seq_len: int, local_batch: int,
     node's ONE local step (`train_flops` / `train_bytes_full` are global
     per-superstep: all nodes × H — divide back out); payload bytes come
     from the bucket layout of the ACTUAL param pytree (`eval_shape`, no
-    real init), exactly what `core/bucket.py` would ship.
+    real init) priced through the wire codec's declared WireLayout —
+    exactly what `core/bucket.py` would ship, per codec (`codec` is a
+    ``--codec`` spec string or a WireCodec; None follows `quant` = the q8
+    lattice), so predicted-vs-simulated stays honest for every wire
+    format (t12_codecs).
     """
     import jax
 
@@ -89,9 +94,11 @@ def cost_params_from_model(cfg, *, seq_len: int, local_batch: int,
     from repro.core import bucket as B
     from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
     from repro.models import init_params
+    from repro.quant.codecs import WireCodec, make_codec
     from repro.quant.schemes import ModularQuantConfig
 
     qcfg = quant or ModularQuantConfig()
+    wire = codec if isinstance(codec, WireCodec) else make_codec(codec, qcfg)
     # one node, one local step == a "superstep" of 1 node × H=1
     shape = InputShape("sched_step", seq_len=seq_len,
                        global_batch=local_batch, kind="train")
@@ -102,14 +109,15 @@ def cost_params_from_model(cfg, *, seq_len: int, local_batch: int,
                            jax.random.PRNGKey(0))
     stacked = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct((1,) + x.shape, x.dtype), probe)
-    layout = B.build_layout(stacked, block=qcfg.block)
-    payload = layout.payload_num_bytes(qcfg if quantize else None)
+    layout = B.build_layout(stacked, block=wire.block)
+    payload = layout.payload_num_bytes(wire if quantize else None)
     return CostParams(
         flops_per_step=flops, hbm_bytes_per_step=hbm, payload_bytes=payload,
         peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW,
         link_bw=link_bw or ICI_LINK_BW, link_latency_s=link_latency_s,
         meta={"arch": getattr(cfg, "name", "?"), "seq_len": seq_len,
               "local_batch": local_batch, "quantize": quantize,
+              "codec": wire.name if quantize else "fp32",
               "n_padded": layout.n_padded})
 
 

@@ -62,7 +62,8 @@ def _masks(steps, seed=7):
 
 
 def _build(algo, impl, *, quantize=False, nonblocking=False, seed=0,
-           pool=None, quant=None, same_init=False):
+           pool=None, quant=None, same_init=False, codec=None):
+    from repro.quant.codecs import make_codec
     g = make_graph("complete", N)
     opt = make_optimizer("sgd", lr=LR, momentum=0.0)
     tr_kw = {}
@@ -70,6 +71,8 @@ def _build(algo, impl, *, quantize=False, nonblocking=False, seed=0,
         from repro.compat import make_mesh_compat
         tr_kw = dict(mesh=make_mesh_compat((1,), ("node",)), node_axes=(),
                      matching_pool=pool)
+    if codec is not None:
+        tr_kw["codec"] = make_codec(codec, quant)
     tr = GossipTransport(impl, N, quant=quant, **tr_kw)
     kw = dict(loss_fn=tiny_loss, opt_update=opt.update, lr_fn=lambda s: LR,
               n_nodes=N, transport=tr)
@@ -92,10 +95,10 @@ def _build(algo, impl, *, quantize=False, nonblocking=False, seed=0,
 
 
 def _run(algo, impl, *, masked=False, quantize=False, nonblocking=False,
-         pool=None, quant=None, perms=None, same_init=False):
+         pool=None, quant=None, perms=None, same_init=False, codec=None):
     step, state, g = _build(algo, impl, quantize=quantize,
                             nonblocking=nonblocking, pool=pool, quant=quant,
-                            same_init=same_init)
+                            same_init=same_init, codec=codec)
     rng_np = np.random.default_rng(3)
     masks = _masks(STEPS) if masked else [None] * STEPS
     h_slots = H if algo in ("swarm", "localsgd") else 1
@@ -234,6 +237,64 @@ def test_masked_dpsgd_preserves_mean_of_active():
     Xm = masked_metropolis(W, mask) @ X
     np.testing.assert_allclose(np.asarray(Xm.mean(0)),
                                np.asarray(X.mean(0)), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Default-codec (q8) bitwise identity through the codec layer: selecting
+# the default codec EXPLICITLY must not perturb a single bit of any
+# quantized trajectory, across every algorithm and execution mode the
+# matrix allows (the pre-refactor golden for the raw flat gossip lives in
+# tests/test_codecs.py::test_q8_flat_gossip_matches_pre_refactor_golden)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("masked", [False, True], ids=["full", "masked"])
+@pytest.mark.parametrize("algo,nonblocking", [
+    ("adpsgd", False), ("adpsgd", True), ("sgp", False)])
+def test_default_codec_q8_bitwise_baselines(algo, nonblocking, masked):
+    qcfg = ModularQuantConfig(safety=16.0)
+    kw = dict(masked=masked, quantize=True, quant=qcfg, same_init=True)
+    if algo == "adpsgd":
+        kw["nonblocking"] = nonblocking
+    a, _ = _run(algo, "gather", **kw)
+    b, _ = _run(algo, "gather", codec="q8", **kw)
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("masked", [False, True], ids=["full", "masked"])
+@pytest.mark.parametrize("mode", ["blocking", "nonblocking", "overlap"])
+def test_default_codec_q8_bitwise_swarm(mode, masked):
+    from repro.core import make_swarm_step
+
+    def run(codec):
+        scfg = SwarmConfig(n_nodes=N, H=H, quantize=True,
+                           quant=ModularQuantConfig(safety=16.0),
+                           codec=codec, nonblocking=(mode != "blocking"),
+                           overlap=(mode == "overlap"),
+                           gossip_impl="gather", track_potential=False)
+        opt = make_optimizer("sgd", lr=LR, momentum=0.0)
+        step = jax.jit(make_swarm_step(scfg, tiny_loss, opt.update,
+                                       lambda s: LR))
+        state = swarm_init(jax.random.PRNGKey(0), scfg, tiny_init, opt.init,
+                           same_init=True)
+        g = make_graph("complete", N)
+        rng_np = np.random.default_rng(3)
+        masks = _masks(STEPS) if masked else [None] * STEPS
+        h = jnp.full((N,), H, jnp.int32)
+        traj = []
+        for t in range(STEPS):
+            perm = jnp.asarray(sample_matching(g, rng_np))
+            batch = _data(t, H)
+            key = jax.random.PRNGKey(1000 + t)
+            args = (state, batch, perm, h, key) + \
+                (() if masks[t] is None else (jnp.asarray(masks[t]),))
+            state, _ = step(*args)
+            traj.append(np.concatenate(
+                [np.asarray(x, np.float32).reshape(N, -1)
+                 for x in jax.tree.leaves(state.params)], axis=1))
+        return np.stack(traj)
+
+    np.testing.assert_array_equal(run(None), run("q8"))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,512 @@
+"""Pluggable wire-codec layer (DESIGN.md §Codec).
+
+Four layers of evidence the codec abstraction is faithful:
+
+1. byte truthfulness — every codec's declared `payload_num_bytes` equals
+   the ACTUAL packed wire arrays' bytes (dtype × shape), including the q4
+   packed case and SGP's extra w row group, and q4 ships ~half of q8;
+2. pre-refactor golden — the default q8 codec's flat gossip is BITWISE
+   identical to the hard-wired (uint8 q, fp32 s) path it replaced (the
+   old math inlined here as an independent oracle);
+3. simulator-oracle parity — for EVERY codec, the engine's packed
+   exchange equals a sequential numpy replay of the codec semantics
+   (encode against the sender's comm copy, permute, decode against the
+   receiver, average, mask);
+4. error-feedback state — the top-k residual round-trips through
+   checkpoint.py: a mid-run save/restore continues the event sequence
+   bit-exactly (mirroring the sched-clock resume test), and dropping the
+   residual on restore breaks it (the slot is load-bearing).
+
+Plus the config-time capability wall (no silent fallbacks) and the
+interpret-mode parity of the fused Pallas bit-pack tiles (CPU CI runs the
+ref backend; the kernels stay honest via the interpreter).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import make_algorithm, validate_run_config
+from repro.core import (GossipTransport, SwarmConfig, make_graph,
+                        sample_matching, swarm_init, transport_from_config)
+from repro.core import bucket as B
+from repro.core.swarm import (codec_checkpoint_tree, make_swarm_step,
+                              restore_codec_state)
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+from repro.optim import make_optimizer
+from repro.quant.codecs import (Bf16Codec, LatticeCodec, TopKCodec,
+                                make_codec)
+from repro.quant.schemes import ModularQuantConfig
+
+N, D, HID, H, B_, LR = 8, 6, 16, 2, 4, 0.05
+QCFG = ModularQuantConfig(safety=16.0)
+ALL_SPECS = ["q8", "q4", "q16", "bf16", "topk:0.25"]
+
+
+def _stacked_tree(rng, n=N, spread=0.01):
+    base = {"emb": rng.normal(size=(33, 16)),
+            "w": {"in": rng.normal(size=(6, 16)),
+                  "out": rng.normal(size=(16, 1))}}
+    noise = lambda v: v[None] + spread * rng.normal(size=(n,) + v.shape)  # noqa: E731
+    return jax.tree.map(lambda v: jnp.asarray(noise(v), jnp.float32), base)
+
+
+# ---------------------------------------------------------------------------
+# 1. payload byte truthfulness (satellite: exact wire bytes vs real arrays)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_payload_bytes_match_real_arrays(spec):
+    tree = _stacked_tree(np.random.default_rng(0))
+    codec = make_codec(spec, QCFG)
+    layout = B.build_layout(tree, block=codec.block)
+    buf = B.pack(layout, tree)
+    wire = codec.encode(buf, buf + 0.01, jax.random.PRNGKey(0))
+    measured = sum(int(np.asarray(w).nbytes) for w in wire) // N
+    assert measured == layout.payload_num_bytes(codec), spec
+    # the declared WireLayout groups are exactly the arrays on the wire
+    groups = codec.wire_layout().groups
+    assert len(groups) == len(wire)
+    for g, w in zip(groups, wire):
+        assert w.dtype == jnp.dtype(g.dtype) and w.shape[1] == g.cols, g
+
+
+def test_payload_bytes_sgp_extra_row_group():
+    """SGP's push-sum payload {"model": X, "w": w} prices its extra w row
+    group like any other leaf — declared == actual for every codec."""
+    model = _stacked_tree(np.random.default_rng(1))
+    payload = {"model": model, "w": jnp.ones((N,), jnp.float32)}
+    for spec in ALL_SPECS:
+        codec = make_codec(spec, QCFG)
+        layout = B.build_layout(payload, block=codec.block)
+        buf = B.pack(layout, payload)
+        wire = codec.encode(buf, buf + 0.01, jax.random.PRNGKey(1))
+        measured = sum(int(np.asarray(w).nbytes) for w in wire) // N
+        assert measured == layout.payload_num_bytes(codec), spec
+    # the w row group occupies one extra block-aligned segment
+    bare = B.build_layout(model, block=QCFG.block)
+    assert layout.n_coords == bare.n_coords + 1
+
+
+def test_q4_halves_q8_wire():
+    tree = _stacked_tree(np.random.default_rng(2))
+    lay = B.build_layout(tree, block=QCFG.block)
+    q8 = lay.payload_num_bytes(make_codec("q8", QCFG))
+    q4 = lay.payload_num_bytes(make_codec("q4", QCFG))
+    fp = lay.payload_num_bytes()
+    # q4 = q8 minus exactly half a byte per coordinate (scales unchanged)
+    assert q8 - q4 == lay.n_padded // 2
+    assert q4 < 0.55 * q8 and q8 < 0.27 * fp
+
+
+def test_fp32_and_formula_agree():
+    tree = _stacked_tree(np.random.default_rng(3))
+    lay = B.build_layout(tree, block=QCFG.block)
+    assert lay.payload_num_bytes() == 4 * lay.n_padded
+    # the pre-codec ModularQuantConfig spelling still prices identically
+    assert lay.payload_num_bytes(QCFG) == \
+        lay.payload_num_bytes(make_codec("q8", QCFG))
+
+
+# ---------------------------------------------------------------------------
+# 2. pre-refactor golden: default q8 flat gossip is bitwise unchanged
+# ---------------------------------------------------------------------------
+
+
+def test_q8_flat_gossip_matches_pre_refactor_golden():
+    """The exact op sequence the pre-codec transport hard-wired, inlined
+    as an independent oracle: encode_flat -> reshape-permute of (q, s) ->
+    fused decode_avg. The codec path must reproduce it BITWISE."""
+    tree = _stacked_tree(np.random.default_rng(4))
+    layout = B.build_layout(tree, block=QCFG.block)
+    buf = B.pack(layout, tree)
+    prev = buf + 0.005
+    rng = jax.random.PRNGKey(7)
+    g = make_graph("complete", N)
+    perm = jnp.asarray(sample_matching(g, np.random.default_rng(5)))
+    matched = perm != jnp.arange(N)
+
+    # --- golden: the pre-refactor gossip_flat_quantized body ---
+    n_nodes, n_padded = buf.shape
+    block, rpn = QCFG.block, n_padded // QCFG.block
+    u = jax.random.uniform(rng, buf.shape, jnp.float32)
+    q, s, pad = K.quantize_mod(buf, prev, u, block=block, safety=QCFG.safety,
+                               min_scale=QCFG.min_scale, bits=QCFG.bits)
+    assert pad == 0
+    qp = q.reshape(n_nodes, rpn, block)[perm].reshape(-1, block)
+    sp = s.reshape(n_nodes, rpn, 1)[perm].reshape(-1, 1)
+    golden = K.decode_avg(qp, sp, buf, matched=jnp.repeat(matched, rpn),
+                          block=block, bits=QCFG.bits)
+
+    # --- the codec path (what every caller routes through now) ---
+    out, res = B.gossip_flat_coded(make_codec(None, QCFG), buf, prev, perm,
+                                   matched, rng)
+    assert res is None
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(golden))
+    # and the ModularQuantConfig entry point delegates to the same path
+    out2 = B.gossip_flat_quantized(QCFG, buf, prev, perm, matched, rng)
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(golden))
+
+
+# ---------------------------------------------------------------------------
+# 3. simulator-oracle parity: numpy replay of each codec's exchange
+# ---------------------------------------------------------------------------
+
+
+def _np_permute_rows(x, perm, n_nodes):
+    r = x.shape[0] // n_nodes
+    return x.reshape((n_nodes, r) + x.shape[1:])[perm].reshape(x.shape)
+
+
+def _np_lattice(codec, buf, prev, perm, matched, key):
+    qc, block = codec.quant, codec.block
+    levels, half = 1 << qc.bits, 1 << (qc.bits - 1)
+    u = np.asarray(jax.random.uniform(key, buf.shape), np.float32)
+    xb = buf.reshape(-1, block)
+    rb = prev.reshape(-1, block)
+    dist = np.max(np.abs(xb - rb), axis=1, keepdims=True)
+    s = np.maximum(dist * np.float32(qc.safety / half),
+                   np.float32(qc.min_scale)).astype(np.float32)
+    q = np.floor(xb / s + u.reshape(-1, block)) % levels
+    qp = _np_permute_rows(q, perm, N)
+    sp = _np_permute_rows(s, perm, N)
+    yb = buf.reshape(-1, block)
+    qy = np.round(yb / sp)
+    diff = (qp - qy) % levels
+    wrapped = np.where(diff >= half, diff - levels, diff)
+    x_hat = ((qy + wrapped) * sp).astype(np.float32)
+    out = ((yb + x_hat) * np.float32(0.5)).astype(np.float32)
+    m_rows = np.repeat(matched, buf.shape[1] // block)[:, None]
+    return np.where(m_rows, out, yb).reshape(buf.shape)
+
+
+def _np_bf16(codec, buf, prev, perm, matched, key):
+    block = codec.block
+    v = np.asarray(jnp.asarray(buf.reshape(-1, block)).astype(jnp.bfloat16)
+                   .astype(jnp.float32))
+    vp = _np_permute_rows(v, perm, N)
+    yb = buf.reshape(-1, block)
+    out = ((yb + vp) * np.float32(0.5)).astype(np.float32)
+    m_rows = np.repeat(matched, buf.shape[1] // block)[:, None]
+    return np.where(m_rows, out, yb).reshape(buf.shape)
+
+
+def _np_topk(codec, buf, prev, perm, matched, key, residual):
+    block, k = codec.block, codec.k
+    d = (buf - prev).reshape(-1, block).astype(np.float32)
+    if residual is not None:
+        d = d + residual.reshape(-1, block)
+    # jax.lax.top_k tie-breaking: descending value, lowest index first
+    idx = np.argsort(-np.abs(d), axis=1, kind="stable")[:, :k]
+    vals = np.take_along_axis(d, idx, axis=1)
+    c = np.zeros_like(d)
+    np.put_along_axis(c, idx, vals, axis=1)
+    res_after = (d - c).reshape(buf.shape)
+    cp = _np_permute_rows(c, perm, N)
+    yb = buf.reshape(-1, block)
+    out = (yb + np.float32(0.5) * cp).astype(np.float32)
+    m_rows = np.repeat(matched, buf.shape[1] // block)[:, None]
+    out = np.where(m_rows, out, yb).reshape(buf.shape)
+    new_res = np.where(matched[:, None], res_after,
+                       residual if residual is not None
+                       else np.zeros_like(res_after))
+    return out, new_res
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_codec_exchange_matches_numpy_oracle(spec):
+    """Engine exchange == sequential numpy replay, codec by codec, over
+    several rounds with a partial matching (some unmatched nodes)."""
+    codec = make_codec(spec, QCFG)
+    tree = _stacked_tree(np.random.default_rng(6))
+    layout = B.build_layout(tree, block=codec.block)
+    buf = np.asarray(B.pack(layout, tree))
+    prev = buf + 0.004
+    residual = np.zeros_like(buf) if codec.carries_residual else None
+    r = np.random.default_rng(7)
+    g = make_graph("complete", N)
+    for t in range(4):
+        perm = sample_matching(g, r)
+        if t % 2:                      # knock two nodes out of the matching
+            perm = perm.copy()
+            i = int(r.integers(N))
+            j = perm[i]
+            perm[i] = i
+            perm[j] = j
+        matched = perm != np.arange(N)
+        key = jax.random.PRNGKey(100 + t)
+        out, new_res = B.gossip_flat_coded(
+            codec, jnp.asarray(buf), jnp.asarray(prev), jnp.asarray(perm),
+            jnp.asarray(matched), key,
+            residual=None if residual is None else jnp.asarray(residual))
+        if spec.startswith("q"):
+            ref = _np_lattice(codec, buf, prev, perm, matched, key)
+        elif spec == "bf16":
+            ref = _np_bf16(codec, buf, prev, perm, matched, key)
+        else:
+            ref, res_ref = _np_topk(codec, buf, prev, perm, matched, key,
+                                    residual)
+            np.testing.assert_allclose(np.asarray(new_res), res_ref,
+                                       rtol=1e-6, atol=1e-7)
+            residual = np.asarray(new_res)
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-6,
+                                   atol=1e-7, err_msg=f"{spec} round {t}")
+        # comm-copy refresh (the engine's rule) keeps later rounds honest
+        prev = np.where(matched[:, None], np.asarray(out), prev)
+        buf = np.asarray(out) + 0.002 * r.normal(
+            size=buf.shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: every codec trains through the swarm superstep and tracks
+# the fp32 trajectory within its error envelope
+# ---------------------------------------------------------------------------
+
+
+def _tiny_init(rng):
+    k1, k2 = jax.random.split(rng)
+    return {"w1": jax.random.normal(k1, (D, HID)) * 0.3,
+            "w2": jax.random.normal(k2, (HID, 1)) * 0.3}
+
+
+def _tiny_loss(p, mb):
+    x, y = mb
+    return jnp.mean((jnp.tanh(x @ p["w1"]) @ p["w2"] - y) ** 2)
+
+
+def _run_swarm(codec, steps=6, nonblocking=False, quantize=True, seed=0):
+    # gossip_impl pinned: these tests target codec semantics on the flat
+    # transport, independent of the REPRO_DEFAULT_GOSSIP_IMPL CI override
+    scfg = SwarmConfig(n_nodes=N, H=H, quantize=quantize, quant=QCFG,
+                       codec=codec, nonblocking=nonblocking,
+                       gossip_impl="gather", track_potential=False)
+    opt = make_optimizer("sgd", lr=LR, momentum=0.0)
+    step = jax.jit(make_swarm_step(scfg, _tiny_loss, opt.update,
+                                   lambda s: LR))
+    state = swarm_init(jax.random.PRNGKey(seed), scfg, _tiny_init, opt.init)
+    g = make_graph("complete", N)
+    r = np.random.default_rng(3)
+    traj = []
+    for t in range(steps):
+        dr = np.random.default_rng(100 + t)
+        x = jnp.asarray(dr.normal(size=(N, H, B_, D)).astype(np.float32))
+        y = (x.sum(-1, keepdims=True) > 0).astype(jnp.float32)
+        perm = jnp.asarray(sample_matching(g, r))
+        h = jnp.full((N,), H, jnp.int32)
+        state, m = step(state, (x, y), perm, h, jax.random.PRNGKey(1000 + t))
+        assert np.isfinite(float(m["loss"]))
+        traj.append(np.concatenate(
+            [np.asarray(v, np.float32).reshape(N, -1)
+             for v in jax.tree.leaves(state.params)], axis=1))
+    return np.stack(traj), state
+
+
+@pytest.mark.parametrize("spec,tol", [
+    ("q4", 0.2), ("q16", 0.01), ("bf16", 0.05), ("topk:0.5", 0.2)])
+def test_codec_tracks_fp32_envelope(spec, tol):
+    fp, _ = _run_swarm(None, quantize=False)
+    qt, _ = _run_swarm(spec)
+    assert np.isfinite(qt).all()
+    assert float(np.max(np.abs(fp - qt))) < tol, spec
+
+
+def test_q8_codec_spec_is_bitwise_default():
+    """codec="q8" is the same codec the default (None) resolves to."""
+    a, _ = _run_swarm(None)
+    b, _ = _run_swarm("q8")
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# 4. error-feedback residual: checkpoint round-trip, bit-exact resume
+# ---------------------------------------------------------------------------
+
+
+def _topk_stepper():
+    scfg = SwarmConfig(n_nodes=N, H=H, quantize=True, quant=QCFG,
+                       codec="topk:0.1", gossip_impl="gather",
+                       track_potential=False)
+    opt = make_optimizer("sgd", lr=LR, momentum=0.0)
+    step = jax.jit(make_swarm_step(scfg, _tiny_loss, opt.update,
+                                   lambda s: LR))
+    state = swarm_init(jax.random.PRNGKey(0), scfg, _tiny_init, opt.init)
+    return step, state
+
+
+def _drive(step, state, ts):
+    g = make_graph("complete", N)
+    r = np.random.default_rng(55)
+    perms = [sample_matching(g, r) for _ in range(max(ts) + 1)]
+    traj = []
+    for t in ts:
+        dr = np.random.default_rng(200 + t)
+        x = jnp.asarray(dr.normal(size=(N, H, B_, D)).astype(np.float32))
+        y = (x.sum(-1, keepdims=True) > 0).astype(jnp.float32)
+        state, _ = step(state, (x, y), jnp.asarray(perms[t]),
+                        jnp.full((N,), H, jnp.int32),
+                        jax.random.PRNGKey(3000 + t))
+        traj.append(np.concatenate(
+            [np.asarray(v, np.float32).reshape(N, -1)
+             for v in jax.tree.leaves(state.params)], axis=1))
+    return np.stack(traj), state
+
+
+def test_topk_residual_checkpoint_roundtrip(tmp_path):
+    """Mid-run save/restore of (params, prev, residual) continues the
+    top-k event sequence BIT-EXACTLY — the codec analogue of the
+    sched-clock resume test. Restoring without the residual diverges:
+    the slot is load-bearing, not decorative."""
+    step, state = _topk_stepper()
+    full, _ = _drive(step, state, range(8))
+
+    step2, s0 = _topk_stepper()
+    _, mid = _drive(step2, s0, range(4))
+    assert mid.residual is not None and \
+        float(jnp.abs(mid.residual).max()) > 0
+    ck = str(tmp_path / "topk_ck")
+    tree = codec_checkpoint_tree(mid)
+    assert set(tree) == {"params", "prev", "residual"}
+    save_checkpoint(ck, jax.device_get(tree), {"codec": "topk:0.1"})
+
+    step3, fresh = _topk_stepper()
+    restored = restore_codec_state(fresh, load_checkpoint(ck, tree))
+    resumed, _ = _drive(step3, restored, range(4, 8))
+    np.testing.assert_array_equal(resumed, full[4:])
+
+    # drop the residual -> the continued sequence must differ
+    step4, fresh2 = _topk_stepper()
+    no_res = load_checkpoint(ck, tree)
+    no_res["residual"] = jnp.zeros_like(no_res["residual"])
+    broken = restore_codec_state(fresh2, no_res)
+    drifted, _ = _drive(step4, broken, range(4, 8))
+    assert float(np.max(np.abs(drifted - full[4:]))) > 0
+
+
+# ---------------------------------------------------------------------------
+# config-time capability wall (no silent fallbacks)
+# ---------------------------------------------------------------------------
+
+
+def test_bits_over_16_rejected_at_config_time():
+    # codec=None pins "follow the quant config" (env-robust: the CI q4
+    # smoke leg sets REPRO_CODEC, which only applies when codec is omitted)
+    scfg = SwarmConfig(n_nodes=N, quantize=True, codec=None,
+                       quant=ModularQuantConfig(bits=20))
+    with pytest.raises(ValueError, match="uint16 wire"):
+        transport_from_config(scfg, make_graph("complete", N))
+
+
+def test_q16_runs_flat_not_per_leaf():
+    """The historical silent bits>8 per-leaf fallback is GONE: a 12-bit
+    lattice rides the flat transport (uint16 wire)."""
+    scfg = SwarmConfig(n_nodes=N, quantize=True, codec=None,
+                       gossip_impl="gather",
+                       quant=ModularQuantConfig(bits=12, safety=16.0))
+    tr = transport_from_config(scfg, make_graph("complete", N))
+    assert not tr.routes_per_leaf(True)
+    assert tr.codec.family == "q16"
+    assert tr.codec.wire_layout().groups[0].dtype == "uint16"
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(algo="sgp", quantize=True, codec="topk:0.25"), "codecs="),
+    (dict(algo="swarm", quantize=True, codec="topk:0.25",
+          gossip_impl="ppermute"), "gather"),
+    (dict(algo="swarm", quantize=True, codec="topk:0.25", overlap=True,
+          nonblocking=True), "overlap"),
+    (dict(algo="localsgd", quantize=True, codec="bf16"), "codecs="),
+    (dict(algo="swarm", quantize=True, codec="q17"), "2..16"),
+    (dict(algo="swarm", quantize=True, codec="topk:1.5"), "fraction"),
+])
+def test_capability_matrix_rejects_codec_combos(kw, match):
+    with pytest.raises(ValueError, match=match):
+        validate_run_config(**kw)
+
+
+def test_legacy_transport_rejects_non_lattice_codec():
+    with pytest.raises(ValueError, match="per-leaf"):
+        GossipTransport("gather_legacy", N, codec=Bf16Codec())
+
+
+# ---------------------------------------------------------------------------
+# Pallas fused bit-pack tiles: interpret-mode parity vs the jnp ref
+# (CPU-only CI stays on the ref backend; this keeps the kernels honest)
+# ---------------------------------------------------------------------------
+
+
+def test_pack_unpack_nibbles_roundtrip():
+    q = jnp.asarray(np.random.default_rng(0).integers(0, 16, (16, 256)),
+                    jnp.uint8)
+    packed = R.pack_nibbles_ref(q)
+    assert packed.shape == (16, 128) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(R.unpack_nibbles_ref(packed)),
+                                  np.asarray(q))
+
+
+@pytest.mark.parametrize("bits,pack4", [(4, True), (4, False), (12, False),
+                                        (16, False)])
+def test_quantize_mod_interpret_matches_ref(bits, pack4):
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.normal(size=(16, 256)).astype(np.float32))
+    ref = x + 0.01
+    u = jnp.asarray(r.random((16, 256)).astype(np.float32))
+    qr, sr, _ = K.quantize_mod(x, ref, u, bits=bits, backend="ref",
+                               pack4=pack4)
+    qi, si, _ = K.quantize_mod(x, ref, u, bits=bits, backend="interpret",
+                               pack4=pack4)
+    assert qr.dtype == (jnp.uint8 if bits <= 8 else jnp.uint16)
+    assert qr.shape == ((16, 128) if pack4 else (16, 256))
+    np.testing.assert_array_equal(np.asarray(qr), np.asarray(qi))
+    np.testing.assert_array_equal(np.asarray(sr), np.asarray(si))
+    m = jnp.asarray(r.random(16) < 0.5)
+    dr = K.decode_avg(qr, sr, x, bits=bits, matched=m, backend="ref",
+                      pack4=pack4)
+    di = K.decode_avg(qi, si, x, bits=bits, matched=m, backend="interpret",
+                      pack4=pack4)
+    np.testing.assert_allclose(np.asarray(dr), np.asarray(di), atol=1e-6)
+
+
+def test_q4_pack_is_lossless_through_decode():
+    """Packed and unpacked q4 decode to the SAME values (the pack is pure
+    re-layout, not extra lossiness)."""
+    r = np.random.default_rng(2)
+    x = jnp.asarray(r.normal(size=(16, 256)).astype(np.float32))
+    ref = x + 0.01
+    u = jnp.asarray(r.random((16, 256)).astype(np.float32))
+    qp, sp, _ = K.quantize_mod(x, ref, u, bits=4, pack4=True)
+    qu, su, _ = K.quantize_mod(x, ref, u, bits=4, pack4=False)
+    np.testing.assert_array_equal(np.asarray(R.unpack_nibbles_ref(qp)),
+                                  np.asarray(qu))
+    dp = K.decode_avg(qp, sp, x, bits=4, pack4=True)
+    du = K.decode_avg(qu, su, x, bits=4, pack4=False)
+    np.testing.assert_array_equal(np.asarray(dp), np.asarray(du))
+
+
+# ---------------------------------------------------------------------------
+# uniform factory: codecs reach the baselines through build paths too
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ["q4", "bf16", "topk:0.5"])
+def test_adpsgd_runs_every_codec(spec):
+    scfg = SwarmConfig(n_nodes=N, H=1, quantize=True, quant=QCFG, codec=spec,
+                       gossip_impl="gather")
+    tr = transport_from_config(scfg, make_graph("complete", N))
+    opt = make_optimizer("sgd", lr=LR, momentum=0.0)
+    step = jax.jit(make_algorithm(
+        "adpsgd", loss_fn=_tiny_loss, opt_update=opt.update,
+        lr_fn=lambda s: LR, n_nodes=N, transport=tr, quantize=True))
+    state = swarm_init(jax.random.PRNGKey(0), scfg, _tiny_init, opt.init)
+    g = make_graph("complete", N)
+    r = np.random.default_rng(9)
+    for t in range(3):
+        x = jnp.asarray(r.normal(size=(N, 1, B_, D)).astype(np.float32))
+        y = (x.sum(-1, keepdims=True) > 0).astype(jnp.float32)
+        state, m = step(state, (x, y), jnp.asarray(sample_matching(g, r)),
+                        jnp.full((N,), 1, jnp.int32), jax.random.PRNGKey(t))
+        assert np.isfinite(float(m["loss"]))
+    if spec.startswith("topk"):
+        assert state.residual is not None
