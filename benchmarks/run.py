@@ -28,6 +28,10 @@ results/bench/. Paper mapping:
                      topk} — measured packed wire bytes per codec
                      (asserted == declared WireLayout) + codec-priced
                      predicted-vs-simulated wall-clock
+  t13_fused        — DESIGN.md §Fusion: scan-driven superstep vs the
+                     per-step driver — un-blocked host dispatch cost per
+                     superstep (fp32 + q8), paired interleaved rounds,
+                     compile time; acceptance: scan >= 5x lower
 """
 from __future__ import annotations
 
@@ -779,12 +783,165 @@ def t12_codecs(quick=False):
     return out
 
 
+def t13_fused(quick=False):
+    """DESIGN.md §Fusion: scan-driven superstep vs the per-step driver —
+    host dispatch cost per superstep, fp32 and q8, at the t12 bench
+    config. Both drivers run the SAME jitted superstep on the SAME
+    presampled schedule rows (pre-split per-step/per-chunk device arrays,
+    as the production driver ships them) and pre-staged device batches.
+    The per-step driver issues CHUNK dispatches plus CHUNK eager key
+    splits; the scan driver folds them into ONE lax.scan dispatch.
+    Dispatch on CPU is asynchronous, so the timed region is the
+    UN-BLOCKED dispatch loop — pure host-side cost, the thing the scan
+    amortizes — with block_until_ready outside it (the per-step loop is
+    windowed at 8 dispatches so the CPU client's in-flight backpressure
+    never turns dispatch synchronous inside a timed region); both sides
+    are timed without donation because on jax 0.4.x CPU an execution
+    whose input buffers are actually CONSUMED by donation runs
+    synchronously (the
+    production donated path is timed separately as wall clock per
+    superstep — same compute, host waits inside the dispatch instead of
+    at the metrics fetch; see DESIGN.md §Fusion). Variants advance
+    ROUND-ROBIN and are compared PAIRED per round (t9 style) so drifting
+    background load hits all of them equally. Acceptance: scan
+    host_us_per_superstep >= 5x below per-step for both codecs. Also
+    reports compile time and donated-vs-perstep wall parity. Emits
+    results/bench/t13_fused.json (CI artifact)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import build
+    from repro.core import make_superstep_scan
+    from repro.core.swarm import sample_h_counts
+    from repro.data import make_node_batches
+    from repro.launch.train import sample_gossip_perm
+
+    rounds = 2 if quick else 8
+    chunk = 32
+    setup = BenchSetup()
+    out = {}
+    for cname, kw in [("fp32", dict()), ("q8", dict(quantize=True))]:
+        cfg, graph, scfg, step, state, ds = build(setup, "swarm", **kw)
+        scan_fn = make_superstep_scan(step, donate=False)
+        don_fn = make_superstep_scan(step, donate=True)
+        h_max = scfg.h_loop_bound
+        # presample the WHOLE schedule host-side once, ship pre-split —
+        # exactly the production driver's input path (indexing a stacked
+        # device array with fresh python ints would recompile per step)
+        rng_np = np.random.default_rng(setup.seed)
+        total = (rounds + 1) * chunk
+        perm_np = np.stack([sample_gossip_perm(scfg, graph, rng_np,
+                                               setup.seed)
+                            for _ in range(total)])
+        h_np = np.stack([np.asarray(sample_h_counts(scfg, rng_np))
+                         for _ in range(total)])
+        perm_rows = [jnp.asarray(p) for p in perm_np]
+        h_rows = [jnp.asarray(h) for h in h_np]
+        perm_cks = [jnp.asarray(perm_np[t:t + chunk])
+                    for t in range(0, total, chunk)]
+        h_cks = [jnp.asarray(h_np[t:t + chunk])
+                 for t in range(0, total, chunk)]
+        st_ps = jax.tree.map(jnp.copy, state)       # per-step driver
+        st_sc = jax.tree.map(jnp.copy, state)       # scan, host-cost timed
+        st_dn = jax.tree.map(jnp.copy, state)       # scan, donated (prod)
+        key_ps = jax.random.PRNGKey(setup.seed + 1)
+        key_sc = jax.random.PRNGKey(setup.seed + 1)
+        key_dn = jax.random.PRNGKey(setup.seed + 1)
+        ps_host, sc_host, ps_wall, dn_wall = [], [], [], []
+        compile_ps = compile_sc = 0.0
+        shp = (setup.n_nodes, h_max, setup.batch, setup.seq)
+        for r in range(rounds + 1):
+            t0 = r * chunk
+            nbs = [make_node_batches(ds, t0 + i, setup.batch * h_max)
+                   for i in range(chunk)]
+            steps_b = [{k: jnp.asarray(v.reshape(shp)) for k, v in nb.items()}
+                       for nb in nbs]
+            stacked_b = {k: jnp.stack([b[k] for b in steps_b])
+                         for k in steps_b[0]}
+            jax.block_until_ready((steps_b, stacked_b, st_ps, st_sc, st_dn))
+            # per-step: CHUNK dispatches, timed un-blocked in windows of 8
+            # — past ~8 in-flight executions the CPU client backpressures
+            # and dispatch degenerates to synchronous, which would report
+            # device compute as host cost; the windows keep the per-step
+            # number the actual host-loop cost (split + flatten + call)
+            t1 = time.perf_counter()
+            dt_ps = 0.0
+            for w in range(0, chunk, 8):
+                tw = time.perf_counter()
+                for i in range(w, min(w + 8, chunk)):
+                    key_ps, sub = jax.random.split(key_ps)
+                    st_ps, _ = step(st_ps, steps_b[i], perm_rows[t0 + i],
+                                    h_rows[t0 + i], sub)
+                dt_ps += time.perf_counter() - tw
+                jax.block_until_ready(st_ps)
+            wall_ps = time.perf_counter() - t1
+            t1 = time.perf_counter()            # scan: ONE dispatch
+            res = scan_fn(st_sc, key_sc, stacked_b, perm_cks[r], h_cks[r])
+            dt_sc = time.perf_counter() - t1
+            jax.block_until_ready(res)
+            st_sc, key_sc, _ = res
+            t1 = time.perf_counter()            # donated scan: wall clock
+            st_dn, key_dn, ms = don_fn(st_dn, key_dn, stacked_b,
+                                       perm_cks[r], h_cks[r])
+            jax.block_until_ready((st_dn, ms))
+            wall_dn = time.perf_counter() - t1
+            if r == 0:                          # compile round
+                compile_ps, compile_sc = dt_ps, dt_sc
+            else:
+                ps_host.append(dt_ps)
+                sc_host.append(dt_sc)
+                ps_wall.append(wall_ps)
+                dn_wall.append(wall_dn)
+        ps_us = np.asarray(ps_host) * 1e6 / chunk
+        sc_us = np.asarray(sc_host) * 1e6 / chunk
+        paired = np.median(ps_us - sc_us)
+        row = {
+            "perstep": {"host_us_per_superstep": float(np.median(ps_us)),
+                        "host_us_min": float(np.min(ps_us)),
+                        "wall_us_per_superstep": float(
+                            np.median(ps_wall) * 1e6 / chunk),
+                        "compile_s": compile_ps},
+            "scan": {"host_us_per_superstep": float(np.median(sc_us)),
+                     "host_us_min": float(np.min(sc_us)),
+                     "compile_s": compile_sc},
+            "scan_donated": {"wall_us_per_superstep": float(
+                np.median(dn_wall) * 1e6 / chunk)},
+            "chunk": chunk,
+            "paired_median_saving_us": float(paired),
+            "scan_speedup": float(np.median(ps_us) / np.median(sc_us)),
+        }
+        row["speedup_ok"] = bool(row["scan_speedup"] >= 5.0)
+        row["donated_wall_ratio_vs_perstep"] = \
+            row["scan_donated"]["wall_us_per_superstep"] / \
+            row["perstep"]["wall_us_per_superstep"]
+        out[cname] = row
+        emit(f"t13_fused/{cname}_perstep",
+             row["perstep"]["host_us_per_superstep"],
+             f"compile_s={compile_ps:.2f};"
+             f"wall_us={row['perstep']['wall_us_per_superstep']:.0f}")
+        emit(f"t13_fused/{cname}_scan",
+             row["scan"]["host_us_per_superstep"],
+             f"compile_s={compile_sc:.2f};"
+             f"donated_wall_us="
+             f"{row['scan_donated']['wall_us_per_superstep']:.0f}")
+        emit(f"t13_fused/{cname}_speedup", 0.0,
+             f"scan_speedup={row['scan_speedup']:.1f}x;"
+             f"paired_saving_us={paired:.0f};ok={row['speedup_ok']};"
+             f"donated_wall_ratio="
+             f"{row['donated_wall_ratio_vs_perstep']:.2f}")
+    save("t13_fused", out)
+    return out
+
+
 TABLES = {
     "t1": t1_convergence, "t2": t2_localsteps, "t3": t3_quantization,
     "t4": t4_comm_cost, "t5": t5_potential, "t6": t6_nonblocking,
     "t7": t7_roofline, "t8": t8_topology, "t8_transport": t8_transport,
     "t9": t9_node_scaling, "t9_async": t9_async, "t10_sched": t10_sched,
     "t11_baselines": t11_baselines, "t12_codecs": t12_codecs,
+    "t13_fused": t13_fused,
 }
 
 

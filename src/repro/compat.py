@@ -30,6 +30,26 @@ def make_mesh_compat(shape, axes):
     return jax.make_mesh(shape, axes)
 
 
+def donation_alias_count(lowered) -> int:
+    """How many input buffers a lowered computation actually aliases to
+    outputs (i.e. donation applied, not just requested). jax 0.4.x
+    StableHLO marks donated inputs `tf.aliasing_output`; newer versions
+    emit `jax.buffer_donor` for donors whose aliasing is decided at
+    compile time — count both markers."""
+    txt = lowered.as_text()
+    return txt.count("tf.aliasing_output") + txt.count("jax.buffer_donor")
+
+
+def memory_analysis_compat(compiled):
+    """compiled.memory_analysis() across versions/backends: returns None
+    where the backend does not implement it instead of raising (the CPU
+    plugin on some versions)."""
+    try:
+        return compiled.memory_analysis()
+    except Exception:
+        return None
+
+
 def cost_analysis_dict(ca):
     """cost_analysis() returns a dict on jax >= 0.5, a per-device list on
     0.4.x — normalize to one dict."""

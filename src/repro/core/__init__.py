@@ -1,7 +1,8 @@
 # The paper's primary contribution: SwarmSGD (decentralized SGD with
 # asynchronous pairwise gossip, local steps, and quantized exchange).
 from repro.core.bucket import (  # noqa: F401
-    BucketLayout, build_layout, pack, unpack,
+    BucketLayout, build_flat_layout, build_layout, pack, pack_flat, unpack,
+    unpack_flat,
 )
 from repro.core.exchange import (  # noqa: F401
     GossipTransport, make_matching_pool, static_ppermute_matching,
@@ -12,6 +13,7 @@ from repro.core.graph import (  # noqa: F401
     sample_weighted_matching,
 )
 from repro.core.potential import gamma_potential, mean_model  # noqa: F401
+from repro.core.scan import make_superstep_scan  # noqa: F401
 from repro.core.swarm import (  # noqa: F401
     SwarmConfig, SwarmState, make_swarm_step, pipeline_epilogue,
     pipeline_prologue, swarm_init,

@@ -120,6 +120,65 @@ def build_layout(tree, *, block: int = DEFAULT_BLOCK,
     return layout
 
 
+_FLAT_LAYOUT_CACHE: dict = {}
+
+
+def build_flat_layout(tree, *, block: int = DEFAULT_BLOCK,
+                      tile_rows: int = DEFAULT_TILE_ROWS) -> BucketLayout:
+    """Flatten plan for a SINGLE-node (un-stacked) pytree: the same wire
+    layout as `build_layout` but leaves keep their full shape (no leading
+    node dim to strip). Used by the fused optimizer path (optim/sgd.py):
+    inside the vmapped local-step loop each node's param/momentum trees
+    pack to ONE [n_padded] fp32 vector so the whole model updates in a
+    single `kernels.sgd_fused_update` sweep. Returns a BucketLayout with
+    n_nodes == 1; use `pack_flat`/`unpack_flat` (not pack/unpack)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    assert leaves, "cannot build a flat layout for an empty tree"
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    dtypes = tuple(jnp.dtype(x.dtype) for x in leaves)
+    key = (treedef, shapes, dtypes, block, tile_rows)
+    hit = _FLAT_LAYOUT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    offsets, sizes, seg_sizes = [], [], []
+    off = 0
+    for shp in shapes:
+        size = int(np.prod(shp, dtype=np.int64)) if shp else 1
+        seg = -(-size // block) * block
+        offsets.append(off)
+        sizes.append(size)
+        seg_sizes.append(seg)
+        off += seg
+    total_align = block * tile_rows
+    n_padded = -(-off // total_align) * total_align
+    layout = BucketLayout(treedef, 1, shapes, dtypes, tuple(offsets),
+                          tuple(sizes), tuple(seg_sizes), sum(sizes),
+                          n_padded, block, tile_rows)
+    _FLAT_LAYOUT_CACHE[key] = layout
+    return layout
+
+
+def pack_flat(layout: BucketLayout, tree) -> jax.Array:
+    """Un-stacked pytree -> [n_padded] fp32 vector (zeros-prefill + one
+    slice write per leaf, same idiom as `pack`)."""
+    leaves = jax.tree.leaves(tree)
+    buf = jnp.zeros((layout.n_padded,), jnp.float32)
+    for x, off, size in zip(leaves, layout.offsets, layout.sizes):
+        buf = buf.at[off:off + size].set(
+            x.reshape(size).astype(jnp.float32))
+    return buf
+
+
+def unpack_flat(layout: BucketLayout, buf: jax.Array):
+    """[n_padded] fp32 vector -> un-stacked pytree (original dtypes)."""
+    outs = []
+    for off, size, shp, dt in zip(layout.offsets, layout.sizes,
+                                  layout.shapes, layout.dtypes):
+        seg = jax.lax.slice_in_dim(buf, off, off + size, axis=0)
+        outs.append(seg.astype(dt).reshape(shp))
+    return jax.tree.unflatten(layout.treedef, outs)
+
+
 def pack(layout: BucketLayout, tree) -> jax.Array:
     """Node-stacked pytree -> [n_nodes, n_padded] fp32 flat buffer.
 

@@ -194,8 +194,12 @@ def pipeline_prologue(cfg: SwarmConfig, state: SwarmState, rng) -> SwarmState:
     layout = B.build_layout(state.params, block=codec.block)
     buf = B.pack(layout, state.params)
     if cfg.quantize:
+        # the first comm copy is a DISTINCT buffer even when it starts
+        # equal to the model: the scan driver donates the whole SwarmState,
+        # and XLA rejects donating one concrete buffer through two tree
+        # slots (core/scan.py)
         prev_buf = B.pack(layout, state.prev) if state.prev is not None \
-            else buf
+            else jnp.copy(buf)
         wire = codec.encode(buf, prev_buf, rng)
         infl = {"sbuf": buf, "prev": prev_buf, "wire": wire}
     else:

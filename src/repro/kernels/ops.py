@@ -86,9 +86,13 @@ def decode_avg(q, s, y, *, block: int = 256, bits: int = 8,
     return flat.reshape(y.shape)
 
 
-def sgd_fused_update(p, g, m, *, lr: float, mu: float = 0.9, wd: float = 0.0,
+def sgd_fused_update(p, g, m, *, lr, mu: float = 0.9, wd: float = 0.0,
                      nesterov: bool = False, block: int = 512,
                      backend: str | None = None, tile_rows: int = 8):
+    """Fused momentum/weight-decay SGD update — THE optimizer hot path
+    (optim/sgd.py routes every momentum update here on the packed flat
+    buffer). `lr` may be traced (the engines pass lr_fn(state.step)): the
+    Pallas path ships it as an SMEM scalar, the ref path is plain jnp."""
     backend = backend or DEFAULT_BACKEND
     pb, pad = _to_blocks(p, block, tile_rows)
     gb, _ = _to_blocks(g, block, tile_rows)

@@ -237,6 +237,25 @@ def sample_gossip_perm(scfg: SwarmConfig, graph, rng_np,
     return sample_matching(graph, rng_np)
 
 
+def presample_inputs(scfg: SwarmConfig, graph, rng_np, seed: int,
+                     n_steps: int, uses_matching: bool = True):
+    """Host-side presample of the whole run's (perm, h) streams as stacked
+    [n_steps, n_nodes] int32 arrays. Consumes `rng_np` in EXACTLY the
+    per-superstep order the old loop drew (perm, then h, step by step), so
+    the stream — and therefore the trajectory — is bitwise the one the
+    per-step sampling produced. Ship the result to the device once
+    (jnp.asarray) and index rows device-side: the steady-state loop then
+    makes zero host->device transfers (ROADMAP item 5; the scan driver
+    slices whole chunks out of the same arrays)."""
+    perms = np.empty((n_steps, scfg.n_nodes), np.int32)
+    hs = np.empty((n_steps, scfg.n_nodes), np.int32)
+    for t in range(n_steps):
+        perms[t] = (sample_gossip_perm(scfg, graph, rng_np, seed)
+                    if uses_matching else sample_matching(graph, rng_np))
+        hs[t] = sample_h_counts(scfg, rng_np)
+    return perms, hs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="transformer-wmt")
@@ -307,6 +326,14 @@ def main():
                     help="use the smoke-scale variant of the arch")
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--scan-chunk", "--scan_chunk", type=int,
+                    default=int(os.environ.get("REPRO_SCAN_CHUNK", "0")),
+                    help="fuse K supersteps per dispatch in a donated "
+                         "lax.scan (core/scan.py; DESIGN.md §Fusion). 0 = "
+                         "per-step driver. Bitwise identical to the "
+                         "per-step driver; chunk boundaries are the "
+                         "checkpointable points. Env default: "
+                         "REPRO_SCAN_CHUNK")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--eval-mean", action="store_true",
@@ -314,6 +341,9 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--out", default=None, help="json metrics path")
     args = ap.parse_args()
+    if args.scan_chunk and args.eval_mean:
+        ap.error("--eval-mean evaluates per logged superstep and needs the "
+                 "per-step driver; drop --scan-chunk (DESIGN.md §Fusion)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -359,45 +389,88 @@ def main():
 
     history = []
     t0 = time.time()
-    for t in range(n_steps):
-        nb = make_node_batches(ds, t, args.batch * h_max)
-        batch = {k: jnp.asarray(v.reshape(args.nodes, h_max, args.batch,
-                                          args.seq))
-                 for k, v in nb.items()}
-        if sched_on:
-            from repro.sched import engine_inputs
-            perm_np, h_np, mask_np = engine_inputs(schedule, t,
-                                                   scfg.gossip_impl)
-            perm, h = jnp.asarray(perm_np), jnp.asarray(h_np)
-            mask = jnp.asarray(mask_np)
-        else:
-            perm = jnp.asarray(
-                sample_gossip_perm(scfg, graph, rng_np, args.seed)
-                if caps.uses_matching else sample_matching(graph, rng_np))
-            h = jnp.asarray(sample_h_counts(scfg, rng_np))
-            mask = None
-        key, sub = jax.random.split(key)
-        state, m = (step(state, batch, perm, h, sub, mask) if sched_on
-                    else step(state, batch, perm, h, sub))
-        if t % args.log_every == 0 or t == n_steps - 1:
-            rec = {"step": t, "loss": float(m["loss"]),
-                   "gamma": float(m.get("gamma", 0.0)),
-                   "wall_s": round(time.time() - t0, 1)}
-            if args.eval_mean:
-                from repro.core.swarm import make_mean_model_eval
-                from repro.models import loss_fn as mlf
-                ev = make_mean_model_eval(lambda p, b: mlf(cfg, p, b))
-                eb = {"tokens": jnp.asarray(nb["tokens"][0].reshape(-1, args.seq)),
-                      "targets": jnp.asarray(nb["targets"][0].reshape(-1, args.seq))}
-                if args.algo == "sgp":
-                    # the push-sum payload evaluates at the de-biased X/w
-                    from repro.algorithms.sgp import sgp_debias
-                    em = ev(sgp_debias(state.params), eb)
-                else:
-                    em = ev(state.params, eb)
-                rec.update({k: float(v) for k, v in em.items()})
-            history.append(rec)
-            print(json.dumps(rec))
+
+    # satellite of ROADMAP item 5: presample the WHOLE schedule host-side
+    # and ship it once — the steady-state loop (either driver) reads
+    # device-resident rows, zero host->device transfers per superstep
+    if sched_on:
+        from repro.sched import stacked_engine_inputs
+        perms_np, hs_np, mask_np = stacked_engine_inputs(
+            schedule, 0, n_steps, scfg.gossip_impl)
+    else:
+        perms_np, hs_np = presample_inputs(scfg, graph, rng_np, args.seed,
+                                           n_steps, caps.uses_matching)
+        mask_np = None
+    # pre-split into per-step / per-chunk device arrays HERE, not in the
+    # loop: indexing a stacked device array with a fresh python int is a
+    # new static gather each time — a jit-cache miss and recompile per
+    # superstep that costs ~1000x the dispatch it feeds
+    if args.scan_chunk > 0:
+        # scan driver (core/scan.py): K supersteps per dispatch, donated
+        # (state, key) carry — bitwise identical to the per-step branch
+        # below; chunk boundaries are the checkpointable points
+        from repro.core.scan import make_superstep_scan
+        chunk_fn = make_superstep_scan(step, with_mask=sched_on)
+        starts = list(range(0, n_steps, args.scan_chunk))
+        perm_cks = [jnp.asarray(perms_np[t:t + args.scan_chunk])
+                    for t in starts]
+        h_cks = [jnp.asarray(hs_np[t:t + args.scan_chunk]) for t in starts]
+        mask_cks = [jnp.asarray(mask_np[t:t + args.scan_chunk])
+                    for t in starts] if sched_on else None
+        for c, t in enumerate(starts):
+            K = min(args.scan_chunk, n_steps - t)
+            nbs = [make_node_batches(ds, s, args.batch * h_max)
+                   for s in range(t, t + K)]
+            batch = {k: jnp.asarray(np.stack(
+                [nb[k].reshape(args.nodes, h_max, args.batch, args.seq)
+                 for nb in nbs])) for k in nbs[0]}
+            cargs = (state, key, batch, perm_cks[c], h_cks[c])
+            if sched_on:
+                cargs += (mask_cks[c],)
+            state, key, ms = chunk_fn(*cargs)
+            ms = jax.device_get(ms)
+            for i in range(K):
+                s = t + i
+                if s % args.log_every == 0 or s == n_steps - 1:
+                    rec = {"step": s, "loss": float(ms["loss"][i]),
+                           "gamma": float(ms["gamma"][i])
+                           if "gamma" in ms else 0.0,
+                           "wall_s": round(time.time() - t0, 1)}
+                    history.append(rec)
+                    print(json.dumps(rec))
+    else:
+        perm_rows = [jnp.asarray(p) for p in perms_np]
+        h_rows = [jnp.asarray(h) for h in hs_np]
+        mask_rows = [jnp.asarray(m) for m in mask_np] if sched_on else None
+        for t in range(n_steps):
+            nb = make_node_batches(ds, t, args.batch * h_max)
+            batch = {k: jnp.asarray(v.reshape(args.nodes, h_max, args.batch,
+                                              args.seq))
+                     for k, v in nb.items()}
+            perm, h = perm_rows[t], h_rows[t]
+            mask = mask_rows[t] if sched_on else None
+            key, sub = jax.random.split(key)
+            state, m = (step(state, batch, perm, h, sub, mask) if sched_on
+                        else step(state, batch, perm, h, sub))
+            if t % args.log_every == 0 or t == n_steps - 1:
+                rec = {"step": t, "loss": float(m["loss"]),
+                       "gamma": float(m.get("gamma", 0.0)),
+                       "wall_s": round(time.time() - t0, 1)}
+                if args.eval_mean:
+                    from repro.core.swarm import make_mean_model_eval
+                    from repro.models import loss_fn as mlf
+                    ev = make_mean_model_eval(lambda p, b: mlf(cfg, p, b))
+                    eb = {"tokens": jnp.asarray(nb["tokens"][0].reshape(-1, args.seq)),
+                          "targets": jnp.asarray(nb["targets"][0].reshape(-1, args.seq))}
+                    if args.algo == "sgp":
+                        # the push-sum payload evaluates at the de-biased X/w
+                        from repro.algorithms.sgp import sgp_debias
+                        em = ev(sgp_debias(state.params), eb)
+                    else:
+                        em = ev(state.params, eb)
+                    rec.update({k: float(v) for k, v in em.items()})
+                history.append(rec)
+                print(json.dumps(rec))
     predicted = None
     if sched_on:
         # price the trace end-to-end with the wall-clock cost model —

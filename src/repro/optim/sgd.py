@@ -2,8 +2,14 @@
 
 This is the optimizer of the paper's experiments (momentum SGD with the
 sequential baseline's schedule, §5). The fused param/momentum update is a
-memory-bound hot-spot; `repro.kernels.sgd_update` provides the Pallas TPU
-kernel, and this module is the pure-jnp reference path.
+memory-bound hot-spot: the momentum path packs the whole model into ONE
+flat fp32 vector (core/bucket.py pack_flat — same wire layout as the
+gossip buffer) and runs a single `kernels.sgd_fused_update` sweep — the
+Pallas TPU kernel when REPRO_KERNEL_BACKEND selects it, the pure-jnp ref
+otherwise. The ref sweep replicates the historical per-leaf tree-map
+update op-for-op, so the fused path is bitwise identical to it (asserted
+in tests/test_kernels.py); `fused=False` keeps the per-leaf path as the
+oracle.
 """
 from __future__ import annotations
 
@@ -20,6 +26,8 @@ class SGDConfig:
     nesterov: bool = False
     weight_decay: float = 0.0
     state_dtype: str = "float32"
+    fused: bool = True       # flat-buffer kernel path for the momentum
+    # update (bitwise = the per-leaf path); momentum=0 always runs per-leaf
 
 
 def sgd_init(cfg: SGDConfig, params):
@@ -29,8 +37,27 @@ def sgd_init(cfg: SGDConfig, params):
     return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)}
 
 
+def _sgd_update_fused(cfg: SGDConfig, params, grads, state, lr):
+    """One kernel sweep over the packed model: params/grads/momentum each
+    flatten to a [n_padded] fp32 vector (zero padding is a fixed point of
+    the update: m'=0, p'=0), update once, unpack with the original leaf
+    dtypes — exactly the per-leaf `upd` computation on a different layout."""
+    from repro.core import bucket as B
+    from repro.kernels import sgd_fused_update
+    p_layout = B.build_flat_layout(params)
+    m_layout = B.build_flat_layout(state["m"])
+    pbuf = B.pack_flat(p_layout, params)
+    gbuf = B.pack_flat(p_layout, grads)
+    mbuf = B.pack_flat(m_layout, state["m"])
+    pn, mn = sgd_fused_update(pbuf, gbuf, mbuf, lr=lr, mu=cfg.momentum,
+                              wd=cfg.weight_decay, nesterov=cfg.nesterov)
+    return B.unpack_flat(p_layout, pn), {"m": B.unpack_flat(m_layout, mn)}
+
+
 def sgd_update(cfg: SGDConfig, params, grads, state, lr=None):
     lr = cfg.lr if lr is None else lr
+    if state and cfg.fused:
+        return _sgd_update_fused(cfg, params, grads, state, lr)
 
     def upd(p, g, m):
         g = g.astype(jnp.float32)

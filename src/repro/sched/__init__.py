@@ -8,6 +8,7 @@ vectorized form.
 """
 from repro.sched.bridge import (  # noqa: F401
     BinnedSchedule, bin_trace, engine_inputs, pool_edges,
+    stacked_engine_inputs,
 )
 from repro.sched.clocks import (  # noqa: F401
     PoissonClocks, RateProfile, StragglerConfig, participation_rates,

@@ -193,3 +193,24 @@ def engine_inputs(sched: BinnedSchedule, s: int, gossip_impl: str = "gather"):
     else:
         perm = sched.perms[s]
     return perm, sched.h[s], sched.mask[s]
+
+
+def stacked_engine_inputs(sched: BinnedSchedule, lo: int = 0,
+                          hi: Optional[int] = None,
+                          gossip_impl: str = "gather"):
+    """[K, n] stacked (perm, h, mask) for supersteps [lo, hi) — the scan
+    driver's xs (core/scan.py): row t is exactly `engine_inputs(sched,
+    lo + t, gossip_impl)`, so one host->device transfer ships the whole
+    chunk's schedule and the steady-state loop touches the host only at
+    chunk boundaries."""
+    hi = sched.n_supersteps if hi is None else hi
+    n = sched.n_nodes
+    if gossip_impl.startswith("ppermute_pool"):
+        assert sched.pool_idx is not None, \
+            "schedule was not binned with pool=...; cannot drive the pool " \
+            "transport"
+        perm = np.repeat(sched.pool_idx[lo:hi, None], n,
+                         axis=1).astype(np.int32)
+    else:
+        perm = sched.perms[lo:hi]
+    return perm, sched.h[lo:hi], sched.mask[lo:hi]
