@@ -32,6 +32,10 @@ results/bench/. Paper mapping:
                      per-step driver — un-blocked host dispatch cost per
                      superstep (fp32 + q8), paired interleaved rounds,
                      compile time; acceptance: scan >= 5x lower
+  t14_churn        — DESIGN.md §Churn: day/night availability — churn
+                     trace (joins + leaves) through the bridged engine's
+                     retire/join/masked-superstep loop, kind-aware
+                     predicted-vs-simulated wall-clock
 """
 from __future__ import annotations
 
@@ -935,13 +939,134 @@ def t13_fused(quick=False):
     return out
 
 
+def t14_churn(quick=False):
+    """DESIGN.md §Churn: elastic membership end to end — a day/night
+    availability model (late joiners + permanent leavers) composed with a
+    lognormal rate profile, the churn trace compiled to bins, the bridged
+    engine trained through the driver's churn loop (retire before the
+    bin, packed join bootstrap on join bins, masked gossip superstep
+    otherwise), and the kind-aware wall-clock cost model — leaves priced
+    zero, a join priced as one bootstrap payload delivered to the joiner
+    — reported as predicted vs simulated end-to-end time against the same
+    profile WITHOUT churn. Emits results/bench/t14_churn.json (CI
+    artifact)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import build
+    from repro.core import make_graph, make_join_step, retire_nodes
+    from repro.data import make_node_batches
+    from repro.sched import (EVENT_JOIN, PoissonClocks, RateProfile,
+                             bin_trace, cost_params_from_model,
+                             generate_trace, parse_avail, predict_all_modes,
+                             predict_walltime, trace_stats)
+
+    setup = BenchSetup()
+    n = setup.n_nodes
+    graph = make_graph("complete", n)
+    h_max = 8
+    n_events = 40 if quick else 100
+    spec = os.environ.get(
+        "REPRO_AVAIL_PROFILE",
+        "day_night:period=8,duty=0.6,join=0.3:1:5,leave=0.3:6:18,seed=3")
+    prof = RateProfile("lognormal", sigma=0.8)
+
+    av = parse_avail(spec, n, seed=0)
+    clocks = PoissonClocks(graph, prof.make_rates(n, setup.seed),
+                           setup.seed, avail=av)
+    trace = generate_trace(graph, prof, n_events, H=setup.H, h_max=h_max,
+                           h_mode="rate", seed=setup.seed, clocks=clocks)
+    plain = generate_trace(graph, prof, n_events, H=setup.H, h_max=h_max,
+                           h_mode="rate", seed=setup.seed)
+    sched = bin_trace(trace)
+    stats = {k: v for k, v in trace_stats(trace).items()
+             if not isinstance(v, list)}
+
+    cfg, g, scfg, step, state, ds = build(setup, "swarm", quantize=True,
+                                          h_mode="trace", h_max=h_max,
+                                          rate_profile="lognormal")
+    join_fn = jax.jit(make_join_step(scfg))
+    key = jax.random.PRNGKey(setup.seed + 1)
+    losses, times, join_times = [], [], []
+    for s in range(sched.n_supersteps):
+        if sched.retire[s].any():
+            state = retire_nodes(state, jnp.asarray(sched.retire[s]))
+        if sched.kinds[s] == EVENT_JOIN:
+            t0 = time.time()
+            state = join_fn(state, jnp.asarray(sched.perms[s]),
+                            jnp.asarray(sched.mask[s]))
+            jax.block_until_ready(state.params)
+            join_times.append(time.time() - t0)
+            continue
+        nb = make_node_batches(ds, s, setup.batch * h_max)
+        batch = {k: jnp.asarray(v.reshape(n, h_max, setup.batch, setup.seq))
+                 for k, v in nb.items()}
+        key, sub = jax.random.split(key)
+        t0 = time.time()
+        state, m = step(state, batch, jnp.asarray(sched.perms[s]),
+                        jnp.asarray(sched.h[s]), sub,
+                        jnp.asarray(sched.mask[s]))
+        m = jax.device_get(m)
+        times.append(time.time() - t0)
+        losses.append(float(m["loss"]))
+    if sched.retire[sched.n_supersteps].any():
+        state = retire_nodes(state,
+                             jnp.asarray(sched.retire[sched.n_supersteps]))
+    assert trace.meta["n_joins"] > 0 and trace.meta["n_leaves"] > 0, \
+        "churn spec degenerated to fixed membership — benchmark is a no-op"
+
+    cp = cost_params_from_model(cfg, seq_len=setup.seq,
+                                local_batch=setup.batch, quantize=True)
+    pred = predict_all_modes(trace, cp)
+    pred_plain = predict_all_modes(plain, cp)
+    # the kind-aware pricing detail (leaves free, joins one payload) rides
+    # on the event replay, which predict_all_modes summarizes away
+    rep = predict_walltime(trace, cp, mode="blocking")
+    out = {
+        "avail_spec": spec,
+        "n_events": trace.n_events,
+        "n_supersteps": sched.n_supersteps,
+        "n_joins": trace.meta["n_joins"],
+        "n_leaves": trace.meta["n_leaves"],
+        "alive_final": int((sched.alive[-1] &
+                            ~sched.retire[sched.n_supersteps]).sum()),
+        "trace_stats": stats,
+        "final_loss": float(np.mean(losses[-5:])),
+        "host_us_per_superstep": float(np.mean(times[2:]) * 1e6)
+        if len(times) > 2 else float("nan"),
+        "join_bootstrap_us": float(np.mean(join_times) * 1e6)
+        if join_times else float("nan"),
+        "walltime_churn": pred,
+        "walltime_no_churn": pred_plain,
+        "join_comm_s": rep["join_comm_s"],
+    }
+    assert rep["n_joins"] == trace.meta["n_joins"]
+    b = pred["blocking"]
+    emit("t14_churn/day_night", out["host_us_per_superstep"],
+         f"bins={sched.n_supersteps};joins={out['n_joins']};"
+         f"leaves={out['n_leaves']};alive_final={out['alive_final']};"
+         f"final_loss={out['final_loss']:.4f};"
+         f"pred_s={b['predicted_s']:.4g};sim_s={b['simulated_s']:.4g};"
+         f"join_comm_s={rep['join_comm_s']:.4g}")
+    ratio = b["simulated_s"] / \
+        max(pred_plain["blocking"]["simulated_s"], 1e-30)
+    out["churn_vs_no_churn_walltime"] = ratio
+    emit("t14_churn/vs_no_churn", 0.0,
+         f"walltime_ratio={ratio:.2f}x;"
+         f"join_bootstrap_us={out['join_bootstrap_us']:.0f}")
+    save("t14_churn", out)
+    return out
+
+
 TABLES = {
     "t1": t1_convergence, "t2": t2_localsteps, "t3": t3_quantization,
     "t4": t4_comm_cost, "t5": t5_potential, "t6": t6_nonblocking,
     "t7": t7_roofline, "t8": t8_topology, "t8_transport": t8_transport,
     "t9": t9_node_scaling, "t9_async": t9_async, "t10_sched": t10_sched,
     "t11_baselines": t11_baselines, "t12_codecs": t12_codecs,
-    "t13_fused": t13_fused,
+    "t13_fused": t13_fused, "t14_churn": t14_churn,
 }
 
 

@@ -45,6 +45,10 @@ class AlgoCaps:
     pricing    — wall-clock cost-model family (sched/cost.py):
                  "pairwise" = per-event replay, "bsp" = per-bin
                  bulk-synchronous rendezvous;
+    churn      — elastic membership (--avail availability profiles with
+                 join/leave events, sched/avail.py): the algorithm can
+                 bootstrap a joiner from a donor payload and retire a
+                 leaver without corrupting its exchange semantics;
     why        — one-line rationale for the matrix row.
     """
     transports: Tuple[str, ...]
@@ -56,6 +60,7 @@ class AlgoCaps:
     local_H: bool
     pricing: str
     why: str
+    churn: bool = False
 
 
 #: every lattice/cast family — the codecs with no cross-superstep state
@@ -71,7 +76,10 @@ CAPABILITIES = {
         "error-feedback residual slot; top-k itself is gather-only and "
         "blocking/nonblocking-only — the residual neither threads "
         "through shard_map nor learns the matched mask in time under "
-        "the overlap pipeline)"),
+        "the overlap pipeline); elastic membership via the join-bootstrap "
+        "step and residual retirement (gather transport, no overlap — "
+        "join pairs are dynamic and an in-flight payload would predate "
+        "membership)", churn=True),
     "adpsgd": AlgoCaps(
         ("gather", "ppermute", "ppermute_pool"),
         ("blocking", "nonblocking"), True, _STATELESS_CODECS + ("topk",),
@@ -149,7 +157,7 @@ def make_algorithm(name: str, **kw) -> Callable:
 def validate_run_config(algo: str, *, gossip_impl: str = None,
                         quantize: bool = False, nonblocking: bool = False,
                         overlap: bool = False, rate_profile: str = "none",
-                        codec: str = None) -> AlgoCaps:
+                        codec: str = None, avail: str = None) -> AlgoCaps:
     """Config-time validation of a run against the capability matrix.
 
     Raises ValueError with the algorithm's matrix row when the requested
@@ -188,6 +196,19 @@ def validate_run_config(algo: str, *, gossip_impl: str = None,
         reject("--quantize (codec-compressed gossip)")
     if rate_profile not in (None, "none") and not caps.sched:
         reject(f"--rate-profile {rate_profile}")
+    if avail is None:
+        avail = os.environ.get("REPRO_AVAIL_PROFILE") or None
+    if avail is not None:
+        if not caps.churn:
+            reject(f"--avail {avail} (elastic membership)")
+        if base != "gather":
+            reject(f"--avail {avail} with --gossip-impl {gossip_impl} "
+                   "(join pairs are dynamic — the static-matching "
+                   "transports cannot carry them)")
+        if overlap:
+            reject(f"--avail {avail} with the overlap pipeline (an "
+                   "in-flight payload packed before a join predates the "
+                   "joiner's membership)")
     if quantize:
         # resolve the spec to its family through the same parser the
         # transport uses — a bogus spec (q17, topk:2) raises HERE with

@@ -15,6 +15,6 @@ from repro.core.graph import (  # noqa: F401
 from repro.core.potential import gamma_potential, mean_model  # noqa: F401
 from repro.core.scan import make_superstep_scan  # noqa: F401
 from repro.core.swarm import (  # noqa: F401
-    SwarmConfig, SwarmState, make_swarm_step, pipeline_epilogue,
-    pipeline_prologue, swarm_init,
+    SwarmConfig, SwarmState, make_join_step, make_swarm_step,
+    pipeline_epilogue, pipeline_prologue, retire_nodes, swarm_init,
 )

@@ -144,7 +144,7 @@ def run_simulation(graph: Graph, x0: np.ndarray, grad_fn: Callable,
 def run_superstep_oracle(x0: np.ndarray, grad_fn: Callable, perms, H: int,
                          eta: float, nonblocking: bool = False,
                          dtype=np.float32, h_schedule=None,
-                         masks=None) -> np.ndarray:
+                         masks=None, kinds=None) -> np.ndarray:
     """Sequential numpy replay of the engine's superstep semantics
     (`core/swarm.py`), the reference side of the simulator↔engine parity
     oracle (tests/test_async_pipeline.py, tests/test_sched_parity.py).
@@ -170,6 +170,12 @@ def run_superstep_oracle(x0: np.ndarray, grad_fn: Callable, perms, H: int,
     participation; the effective matching is `(perm != arange) & mask`,
     defaults to all-True) replay the engine's masked superstep exactly.
 
+    Elastic membership (sched/bridge.py churn schedules): `kinds` ([T] int,
+    avail.EVENT_* values) marks join bins — for a join bin the masked node
+    (the joiner) COPIES its partner's (the donor's) model, bitwise, and no
+    local steps or averaging happen; permanently-left nodes simply stop
+    appearing in masks (their rows freeze), so leaves need no oracle step.
+
     grad_fn(x, node, t, q) -> gradient for `node` at superstep t, local
     step q (must be deterministic for step-for-step parity). Computation is
     carried in `dtype` (fp32 to match the engine). Returns the [T, n, d]
@@ -181,6 +187,11 @@ def run_superstep_oracle(x0: np.ndarray, grad_fn: Callable, perms, H: int,
     traj = []
     for t, perm in enumerate(perms):
         perm = np.asarray(perm)
+        if kinds is not None and int(kinds[t]) == 1:  # avail.EVENT_JOIN
+            joiner = int(np.nonzero(np.asarray(masks[t], bool))[0][0])
+            X[joiner] = X[int(perm[joiner])].copy()
+            traj.append(X.copy())
+            continue
         h_t = np.full(n, H, np.int64) if h_schedule is None \
             else np.asarray(h_schedule[t])
         S = X.copy()
@@ -201,7 +212,7 @@ def run_superstep_oracle(x0: np.ndarray, grad_fn: Callable, perms, H: int,
 
 def run_events_oracle(x0: np.ndarray, grad_fn: Callable, pairs, hs,
                       event_bin, eta: float, nonblocking: bool = False,
-                      dtype=np.float32) -> np.ndarray:
+                      dtype=np.float32, kinds=None) -> np.ndarray:
     """One-event-at-a-time replay of a scheduler trace — the ground truth
     the bridge's binned execution is validated against.
 
@@ -216,12 +227,24 @@ def run_events_oracle(x0: np.ndarray, grad_fn: Callable, pairs, hs,
     event to its superstep so grad_fn(x, node, bin, q) draws the same data
     the engine's batched input would. Returns the [E, n, d] post-event
     trajectory.
+
+    Elastic membership: `kinds` ([E] int, avail.EVENT_* values) extends the
+    replay with churn — a JOIN event (joiner, donor) copies the donor's
+    model into the joiner, bitwise; a LEAVE event is a state no-op (the
+    left node's row freezes and it never appears in later events). This is
+    the sequential ground truth the engine's churn execution is proven
+    against (tests/test_churn.py).
     """
     X = x0.astype(dtype).copy()
     eta = dtype(eta)
     traj = []
     for e, (i, j) in enumerate(np.asarray(pairs)):
         i, j = int(i), int(j)
+        if kinds is not None and int(kinds[e]) != 0:
+            if int(kinds[e]) == 1:        # avail.EVENT_JOIN
+                X[i] = X[j].copy()
+            traj.append(X.copy())         # EVENT_LEAVE: state no-op
+            continue
         t = int(event_bin[e])
         Si, Sj = X[i].copy(), X[j].copy()
         for q in range(int(hs[e][0])):

@@ -434,6 +434,76 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
     return pipelined_superstep if cfg.overlap else superstep
 
 
+def make_join_step(cfg: SwarmConfig):
+    """Join bootstrap (elastic membership; DESIGN.md §Churn): returns
+    `join_step(state, perm, join_mask) -> state`.
+
+    A node joining mid-run must start from a live model, not its stale
+    init — the scheduler emits an exclusive join bin (sched/bridge.py)
+    whose `perm` swaps (joiner, donor) and whose `join_mask` marks the
+    joiner. The bootstrap is ONE collective on the flat packed buffer
+    (asserted on the jaxpr in tests/test_churn.py): pack the node-stacked
+    params once, row-gather `buf[perm]` so the joiner's lane receives the
+    donor's whole payload, select received rows at joiners only, unpack.
+    Donor rows keep their packed values, so non-joiners round-trip
+    bitwise (pack/unpack is exact — core/bucket.py).
+
+    Codec state of the joiner is re-based: its comm copy `prev` becomes
+    the bootstrapped model (the donor's — the value any later quantized
+    encode should measure movement against) and its error-feedback
+    residual is zeroed (it never transmitted anything). The optimizer
+    state is left as initialized: the paper averages models only, and a
+    joiner's momentum warm-up is local business. Not supported in the
+    overlap pipeline (cfg.overlap) — the in-flight payload of the join
+    bin would predate membership.
+    """
+    assert not cfg.overlap, \
+        "join bootstrap needs the non-pipelined driver (overlap=False): " \
+        "an in-flight payload packed before the join would go stale"
+    codec = make_codec(cfg.codec, cfg.quant)
+
+    def join_step(state: SwarmState, perm, join_mask):
+        layout = B.build_layout(state.params, block=codec.block)
+        buf = B.pack(layout, state.params)
+        recv = buf[perm]                       # the one payload collective
+        new_buf = jnp.where(join_mask[:, None], recv, buf)
+        params = B.unpack(layout, new_buf)
+        prev = state.prev
+        if prev is not None:
+            prev = jax.tree.map(
+                lambda pv, p: jnp.where(
+                    join_mask.reshape((-1,) + (1,) * (p.ndim - 1)), p, pv),
+                prev, params)
+        residual = state.residual
+        if residual is not None:
+            residual = jnp.where(join_mask[:, None], 0.0, residual)
+        return SwarmState(params, state.opt, prev, state.step + 1,
+                          state.inflight, residual)
+
+    return join_step
+
+
+def retire_nodes(state: SwarmState, left_mask) -> SwarmState:
+    """Permanent-leave retirement (elastic membership; DESIGN.md §Churn).
+
+    A left node's lane stays allocated (the SPMD shape is static) but must
+    never contaminate the survivors: the scheduler guarantees it is never
+    matched again (its mask rows are False forever), which already keeps
+    it out of every matched-mean decode and out of SGP's (X, w) push mass
+    — so params/opt/prev simply freeze in place. The one thing retired
+    here is its error-feedback residual: zeroing it guarantees that even a
+    buggy future re-match could not flush a ghost correction, and makes
+    the post-leave state checkpoint-canonical (two runs that diverge only
+    in WHEN they saved produce identical trees).
+    """
+    if state.residual is None:
+        return state
+    left_mask = jnp.asarray(left_mask)
+    residual = jnp.where(left_mask[:, None], 0.0, state.residual)
+    return SwarmState(state.params, state.opt, state.prev, state.step,
+                      state.inflight, residual)
+
+
 def make_mean_model_eval(loss_fn: Callable):
     """Evaluate the swarm's TRUE average model μ vs per-node models — the
     paper's §5 check ("the real average of all models is usually more

@@ -124,7 +124,9 @@ def build_schedule(args, graph, scfg, caps=None):
     trace reproduces the plain driver's matchings (and therefore its
     trajectory) bit-exactly on a complete graph. `caps` (the algorithm's
     capability row) drops the trace's local-step accrual to H=1 for the
-    algorithms that interact every step (adpsgd/sgp/dpsgd/allreduce)."""
+    algorithms that interact every step (adpsgd/sgp/dpsgd/allreduce).
+    With ``--avail`` (elastic membership, DESIGN.md §Churn) the clocks
+    carry an AvailabilityModel and the schedule gains join/leave bins."""
     from repro import sched as S
     tseed = args.trace_seed if args.trace_seed is not None else args.seed
     H_eff = args.H if caps is None or caps.local_H else 1
@@ -134,7 +136,15 @@ def build_schedule(args, graph, scfg, caps=None):
             "matchings, which only the gather transports accept from the "
             "driver; the ppermute/pool transports run heterogeneous traces "
             "via sched.bridge (pool_edges/static pairs restriction — see "
-            "tests/test_sched_parity.py)")
+        "tests/test_sched_parity.py)")
+    avail = None
+    if getattr(args, "avail", None):
+        if args.rate_profile in ("none", "uniform"):
+            raise ValueError(
+                "--avail rides the asynchronous Poisson clocks "
+                "(join/leave events are quantized to clock rings) — use "
+                "--rate-profile uniform_async or lognormal")
+        avail = S.parse_avail(args.avail, args.nodes, tseed)
     if args.rate_profile == "uniform":
         if graph.name != "complete" or graph.n % 2:
             # bit-exactness with the unscheduled driver needs every
@@ -159,7 +169,7 @@ def build_schedule(args, graph, scfg, caps=None):
         profile = S.RateProfile(kind, sigma=args.rate_sigma)
         straggler = parse_straggler(args.straggler)
         clocks = S.PoissonClocks(graph, profile.make_rates(args.nodes, tseed),
-                                 tseed, straggler)
+                                 tseed, straggler, avail=avail)
         n_events = args.steps * max(1, args.nodes // 2)
         trace = S.generate_trace(graph, profile, n_events, H=H_eff,
                                  h_max=scfg.h_max if H_eff > 1 else 1,
@@ -171,6 +181,7 @@ def sched_checkpoint_meta(args, trace, clocks) -> dict:
     """JSON-serializable scheduler state for checkpoint metadata: restoring
     `clocks` via PoissonClocks.from_state + `last_t` into generate_trace
     continues the exact event sequence (tests/test_sched.py)."""
+    avail = clocks.avail if clocks is not None else None
     return {
         "profile": args.rate_profile,
         "rate_sigma": args.rate_sigma,
@@ -182,6 +193,10 @@ def sched_checkpoint_meta(args, trace, clocks) -> dict:
         "clocks": clocks.state_dict() if clocks is not None else None,
         "last_t": trace.meta.get("last_t"),
         "matching_rng": trace.meta.get("matching_rng"),
+        # elastic membership: the availability model embeds its own
+        # intervals/phases, so resume needs neither the spec nor the
+        # original trace file (sched/avail.py)
+        "avail": avail.state_dict() if avail is not None else None,
     }
 
 
@@ -194,7 +209,7 @@ def restore_sched_clocks(meta: dict, graph):
     `generate_trace(..., clocks=..., last_t=...)`; the synchronous uniform
     profile gets (None, None, rng) — feed the rng to
     `synchronous_trace(..., rng=...)`."""
-    from repro.sched import PoissonClocks, RateProfile
+    from repro.sched import AvailabilityModel, PoissonClocks, RateProfile
     if meta.get("clocks") is None:
         rng = None
         if meta.get("matching_rng") is not None:
@@ -206,9 +221,11 @@ def restore_sched_clocks(meta: dict, graph):
     profile = RateProfile(kind, sigma=meta.get("rate_sigma", 0.5))
     seed = int(meta["trace_seed"])
     rates = profile.make_rates(int(meta["n_nodes"]), seed)
+    avail = AvailabilityModel.from_state(meta["avail"]) \
+        if meta.get("avail") is not None else None
     clocks = PoissonClocks.from_state(
         meta["clocks"], graph, rates, seed,
-        straggler=parse_straggler(meta.get("straggler")))
+        straggler=parse_straggler(meta.get("straggler")), avail=avail)
     last_t = np.asarray(meta["last_t"]) if meta.get("last_t") is not None \
         else None
     return clocks, last_t, None
@@ -315,6 +332,17 @@ def main():
                          "REPRO_RATE_PROFILE")
     ap.add_argument("--rate-sigma", type=float, default=0.5,
                     help="lognormal rate-profile shape")
+    ap.add_argument("--avail", default=os.environ.get("REPRO_AVAIL_PROFILE")
+                    or None,
+                    help="elastic-membership availability profile "
+                         "(sched/avail.py; DESIGN.md §Churn): "
+                         "'day_night:period=P,duty=D[,join=F:T0:T1]"
+                         "[,leave=F:T0:T1][,seed=S]' gives every node a "
+                         "phase-shifted day/night duty cycle with optional "
+                         "late joiners and permanent leavers; 'trace:FILE' "
+                         "reads per-node uptime intervals from a file. "
+                         "Needs an asynchronous --rate-profile and the "
+                         "per-step driver. Env default: REPRO_AVAIL_PROFILE")
     ap.add_argument("--straggler", default=None,
                     help="FRAC:SLOWDOWN[:FAIL_RATE:FAIL_DURATION] straggler "
                          "and transient-failure injection, e.g. 0.25:10")
@@ -341,9 +369,20 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--out", default=None, help="json metrics path")
     args = ap.parse_args()
-    if args.scan_chunk and args.eval_mean:
-        ap.error("--eval-mean evaluates per logged superstep and needs the "
-                 "per-step driver; drop --scan-chunk (DESIGN.md §Fusion)")
+    # --eval-mean composes with the scan driver: the intermediate states
+    # are consumed inside the fused scan, so μ is evaluated at CHUNK
+    # BOUNDARIES (the checkpointable points) instead of per logged step —
+    # bitwise the per-step driver's value at the same step, since the
+    # drivers themselves are bitwise identical (tests/test_scan_driver.py)
+    if args.avail:
+        if args.rate_profile in ("none", "uniform"):
+            ap.error("--avail rides the asynchronous Poisson clocks; use "
+                     "--rate-profile uniform_async or lognormal")
+        if args.scan_chunk:
+            ap.error("--avail schedules contain join bins, which branch "
+                     "per superstep (join-bootstrap vs gossip) — the fused "
+                     "scan driver replays gossip bins only; drop "
+                     "--scan-chunk (DESIGN.md §Churn)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -361,7 +400,7 @@ def main():
     caps = validate_run_config(
         args.algo, gossip_impl=args.gossip_impl, quantize=args.quantize,
         nonblocking=args.nonblocking, overlap=args.overlap,
-        rate_profile=args.rate_profile, codec=args.codec)
+        rate_profile=args.rate_profile, codec=args.codec, avail=args.avail)
     h_mode = args.h_mode
     if sched_on and args.rate_profile != "uniform" and caps.local_H:
         h_mode = "trace"           # per-node counts come from the bridge
@@ -393,10 +432,18 @@ def main():
     # satellite of ROADMAP item 5: presample the WHOLE schedule host-side
     # and ship it once — the steady-state loop (either driver) reads
     # device-resident rows, zero host->device transfers per superstep
+    churn = sched_on and schedule.kinds is not None
     if sched_on:
         from repro.sched import stacked_engine_inputs
-        perms_np, hs_np, mask_np = stacked_engine_inputs(
-            schedule, 0, n_steps, scfg.gossip_impl)
+        if churn:
+            # churn schedules mix gossip and join bins, which
+            # stacked_engine_inputs rejects; the gather transport takes the
+            # schedule's own rows verbatim (join bins branch in the loop)
+            perms_np, hs_np, mask_np = (schedule.perms, schedule.h,
+                                        schedule.mask)
+        else:
+            perms_np, hs_np, mask_np = stacked_engine_inputs(
+                schedule, 0, n_steps, scfg.gossip_impl)
     else:
         perms_np, hs_np = presample_inputs(scfg, graph, rng_np, args.seed,
                                            n_steps, caps.uses_matching)
@@ -411,6 +458,11 @@ def main():
         # below; chunk boundaries are the checkpointable points
         from repro.core.scan import make_superstep_scan
         chunk_fn = make_superstep_scan(step, with_mask=sched_on)
+        ev = None
+        if args.eval_mean:
+            from repro.core.swarm import make_mean_model_eval
+            from repro.models import loss_fn as mlf
+            ev = make_mean_model_eval(lambda p, b: mlf(cfg, p, b))
         starts = list(range(0, n_steps, args.scan_chunk))
         perm_cks = [jnp.asarray(perms_np[t:t + args.scan_chunk])
                     for t in starts]
@@ -429,20 +481,61 @@ def main():
                 cargs += (mask_cks[c],)
             state, key, ms = chunk_fn(*cargs)
             ms = jax.device_get(ms)
+            em = None
+            if ev is not None:
+                # μ evaluation at the chunk boundary: the scan consumes the
+                # intermediate states, so the boundary (= checkpointable
+                # point) is where the mean model exists to evaluate — same
+                # batch slice the per-step driver would use at this step
+                nb_last = nbs[-1]
+                eb = {"tokens": jnp.asarray(
+                          nb_last["tokens"][0].reshape(-1, args.seq)),
+                      "targets": jnp.asarray(
+                          nb_last["targets"][0].reshape(-1, args.seq))}
+                if args.algo == "sgp":
+                    from repro.algorithms.sgp import sgp_debias
+                    em = ev(sgp_debias(state.params), eb)
+                else:
+                    em = ev(state.params, eb)
+                em = {k: float(v) for k, v in em.items()}
             for i in range(K):
                 s = t + i
-                if s % args.log_every == 0 or s == n_steps - 1:
+                boundary = em is not None and i == K - 1
+                if s % args.log_every == 0 or s == n_steps - 1 or boundary:
                     rec = {"step": s, "loss": float(ms["loss"][i]),
                            "gamma": float(ms["gamma"][i])
                            if "gamma" in ms else 0.0,
                            "wall_s": round(time.time() - t0, 1)}
+                    if boundary:
+                        rec.update(em)
                     history.append(rec)
                     print(json.dumps(rec))
     else:
         perm_rows = [jnp.asarray(p) for p in perms_np]
         h_rows = [jnp.asarray(h) for h in hs_np]
         mask_rows = [jnp.asarray(m) for m in mask_np] if sched_on else None
+        join_fn = None
+        if churn:
+            from repro.core import make_join_step, retire_nodes
+            from repro.sched import EVENT_JOIN
+            join_fn = jax.jit(make_join_step(scfg))
         for t in range(n_steps):
+            if churn and schedule.retire[t].any():
+                # permanent leaves taking effect before this bin: retire
+                # the nodes' codec state (their params stay frozen — the
+                # mask already never selects them again)
+                state = retire_nodes(state, jnp.asarray(schedule.retire[t]))
+            if churn and schedule.kinds[t] == EVENT_JOIN:
+                # exclusive join bin: bootstrap the joiner from the donor's
+                # packed payload — one collective, no batch, no rng
+                state = join_fn(state, perm_rows[t], mask_rows[t])
+                joiner = int(np.nonzero(schedule.mask[t])[0][0])
+                rec = {"step": t, "event": "join", "joiner": joiner,
+                       "donor": int(schedule.perms[t][joiner]),
+                       "wall_s": round(time.time() - t0, 1)}
+                history.append(rec)
+                print(json.dumps(rec))
+                continue
             nb = make_node_batches(ds, t, args.batch * h_max)
             batch = {k: jnp.asarray(v.reshape(args.nodes, h_max, args.batch,
                                               args.seq))
@@ -471,6 +564,9 @@ def main():
                     rec.update({k: float(v) for k, v in em.items()})
                 history.append(rec)
                 print(json.dumps(rec))
+        if churn and schedule.retire[n_steps].any():
+            from repro.core import retire_nodes
+            state = retire_nodes(state, jnp.asarray(schedule.retire[n_steps]))
     predicted = None
     if sched_on:
         # price the trace end-to-end with the wall-clock cost model —

@@ -6,6 +6,9 @@ event traces, prices them with a wall-clock cost model, and compiles them
 into masked supersteps the SPMD engine executes without losing its
 vectorized form.
 """
+from repro.sched.avail import (  # noqa: F401
+    EVENT_JOIN, EVENT_LEAVE, EVENT_MIX, AvailabilityModel, parse_avail,
+)
 from repro.sched.bridge import (  # noqa: F401
     BinnedSchedule, bin_trace, engine_inputs, pool_edges,
     stacked_engine_inputs,

@@ -35,17 +35,35 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.sched.avail import EVENT_JOIN, EVENT_LEAVE, EVENT_MIX
 from repro.sched.trace import Trace
 
 
 @dataclass
 class BinnedSchedule:
-    """Compiled engine schedule: one row per superstep (bin)."""
+    """Compiled engine schedule: one row per superstep (bin).
+
+    Elastic membership (traces with `kinds`) adds three columns:
+      kinds  [S]    — bin kind: EVENT_MIX bins are ordinary supersteps;
+                      an EVENT_JOIN bin is *exclusive* (one joiner/donor
+                      pair, h = 0, mask marks the joiner only) and the
+                      driver runs the join-bootstrap step instead of a
+                      gossip superstep;
+      alive  [S, n] — the member set while bin s executes;
+      retire [S+1, n] — retire[s] marks nodes whose permanent leave takes
+                      effect BEFORE bin s executes (retire[S]: after the
+                      last bin); the driver calls `core/swarm.retire_nodes`.
+    Leaves never occupy a bin — a left node simply stops appearing in
+    masks, so retirement is a state-bookkeeping step, not a superstep.
+    """
     perms: np.ndarray            # [S, n] int32 involutions (identity off-bin)
     h: np.ndarray                # [S, n] int32, 0 at non-participants
     mask: np.ndarray             # [S, n] bool participation
     event_bin: np.ndarray        # [E] int32 — bin id of each trace event
     pool_idx: Optional[np.ndarray] = None   # [S] int32 (pool transport only)
+    kinds: Optional[np.ndarray] = None      # [S] int8 (churn only)
+    alive: Optional[np.ndarray] = None      # [S, n] bool (churn only)
+    retire: Optional[np.ndarray] = None     # [S+1, n] bool (churn only)
 
     @property
     def n_supersteps(self) -> int:
@@ -62,9 +80,20 @@ class BinnedSchedule:
             p = self.perms[s]
             assert (p[p] == idx).all(), f"bin {s}: perm not an involution"
             m = p != idx
-            assert (self.mask[s] == m).all(), f"bin {s}: mask != matched"
-            assert ((self.h[s] > 0) == m).all(), \
-                f"bin {s}: h>0 must be exactly the participants"
+            if self.kinds is not None and self.kinds[s] == EVENT_JOIN:
+                assert m.sum() == 2, f"join bin {s}: exactly one pair"
+                assert (self.h[s] == 0).all(), f"join bin {s}: h must be 0"
+                assert self.mask[s].sum() == 1 and (self.mask[s] <= m).all(), \
+                    f"join bin {s}: mask marks exactly the joiner"
+            else:
+                assert (self.mask[s] == m).all(), f"bin {s}: mask != matched"
+                assert ((self.h[s] > 0) == m).all(), \
+                    f"bin {s}: h>0 must be exactly the participants"
+            if self.alive is not None:
+                assert (self.mask[s] <= self.alive[s]).all(), \
+                    f"bin {s}: participants must be members"
+        if self.retire is not None:
+            assert self.retire.shape == (S + 1, n)
         return self
 
     def density(self) -> float:
@@ -102,6 +131,11 @@ def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
     n, E = trace.n_nodes, trace.n_events
     if pool is not None and static_pairs is not None:
         raise ValueError("pool and static_pairs are mutually exclusive")
+    churn = trace.kinds is not None
+    if churn and (pool is not None or static_pairs is not None):
+        raise ValueError(
+            "elastic-membership traces need the gather transport — join "
+            "pairs are dynamic and cannot be compiled into static matchings")
     pool_sets: Optional[List[set]] = None
     static_set = None
     if pool is not None:
@@ -112,32 +146,77 @@ def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
 
     perms: List[np.ndarray] = []
     hs: List[np.ndarray] = []
+    masks: List[np.ndarray] = []
+    bin_kinds: List[int] = []
+    bin_alive: List[np.ndarray] = []
+    retires: List = []  # (effect bin idx at record time, node)
     pool_ids: List[int] = []
     event_bin = np.empty(E, np.int32)
+
+    # membership BEFORE event 0 (trace.alive[e] is the set AFTER event e)
+    if churn:
+        member = trace.alive[0].copy() if E else np.ones(n, bool)
+        if E and trace.kinds[0] == EVENT_JOIN:
+            member[int(trace.pairs[0, 0])] = False
+        elif E and trace.kinds[0] == EVENT_LEAVE:
+            member[int(trace.pairs[0, 0])] = True
+    else:
+        member = np.ones(n, bool)
 
     cur_perm = np.arange(n, dtype=np.int32)
     cur_h = np.zeros(n, np.int32)
     cur_used = np.zeros(n, bool)
+    cur_alive = member.copy()
     cur_cand = list(range(len(pool_sets))) if pool_sets is not None else None
     cur_count = 0
 
     def close():
-        nonlocal cur_perm, cur_h, cur_used, cur_cand, cur_count
+        nonlocal cur_perm, cur_h, cur_used, cur_cand, cur_count, cur_alive
         if cur_count == 0:
             return
         perms.append(cur_perm)
         hs.append(cur_h)
+        masks.append(cur_perm != np.arange(n))
+        bin_kinds.append(EVENT_MIX)
+        bin_alive.append(cur_alive)
         if pool_sets is not None:
             pool_ids.append(cur_cand[0])
         cur_perm = np.arange(n, dtype=np.int32)
         cur_h = np.zeros(n, np.int32)
         cur_used = np.zeros(n, bool)
+        cur_alive = member.copy()
         cur_cand = list(range(len(pool_sets))) if pool_sets is not None \
             else None
         cur_count = 0
 
     for e in range(E):
         i, j = int(trace.pairs[e, 0]), int(trace.pairs[e, 1])
+        kind = int(trace.kinds[e]) if churn else EVENT_MIX
+        if kind == EVENT_LEAVE:
+            # no bin: retirement takes effect after the currently open bin
+            # (the leave follows node i's last interaction in time order)
+            effect = len(perms) + (1 if cur_count > 0 else 0)
+            retires.append((effect, i))
+            event_bin[e] = effect
+            member[i] = False
+            continue
+        if kind == EVENT_JOIN:
+            # exclusive bin: the engine runs the join-bootstrap step for
+            # this (joiner, donor) pair instead of a gossip superstep
+            close()
+            member[i] = True
+            p = np.arange(n, dtype=np.int32)
+            p[i], p[j] = j, i
+            m = np.zeros(n, bool)
+            m[i] = True
+            perms.append(p)
+            hs.append(np.zeros(n, np.int32))
+            masks.append(m)
+            bin_kinds.append(EVENT_JOIN)
+            bin_alive.append(member.copy())
+            event_bin[e] = len(perms) - 1
+            cur_alive = member.copy()
+            continue
         key = (min(i, j), max(i, j))
         if static_set is not None and key not in static_set:
             raise ValueError(
@@ -157,6 +236,8 @@ def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
             if pool_sets is not None:
                 new_cand = [k for k in range(len(pool_sets))
                             if key in pool_sets[k]]
+        if cur_count == 0:
+            cur_alive = member.copy()  # membership as of bin open
         cur_perm[i], cur_perm[j] = j, i
         cur_h[i], cur_h[j] = trace.h[e, 0], trace.h[e, 1]
         cur_used[i] = cur_used[j] = True
@@ -166,15 +247,24 @@ def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
         cur_count += 1
     close()
 
+    S = len(perms)
+    retire = None
+    if churn:
+        retire = np.zeros((S + 1, n), bool)
+        for effect, node in retires:
+            retire[min(effect, S), node] = True
     sched = BinnedSchedule(
         perms=np.stack(perms) if perms else np.zeros((0, n), np.int32),
         h=np.stack(hs) if hs else np.zeros((0, n), np.int32),
-        mask=None,  # filled below
+        mask=np.stack(masks) if masks else np.zeros((0, n), bool),
         event_bin=event_bin,
         pool_idx=np.asarray(pool_ids, np.int32) if pool_sets is not None
         else None,
+        kinds=np.asarray(bin_kinds, np.int8) if churn else None,
+        alive=np.stack(bin_alive) if churn and bin_alive
+        else (np.zeros((0, n), bool) if churn else None),
+        retire=retire,
     )
-    sched.mask = sched.perms != np.arange(n)[None, :]
     return sched.validate()
 
 
@@ -205,6 +295,11 @@ def stacked_engine_inputs(sched: BinnedSchedule, lo: int = 0,
     chunk boundaries."""
     hi = sched.n_supersteps if hi is None else hi
     n = sched.n_nodes
+    if sched.kinds is not None and np.any(sched.kinds[lo:hi] != EVENT_MIX):
+        raise ValueError(
+            "supersteps [%d, %d) contain join bins — the scan driver only "
+            "replays gossip supersteps; churn schedules use the per-step "
+            "driver" % (lo, hi))
     if gossip_impl.startswith("ppermute_pool"):
         assert sched.pool_idx is not None, \
             "schedule was not binned with pool=...; cannot drive the pool " \

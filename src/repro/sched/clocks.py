@@ -25,11 +25,13 @@ SPMD engine replays them (see `sched/bridge.py`).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.graph import Graph
+from repro.sched.avail import (AvailabilityModel, EVENT_JOIN, EVENT_LEAVE,
+                               EVENT_MIX)
 
 
 @dataclass(frozen=True)
@@ -125,7 +127,8 @@ class PoissonClocks:
     def __init__(self, graph: Graph, rates: np.ndarray, seed: int = 0,
                  straggler: StragglerConfig = StragglerConfig(),
                  edge_weights: Optional[np.ndarray] = None,
-                 edges: Optional[np.ndarray] = None):
+                 edges: Optional[np.ndarray] = None,
+                 avail: Optional[AvailabilityModel] = None):
         self.n = graph.n
         base = np.asarray(rates, np.float64)
         if base.shape != (self.n,):
@@ -171,6 +174,23 @@ class PoissonClocks:
         if straggler.fail_rate > 0.0:
             self._next_fail = self._rng.exponential(
                 1.0 / straggler.fail_rate, size=self.n)
+        # elastic membership (avail.py): joined/left flags, join queue, and
+        # a FIFO of emitted events (membership events + the surviving mix
+        # event of the current ring) drained by next_any_event()
+        self.avail = avail
+        if avail is not None:
+            if avail.n != self.n:
+                raise ValueError(f"avail.n {avail.n} != graph.n {self.n}")
+            self._joined = avail.join_time <= 0.0
+            self._left = np.zeros(self.n, bool)
+            self._pending: List[int] = sorted(
+                np.nonzero(~self._joined)[0].tolist(),
+                key=lambda i: (avail.join_time[i], i))
+        else:
+            self._joined = np.ones(self.n, bool)
+            self._left = np.zeros(self.n, bool)
+            self._pending = []
+        self._mq: List[Tuple[float, int, int, int]] = []
 
     def _advance_failures(self):
         # drain EVERY due failure (a long inter-event gap can contain
@@ -187,10 +207,61 @@ class PoissonClocks:
                     self._rng.exponential(1.0 / self.straggler.fail_rate)
 
     def _alive(self, i: int) -> bool:
-        return self._down_until[i] <= self.t
+        if self._down_until[i] > self.t:
+            return False
+        if self.avail is not None:
+            if not self._joined[i] or self._left[i]:
+                return False
+            if not self.avail.window_up(i, self.t):
+                return False
+        return True
+
+    def member_mask(self) -> np.ndarray:
+        """[n] bool — current members (joined and not permanently left)."""
+        return self._joined & ~self._left
+
+    def _process_membership(self):
+        """Emit due LEAVE and eligible JOIN events at the current time.
+
+        Leaves first: a node past its leave_time is retired before it can
+        donate to a joiner. A pending joiner joins at the first ring where
+        its window is open and it has an alive member neighbor; the donor
+        is drawn from the joiner's (weighted) neighbor distribution,
+        restricted to alive members, on the same rng stream — so the whole
+        construction stays deterministic-per-seed and resumable.
+        """
+        av = self.avail
+        due = np.nonzero(self._joined & ~self._left
+                         & (av.leave_time <= self.t))[0]
+        for i in due:
+            self._left[i] = True
+            # stamped at the detecting ring (not leave_time itself) so the
+            # emitted stream stays time-sorted
+            self._mq.append((self.t, EVENT_LEAVE, int(i), int(i)))
+        still: List[int] = []
+        for i in self._pending:
+            if av.join_time[i] <= self.t and av.window_up(i, self.t):
+                nbrs, p = self._nbrs[i], self._nbr_p[i]
+                ok = np.asarray([self._alive(int(j)) for j in nbrs])
+                if ok.any():
+                    w = p * ok
+                    donor = int(self._rng.choice(nbrs, p=w / w.sum()))
+                    self._joined[i] = True
+                    self._mq.append((self.t, EVENT_JOIN, int(i), donor))
+                    continue
+            still.append(i)
+        self._pending = still
 
     def next_event(self) -> Tuple[float, int, int]:
-        """Next surviving interaction (t, i, j); advances the clock."""
+        """Next surviving interaction (t, i, j); advances the clock.
+
+        Only valid without an availability model — membership events would
+        be silently dropped; churn consumers use `next_any_event()`.
+        """
+        if self.avail is not None:
+            raise RuntimeError(
+                "PoissonClocks has an availability model; use "
+                "next_any_event() so join/leave events are not dropped")
         while True:
             self.t += self._rng.exponential(1.0 / self._total_rate)
             if self.straggler.fail_rate > 0.0:
@@ -202,6 +273,30 @@ class PoissonClocks:
                 return self.t, i, j
             self.n_thinned += 1
 
+    def next_any_event(self) -> Tuple[float, int, int, int]:
+        """Next event including membership: (t, kind, i, j) with kind one
+        of EVENT_MIX / EVENT_JOIN (i=joiner, j=donor) / EVENT_LEAVE (i=j).
+        Membership changes are checked at every ring of the global clock,
+        so join/leave times are quantized to the event stream — the same
+        discretization the availability thinning already implies.
+        """
+        while True:
+            if self._mq:
+                t, kind, i, j = self._mq.pop(0)
+                self.n_events += 1
+                return t, kind, i, j
+            self.t += self._rng.exponential(1.0 / self._total_rate)
+            if self.straggler.fail_rate > 0.0:
+                self._advance_failures()
+            if self.avail is not None:
+                self._process_membership()
+            i = int(self._rng.choice(self.n, p=self._node_p))
+            j = int(self._rng.choice(self._nbrs[i], p=self._nbr_p[i]))
+            if self._alive(i) and self._alive(j):
+                self._mq.append((self.t, EVENT_MIX, i, j))
+            else:
+                self.n_thinned += 1
+
     def __iter__(self) -> Iterator[Tuple[float, int, int]]:
         while True:
             yield self.next_event()
@@ -209,7 +304,7 @@ class PoissonClocks:
     # -- checkpointable state (JSON-serializable; bit-exact resume) --------
 
     def state_dict(self) -> dict:
-        return {
+        d = {
             "rng": self._rng.bit_generator.state,
             "t": self.t,
             "n_events": self.n_events,
@@ -218,6 +313,13 @@ class PoissonClocks:
             "next_fail": [None if not np.isfinite(x) else float(x)
                           for x in self._next_fail],
         }
+        if self.avail is not None:
+            d["joined"] = self._joined.tolist()
+            d["left"] = self._left.tolist()
+            d["pending"] = list(self._pending)
+            d["mq"] = [[float(t), int(k), int(i), int(j)]
+                       for (t, k, i, j) in self._mq]
+        return d
 
     def load_state(self, state: dict) -> "PoissonClocks":
         self._rng.bit_generator.state = state["rng"]
@@ -228,16 +330,24 @@ class PoissonClocks:
         self._next_fail = np.asarray(
             [np.inf if x is None else x for x in state["next_fail"]],
             np.float64)
+        if self.avail is not None:
+            self._joined = np.asarray(state["joined"], bool)
+            self._left = np.asarray(state["left"], bool)
+            self._pending = [int(i) for i in state["pending"]]
+            self._mq = [(float(t), int(k), int(i), int(j))
+                        for (t, k, i, j) in state.get("mq", [])]
         return self
 
     @classmethod
     def from_state(cls, state: dict, graph: Graph, rates: np.ndarray,
                    seed: int = 0, straggler: StragglerConfig = StragglerConfig(),
                    edge_weights: Optional[np.ndarray] = None,
-                   edges: Optional[np.ndarray] = None) -> "PoissonClocks":
+                   edges: Optional[np.ndarray] = None,
+                   avail: Optional[AvailabilityModel] = None
+                   ) -> "PoissonClocks":
         """Rebuild a clock (same construction args) and restore its state."""
         return cls(graph, rates, seed, straggler, edge_weights,
-                   edges).load_state(state)
+                   edges, avail=avail).load_state(state)
 
 
 def participation_rates(clocks: PoissonClocks) -> np.ndarray:

@@ -41,6 +41,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.sched.avail import EVENT_JOIN, EVENT_LEAVE
 from repro.sched.trace import Trace
 
 # per-chip peaks (launch/mesh.py); imported lazily to keep numpy-only use
@@ -132,6 +133,14 @@ def predict_walltime(trace: Trace, cost: CostParams, *,
     under the local steps — pays only the uncovered remainder).
     `speeds` defaults to the trace's clock rates: a node that rings slowly
     computes slowly (the straggler model of trace.py).
+
+    Elastic membership (traces with `kinds`): a LEAVE prices zero — the
+    left node simply stops accruing events, and a node whose availability
+    window is closed has no events at all, so down time prices zero
+    compute and zero bytes by construction. A JOIN prices exactly ONE
+    payload: the donor pushes its packed model (fire-and-forget, like a
+    non-blocking send) and the joiner cannot proceed before it arrives —
+    ready[joiner] = max(ready[joiner], ready[donor]) + comm.
     """
     if mode not in ("blocking", "nonblocking", "overlap"):
         raise ValueError(mode)
@@ -143,8 +152,17 @@ def predict_walltime(trace: Trace, cost: CostParams, *,
     busy = np.zeros(n, np.float64)         # compute-busy seconds per node
     wait = np.zeros(n, np.float64)         # rendezvous wait per node
     comm_total = 0.0
+    n_joins = n_leaves = 0
     for e in range(trace.n_events):
         i, j = int(trace.pairs[e, 0]), int(trace.pairs[e, 1])
+        if trace.kinds is not None and int(trace.kinds[e]) != 0:
+            if int(trace.kinds[e]) == EVENT_JOIN:
+                comm_total += comm_t
+                ready[i] = max(ready[i], ready[j]) + comm_t
+                n_joins += 1
+            else:
+                n_leaves += 1
+            continue
         hi, hj = int(trace.h[e, 0]), int(trace.h[e, 1])
         ci, cj = hi * step_t[i], hj * step_t[j]
         ti, tj = ready[i] + ci, ready[j] + cj
@@ -163,7 +181,11 @@ def predict_walltime(trace: Trace, cost: CostParams, *,
             ready[i] = ti + max(0.0, comm_t - ci)
             ready[j] = tj + max(0.0, comm_t - cj)
     total = float(ready.max()) if n else 0.0
+    churn = {} if trace.kinds is None else \
+        {"n_joins": n_joins, "n_leaves": n_leaves,
+         "join_comm_s": n_joins * comm_t}
     return {
+        **churn,
         "mode": mode,
         "total_s": total,
         "events_per_s": trace.n_events / total if total > 0 else 0.0,
@@ -189,13 +211,21 @@ def analytic_walltime(trace: Trace, cost: CostParams, *,
     speeds = trace.rates if speeds is None else np.asarray(speeds, np.float64)
     step_t = np.asarray([cost.step_time_s(s) for s in speeds])
     comm_t = cost.comm_time_s()
+    def kind_of(e):
+        return 0 if trace.kinds is None else int(trace.kinds[e])
+
     work = np.zeros(n, np.float64)
-    for e in range(trace.n_events):
-        for k in range(2):
-            i = int(trace.pairs[e, k])
-            work[i] += int(trace.h[e, k]) * step_t[i]
     part = np.zeros(n, np.int64)
     for e in range(trace.n_events):
+        k = kind_of(e)
+        if k == EVENT_LEAVE:
+            continue                     # a leave prices nothing
+        if k == EVENT_JOIN:
+            part[trace.pairs[e, 0]] += 1  # joiner waits for one payload
+            continue
+        for s in range(2):
+            i = int(trace.pairs[e, s])
+            work[i] += int(trace.h[e, s]) * step_t[i]
         part[trace.pairs[e, 0]] += 1
         part[trace.pairs[e, 1]] += 1
     if mode == "overlap":
@@ -209,6 +239,8 @@ def analytic_walltime(trace: Trace, cost: CostParams, *,
     per_int = np.divide(work, np.maximum(part, 1))
     gaps = []
     for e in range(trace.n_events):
+        if kind_of(e) != 0:
+            continue
         i, j = int(trace.pairs[e, 0]), int(trace.pairs[e, 1])
         gaps.append(abs(per_int[i] - per_int[j]))
     return lower + 0.5 * float(np.sum(gaps)) / max(n, 1)

@@ -31,6 +31,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.graph import Graph, sample_matching
+from repro.sched.avail import (AvailabilityModel, EVENT_JOIN, EVENT_LEAVE,
+                               EVENT_MIX)
 from repro.sched.clocks import (PoissonClocks, RateProfile, StragglerConfig,
                                 participation_rates)
 
@@ -44,6 +46,9 @@ class Trace:
     rates: np.ndarray        # [n] float64 — effective per-node clock rates
     h_max: int
     meta: Dict = field(default_factory=dict)
+    # elastic membership (avail.py); None for fixed-membership traces
+    kinds: Optional[np.ndarray] = None  # [E] int8 — EVENT_MIX/JOIN/LEAVE
+    alive: Optional[np.ndarray] = None  # [E, n] bool — members AFTER event e
 
     @property
     def n_events(self) -> int:
@@ -54,8 +59,24 @@ class Trace:
         assert self.pairs.shape == (E, 2) and self.h.shape == (E, 2)
         assert np.all(np.diff(self.times) >= 0), "times must be sorted"
         assert np.all(self.pairs >= 0) and np.all(self.pairs < self.n_nodes)
-        assert np.all(self.pairs[:, 0] != self.pairs[:, 1]), "self-loops"
         assert np.all(self.h >= 0) and np.all(self.h <= self.h_max)
+        if self.kinds is None:
+            assert np.all(self.pairs[:, 0] != self.pairs[:, 1]), "self-loops"
+        else:
+            assert self.kinds.shape == (E,)
+            assert self.alive is not None \
+                and self.alive.shape == (E, self.n_nodes)
+            mix = self.kinds == EVENT_MIX
+            join = self.kinds == EVENT_JOIN
+            pairish = mix | join
+            assert np.all(self.pairs[pairish, 0] != self.pairs[pairish, 1]), \
+                "self-loops in mix/join events"
+            leave = self.kinds == EVENT_LEAVE
+            assert np.all(self.pairs[leave, 0] == self.pairs[leave, 1]), \
+                "leave events carry (i, i)"
+            assert np.all(self.h[join | leave] == 0), \
+                "membership events accrue no local steps"
+            assert np.all(self.h[mix] >= 1), "mix events accrue h >= 1"
         return self
 
 
@@ -79,7 +100,8 @@ def generate_trace(graph: Graph, profile: RateProfile, n_events: int, *,
                    edge_weights: Optional[np.ndarray] = None,
                    edges: Optional[np.ndarray] = None,
                    clocks: Optional[PoissonClocks] = None,
-                   last_t: Optional[np.ndarray] = None) -> Trace:
+                   last_t: Optional[np.ndarray] = None,
+                   avail: Optional[AvailabilityModel] = None) -> Trace:
     """Asynchronous Poisson trace: `n_events` surviving interactions.
 
     Pass a pre-built (possibly checkpoint-restored) `clocks` to continue an
@@ -88,12 +110,20 @@ def generate_trace(graph: Graph, profile: RateProfile, n_events: int, *,
     trace generation as a whole is resumable from
     `PoissonClocks.state_dict()` plus the per-node accrual state `last_t`
     (each node's last interaction time, returned in `meta["last_t"]`).
+
+    With an availability model (`avail=`, or a `clocks` built with one),
+    the trace carries elastic membership: `kinds` marks join/leave events
+    (which accrue h = 0) and `alive[e]` is the member set after event e.
+    Rate-mode h accrual then uses each node's UP-time within its gap, not
+    wall gap — a node off-duty overnight is not credited overnight steps.
     """
     if clocks is None:
         rates = profile.make_rates(graph.n, seed)
         clocks = PoissonClocks(graph, rates, seed, straggler,
-                               edge_weights=edge_weights, edges=edges)
+                               edge_weights=edge_weights, edges=edges,
+                               avail=avail)
     n = clocks.n
+    churn = clocks.avail is not None
     # rate-mode calibration: node i participates at rate part_i; steps
     # accrue at μ_i = (H - 1) · part_i so E[h_i] = 1 + μ_i · E[gap_i] ≈ H
     part = participation_rates(clocks)
@@ -103,22 +133,42 @@ def generate_trace(graph: Graph, profile: RateProfile, n_events: int, *,
     times = np.empty(n_events, np.float64)
     pairs = np.empty((n_events, 2), np.int32)
     hs = np.empty((n_events, 2), np.int32)
-    clipped = 0
+    kinds = np.zeros(n_events, np.int8) if churn else None
+    alive = np.zeros((n_events, n), bool) if churn else None
+    clipped = n_joins = n_leaves = 0
     for e in range(n_events):
-        t, i, j = clocks.next_event()
+        if churn:
+            t, kind, i, j = clocks.next_any_event()
+        else:
+            t, i, j = clocks.next_event()
+            kind = EVENT_MIX
         times[e] = t
         pairs[e] = (i, j)
-        for k, node in enumerate((i, j)):
-            gap = t - last_t[node]
-            hs[e, k] = _accrue_h(clocks._rng, h_mode, H, h_max, mu[node], gap)
-            last_t[node] = t
-        clipped += int(hs[e, 0] == h_max) + int(hs[e, 1] == h_max)
+        if kind == EVENT_MIX:
+            for k, node in enumerate((i, j)):
+                gap = clocks.avail.uptime(node, last_t[node], t) if churn \
+                    else t - last_t[node]
+                hs[e, k] = _accrue_h(clocks._rng, h_mode, H, h_max,
+                                     mu[node], gap)
+                last_t[node] = t
+            clipped += int(hs[e, 0] == h_max) + int(hs[e, 1] == h_max)
+        else:
+            hs[e] = (0, 0)
+            if kind == EVENT_JOIN:
+                last_t[i] = t  # joiner starts accruing from its join
+                n_joins += 1
+            else:
+                n_leaves += 1
+        if churn:
+            kinds[e] = kind
+            alive[e] = clocks.member_mask()
     tr = Trace(n, times, pairs, hs, clocks.rates.copy(), h_max, meta={
         "kind": "poisson", "profile": profile.kind, "h_mode": h_mode,
         "H": H, "seed": seed, "n_thinned": clocks.n_thinned,
         "straggler_mask": clocks.straggler_mask.tolist(),
         "h_at_max": clipped, "last_t": last_t.tolist(),
-    })
+        "n_joins": n_joins, "n_leaves": n_leaves,
+    }, kinds=kinds, alive=alive)
     return tr.validate()
 
 
@@ -159,7 +209,11 @@ def trace_stats(trace: Trace) -> Dict:
     steps = np.zeros(n, np.int64)
     gaps = []
     last_t = np.full(n, np.nan)
+    mix_sel = np.ones(E, bool) if trace.kinds is None \
+        else trace.kinds == EVENT_MIX
     for e in range(E):
+        if not mix_sel[e]:
+            continue  # membership events: no participation / h accounting
         t = trace.times[e]
         for k in range(2):
             i = int(trace.pairs[e, k])
@@ -169,8 +223,18 @@ def trace_stats(trace: Trace) -> Dict:
                 gaps.append(t - last_t[i])
             last_t[i] = t
     gaps = np.asarray(gaps) if gaps else np.zeros(1)
-    h_flat = trace.h.reshape(-1).astype(np.float64)
+    h_flat = trace.h[mix_sel].reshape(-1).astype(np.float64)
+    if len(h_flat) == 0:
+        h_flat = np.zeros(1)
+    churn_stats = {} if trace.kinds is None else {
+        "n_mix": int(mix_sel.sum()),
+        "n_joins": int(np.sum(trace.kinds == EVENT_JOIN)),
+        "n_leaves": int(np.sum(trace.kinds == EVENT_LEAVE)),
+        "alive_final": int(trace.alive[-1].sum()) if E else n,
+        "alive_min": int(trace.alive.sum(axis=1).min()) if E else n,
+    }
     return {
+        **churn_stats,
         "n_events": E,
         "n_nodes": n,
         "participation": part.tolist(),

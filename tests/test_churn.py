@@ -1,0 +1,457 @@
+"""Elastic swarm membership: churn traces proven against the event oracle.
+
+The proof structure mirrors tests/test_sched_parity.py (PR 3), extended
+with join/leave events (DESIGN.md §Churn):
+
+1. binning stays exact under churn: the binned superstep oracle (join bins
+   copy donor → joiner; leaves retire between bins) equals the sequential
+   one-event-at-a-time replay BITWISE, live gradients, both semantics;
+2. the ENGINE's churn exchange layer — averaging chains, the packed join
+   bootstrap, participation masking, residual retirement — is proven
+   BITWISE against both oracles by running with lr = 0 (local steps become
+   exact no-ops, so every remaining bit of arithmetic is exchange);
+3. with live gradients the engine matches the oracle within fp32
+   tolerance (XLA fuses the local-step FMA; bitwise is not achievable
+   there even without churn), while each join bin's bootstrap copy is
+   still asserted bitwise;
+4. the join bootstrap is ONE collective on the flat packed buffer,
+   asserted on the jaxpr;
+5. a retired node's lane freezes (params untouched after its leave) and
+   its error-feedback residual is zeroed;
+6. mid-churn checkpoint/resume — clocks + availability state — continues
+   the exact event sequence, and the driver's sched_checkpoint_meta /
+   restore_sched_clocks round-trip carries the availability model;
+7. the cost model prices leaves at zero and joins at one payload.
+
+The availability spec follows REPRO_AVAIL_PROFILE (the CI churn leg sets
+it), defaulting to a day/night cycle with late joiners and leavers.
+"""
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SwarmConfig, make_graph, make_join_step,
+                        make_swarm_step, retire_nodes, swarm_init)
+from repro.core.simulator import run_events_oracle, run_superstep_oracle
+from repro.optim import make_optimizer
+from repro.sched import (EVENT_JOIN, EVENT_LEAVE, EVENT_MIX,
+                         AvailabilityModel, PoissonClocks, RateProfile,
+                         bin_trace, generate_trace, parse_avail,
+                         predict_walltime, trace_stats)
+from repro.sched.cost import CostParams
+
+N, D, H_MEAN, H_MAX, B = 8, 12, 2, 4, 4
+LR = 0.05
+AVAIL_SPEC = os.environ.get(
+    "REPRO_AVAIL_PROFILE",
+    "day_night:period=8,duty=0.6,join=0.25:2:6,leave=0.25:10:20,seed=3")
+
+
+def _trace_and_schedule(n_events=60, seed=13):
+    g = make_graph("complete", N)
+    av = parse_avail(AVAIL_SPEC, N, seed=0)
+    prof = RateProfile("lognormal", sigma=0.8)
+    clocks = PoissonClocks(g, prof.make_rates(N, seed), seed, avail=av)
+    tr = generate_trace(g, prof, n_events, H=H_MEAN, h_max=H_MAX,
+                        h_mode="rate", seed=seed, clocks=clocks)
+    return tr, bin_trace(tr), av
+
+
+def _data(S, seed=21):
+    r = np.random.default_rng(seed)
+    X = r.normal(size=(S, N, H_MAX, B, D)).astype(np.float32)
+    Y = r.normal(size=(S, N, H_MAX, B)).astype(np.float32)
+    return X, Y
+
+
+def _lin_loss(p, mb):
+    x, y = mb
+    return 0.5 * jnp.mean((x @ p["w"] - y) ** 2)
+
+
+def _grad_fn(X, Y):
+    def grad(w, i, t, q):
+        x, y = X[t, i, q], Y[t, i, q]
+        return x.T @ ((x @ w - y) / np.float32(B))
+    return grad
+
+
+def _make_engine(scfg, lr=LR, same_init=False):
+    opt = make_optimizer("sgd", lr=lr, momentum=0.0)
+    state = swarm_init(jax.random.PRNGKey(0), scfg,
+                       lambda k: {"w": jax.random.normal(k, (D,)) * 0.3},
+                       opt.init, same_init=same_init)
+    step = jax.jit(make_swarm_step(scfg, _lin_loss, opt.update,
+                                   lambda s: lr))
+    return step, state
+
+
+def _run_engine_churn(scfg, sched, X, Y, lr=LR, same_init=False):
+    """The driver's churn loop (launch/train.py): retire before the bin,
+    join bins run the bootstrap step, everything else is a masked gossip
+    superstep. Returns (per-bin trajectory of w, final SwarmState)."""
+    step, state = _make_engine(scfg, lr=lr, same_init=same_init)
+    join_fn = jax.jit(make_join_step(scfg))
+    key = jax.random.PRNGKey(7)
+    traj = []
+    for s in range(sched.n_supersteps):
+        if sched.retire[s].any():
+            state = retire_nodes(state, jnp.asarray(sched.retire[s]))
+        if sched.kinds[s] == EVENT_JOIN:
+            state = join_fn(state, jnp.asarray(sched.perms[s]),
+                            jnp.asarray(sched.mask[s]))
+        else:
+            key, sub = jax.random.split(key)
+            state, _ = step(state, (jnp.asarray(X[s]), jnp.asarray(Y[s])),
+                            jnp.asarray(sched.perms[s]),
+                            jnp.asarray(sched.h[s]), sub,
+                            jnp.asarray(sched.mask[s]))
+        traj.append(np.asarray(state.params["w"], np.float32))
+    if sched.retire[sched.n_supersteps].any():
+        state = retire_nodes(
+            state, jnp.asarray(sched.retire[sched.n_supersteps]))
+    return np.stack(traj), state
+
+
+def _fixture_has_churn(tr):
+    return (tr.meta["n_joins"] > 0 and tr.meta["n_leaves"] > 0)
+
+
+def test_fixture_exercises_churn():
+    """Guard: the canonical spec must actually produce joins AND leaves —
+    a spec that degenerates to fixed membership would silently turn this
+    whole file into a no-op."""
+    tr, sched, _ = _trace_and_schedule()
+    assert _fixture_has_churn(tr), trace_stats(tr)
+    assert int(np.sum(sched.kinds == EVENT_JOIN)) == tr.meta["n_joins"]
+    assert sched.retire.sum() == tr.meta["n_leaves"]
+
+
+@pytest.mark.parametrize("nonblocking", [False, True])
+def test_binned_equals_sequential_under_churn(nonblocking):
+    """Tentpole layer 1: binning stays a reordering of commuting
+    operations under churn — binned == sequential BITWISE, live grads, at
+    every bin boundary."""
+    tr, sched, _ = _trace_and_schedule()
+    S = sched.n_supersteps
+    X, Y = _data(S)
+    grad = _grad_fn(X, Y)
+    x0 = np.random.default_rng(3).normal(size=(N, D)).astype(np.float32)
+    binned = run_superstep_oracle(
+        x0, grad, sched.perms, H_MEAN, LR, nonblocking=nonblocking,
+        h_schedule=sched.h, masks=sched.mask, kinds=sched.kinds)
+    seq = run_events_oracle(x0, grad, tr.pairs, tr.h, sched.event_bin,
+                            LR, nonblocking=nonblocking, kinds=tr.kinds)
+    np.testing.assert_array_equal(binned[-1], seq[-1])
+    for s in range(S):
+        # the last event mapped to bin s is the bin's final interaction
+        # (a LEAVE with effect bin s precedes bin s's own events)
+        last_e = int(np.nonzero(sched.event_bin == s)[0][-1])
+        np.testing.assert_array_equal(binned[s], seq[last_e])
+
+
+@pytest.mark.parametrize("nonblocking", [False, True])
+def test_engine_churn_exchange_layer_bitwise_lr0(nonblocking):
+    """Tentpole layer 2: with lr = 0 the local steps are exact no-ops, so
+    EVERY remaining operation is the churn exchange layer — averaging
+    chains, the packed join bootstrap, masking, retirement. The engine
+    must equal the binned AND the sequential oracle bit for bit at every
+    bin boundary."""
+    tr, sched, _ = _trace_and_schedule()
+    S = sched.n_supersteps
+    X, Y = _data(S)
+    scfg = SwarmConfig(n_nodes=N, H=H_MEAN, h_mode="trace", h_max=H_MAX,
+                       nonblocking=nonblocking, gossip_impl="gather",
+                       track_potential=False)
+    traj, _ = _run_engine_churn(scfg, sched, X, Y, lr=0.0)
+    x0_state = swarm_init(jax.random.PRNGKey(0), scfg,
+                          lambda k: {"w": jax.random.normal(k, (D,)) * 0.3},
+                          make_optimizer("sgd", lr=0.0, momentum=0.0).init,
+                          same_init=False)
+    x0 = np.asarray(x0_state.params["w"], np.float32)
+    binned = run_superstep_oracle(
+        x0, _grad_fn(X, Y), sched.perms, H_MEAN, 0.0,
+        nonblocking=nonblocking, h_schedule=sched.h, masks=sched.mask,
+        kinds=sched.kinds)
+    seq = run_events_oracle(x0, _grad_fn(X, Y), tr.pairs, tr.h,
+                            sched.event_bin, 0.0, nonblocking=nonblocking,
+                            kinds=tr.kinds)
+    np.testing.assert_array_equal(traj, binned)
+    np.testing.assert_array_equal(traj[-1], seq[-1])
+
+
+@pytest.mark.parametrize("nonblocking", [False, True])
+def test_engine_matches_oracle_under_churn(nonblocking):
+    """Tentpole layer 3: live gradients — engine within fp32 tolerance of
+    the binned oracle over the whole churn trajectory, with each join
+    bin's bootstrap copy asserted BITWISE (the copy is exact pack/unpack,
+    fused local steps are what carry the fp32 slack)."""
+    tr, sched, _ = _trace_and_schedule()
+    S = sched.n_supersteps
+    X, Y = _data(S)
+    scfg = SwarmConfig(n_nodes=N, H=H_MEAN, h_mode="trace", h_max=H_MAX,
+                       nonblocking=nonblocking, gossip_impl="gather",
+                       track_potential=False)
+    traj, _ = _run_engine_churn(scfg, sched, X, Y)
+    x0 = traj[0] * 0  # placeholder; real x0 below
+    state0 = swarm_init(jax.random.PRNGKey(0), scfg,
+                        lambda k: {"w": jax.random.normal(k, (D,)) * 0.3},
+                        make_optimizer("sgd", lr=LR, momentum=0.0).init,
+                        same_init=False)
+    x0 = np.asarray(state0.params["w"], np.float32)
+    ref = run_superstep_oracle(
+        x0, _grad_fn(X, Y), sched.perms, H_MEAN, LR,
+        nonblocking=nonblocking, h_schedule=sched.h, masks=sched.mask,
+        kinds=sched.kinds)
+    np.testing.assert_allclose(traj, ref, rtol=2e-5, atol=2e-5)
+    # join bins: the engine's post-bin state at the joiner must equal the
+    # donor's pre-bin state EXACTLY — the bootstrap is a bitwise copy
+    for s in np.nonzero(sched.kinds == EVENT_JOIN)[0]:
+        joiner = int(np.nonzero(sched.mask[s])[0][0])
+        donor = int(sched.perms[s][joiner])
+        prev_w = traj[s - 1] if s > 0 else x0
+        np.testing.assert_array_equal(traj[s][joiner], prev_w[donor])
+        # non-participants of a join bin are untouched, bitwise
+        others = np.ones(N, bool)
+        others[joiner] = False
+        np.testing.assert_array_equal(traj[s][others], prev_w[others])
+
+
+@pytest.mark.parametrize("codec", [None, "topk:0.25"])
+def test_join_step_is_one_packed_collective(codec):
+    """Acceptance: the join bootstrap lowers to exactly ONE gather on the
+    flat packed buffer — no per-leaf collectives, regardless of codec."""
+    scfg = SwarmConfig(n_nodes=N, H=H_MEAN, nonblocking=True,
+                       quantize=codec is not None, codec=codec or "q8",
+                       gossip_impl="gather", track_potential=False)
+    _, state = _make_engine(scfg)
+    join = make_join_step(scfg)
+    perm = jnp.asarray(np.arange(N, dtype=np.int32))
+    mask = jnp.zeros((N,), bool)
+    jaxpr = str(jax.make_jaxpr(join)(state, perm, mask))
+    ops = re.findall(r"\b(gather|ppermute|all_gather|all_to_all)\b", jaxpr)
+    assert ops.count("gather") == 1, ops
+    assert not any(o in ("ppermute", "all_gather", "all_to_all")
+                   for o in ops), ops
+
+
+def test_join_step_refuses_overlap():
+    scfg = SwarmConfig(n_nodes=N, H=H_MEAN, nonblocking=True, overlap=True,
+                       gossip_impl="gather", track_potential=False)
+    with pytest.raises(AssertionError, match="overlap"):
+        make_join_step(scfg)
+
+
+def test_retire_freezes_lane_and_zeroes_residual():
+    """Layer-2 retirement semantics: after its leave the node's params are
+    frozen bitwise for the rest of the run (the scheduler never matches it
+    again), and retire_nodes zeroes exactly its EF residual."""
+    tr, sched, _ = _trace_and_schedule()
+    S = sched.n_supersteps
+    X, Y = _data(S)
+    scfg = SwarmConfig(n_nodes=N, H=H_MEAN, h_mode="trace", h_max=H_MAX,
+                       nonblocking=True, quantize=True, codec="topk:0.25",
+                       gossip_impl="gather", track_potential=False)
+    traj, final_state = _run_engine_churn(scfg, sched, X, Y)
+    # every retired node: mask is False from its effect bin onward, and
+    # params freeze at the pre-retirement value
+    effect_of = {}
+    for s in range(sched.n_supersteps + 1):
+        for i in np.nonzero(sched.retire[s])[0]:
+            effect_of[int(i)] = s
+    assert effect_of, "fixture produced no leaves"
+    for i, s_eff in effect_of.items():
+        assert not sched.mask[s_eff:, i].any(), \
+            f"node {i} matched after its leave"
+        frozen = traj[s_eff - 1][i] if s_eff > 0 else None
+        if frozen is not None and s_eff < S:
+            for s in range(s_eff, S):
+                np.testing.assert_array_equal(traj[s][i], frozen)
+        # its error-feedback residual is retired to exactly zero
+        np.testing.assert_array_equal(
+            np.asarray(final_state.residual)[i],
+            np.zeros_like(np.asarray(final_state.residual)[i]))
+    # survivors' residuals are NOT blanket-zeroed by retirement: retiring
+    # an empty mask is the identity
+    same = retire_nodes(final_state, np.zeros(N, bool))
+    np.testing.assert_array_equal(np.asarray(same.residual),
+                                  np.asarray(final_state.residual))
+
+
+def test_quantized_churn_tracks_exact():
+    """q8 gossip under churn stays inside the quantization-error envelope
+    of the exact churn run (joins/leaves do not amplify codec error)."""
+    tr, sched, _ = _trace_and_schedule()
+    S = sched.n_supersteps
+    X, Y = _data(S)
+
+    def run(quantize):
+        scfg = SwarmConfig(n_nodes=N, H=H_MEAN, h_mode="trace",
+                           h_max=H_MAX, nonblocking=True, quantize=quantize,
+                           gossip_impl="gather", track_potential=False)
+        traj, _ = _run_engine_churn(scfg, sched, X, Y, lr=0.01,
+                                    same_init=True)
+        return traj
+
+    exact, quant = run(False), run(True)
+    assert float(np.max(np.abs(exact - quant))) < 0.05
+
+
+def test_mid_churn_clock_resume_bitwise():
+    """Checkpoint/resume of the event SOURCE mid-churn: generating 30
+    events, snapshotting (clocks state + availability state + last_t), and
+    generating 30 more from the snapshot equals the unbroken 60-event
+    trace bit for bit — kinds and alive-sets included."""
+    g = make_graph("complete", N)
+    prof = RateProfile("lognormal", sigma=0.8)
+    rates = prof.make_rates(N, 13)
+    av = parse_avail(AVAIL_SPEC, N, seed=0)
+
+    full_clocks = PoissonClocks(g, rates, 13, avail=av)
+    full = generate_trace(g, prof, 60, H=H_MEAN, h_max=H_MAX,
+                          h_mode="rate", seed=13, clocks=full_clocks)
+    assert _fixture_has_churn(full)
+
+    c1 = PoissonClocks(g, rates, 13, avail=parse_avail(AVAIL_SPEC, N, seed=0))
+    t1 = generate_trace(g, prof, 30, H=H_MEAN, h_max=H_MAX,
+                        h_mode="rate", seed=13, clocks=c1)
+    snap = c1.state_dict()
+    av2 = AvailabilityModel.from_state(av.state_dict())  # resume from meta
+    c2 = PoissonClocks.from_state(snap, g, rates, 13, avail=av2)
+    t2 = generate_trace(g, prof, 30, H=H_MEAN, h_max=H_MAX,
+                        h_mode="rate", seed=13, clocks=c2,
+                        last_t=np.asarray(t1.meta["last_t"]))
+
+    np.testing.assert_array_equal(
+        full.times, np.concatenate([t1.times, t2.times]))
+    np.testing.assert_array_equal(
+        full.pairs, np.concatenate([t1.pairs, t2.pairs]))
+    np.testing.assert_array_equal(
+        full.h, np.concatenate([t1.h, t2.h]))
+    np.testing.assert_array_equal(
+        full.kinds, np.concatenate([t1.kinds, t2.kinds]))
+    np.testing.assert_array_equal(
+        full.alive, np.concatenate([t1.alive, t2.alive]))
+
+
+def test_driver_sched_meta_roundtrip_carries_avail():
+    """launch/train.py checkpoint plumbing: sched_checkpoint_meta embeds
+    the availability state; restore_sched_clocks rebuilds clocks that
+    continue the exact event sequence — through a JSON round trip, as a
+    real checkpoint would."""
+    import argparse
+    import json
+
+    from repro.launch.train import restore_sched_clocks, sched_checkpoint_meta
+    g = make_graph("complete", N)
+    prof = RateProfile("lognormal", sigma=0.8)
+    rates = prof.make_rates(N, 13)
+    av = parse_avail(AVAIL_SPEC, N, seed=13)
+    clocks = PoissonClocks(g, rates, 13, avail=av)
+    t1 = generate_trace(g, prof, 25, H=H_MEAN, h_max=H_MAX,
+                        h_mode="rate", seed=13, clocks=clocks)
+    args = argparse.Namespace(rate_profile="lognormal", rate_sigma=0.8,
+                              trace_seed=None, seed=13, straggler=None,
+                              nodes=N, avail=AVAIL_SPEC)
+    meta = json.loads(json.dumps(sched_checkpoint_meta(args, t1, clocks)))
+    assert meta["avail"] is not None
+
+    clocks2, last_t, rng = restore_sched_clocks(meta, g)
+    assert rng is None and clocks2.avail is not None
+    cont = generate_trace(g, prof, 25, H=H_MEAN, h_max=H_MAX,
+                          h_mode="rate", seed=13, clocks=clocks2,
+                          last_t=last_t)
+    ref = generate_trace(g, prof, 25, H=H_MEAN, h_max=H_MAX,
+                         h_mode="rate", seed=13, clocks=clocks,
+                         last_t=np.asarray(t1.meta["last_t"]))
+    np.testing.assert_array_equal(ref.times, cont.times)
+    np.testing.assert_array_equal(ref.pairs, cont.pairs)
+    np.testing.assert_array_equal(ref.h, cont.h)
+    np.testing.assert_array_equal(ref.kinds, cont.kinds)
+    np.testing.assert_array_equal(ref.alive, cont.alive)
+
+
+def test_cost_model_prices_churn():
+    """Leaves price zero (removing them changes nothing); a join prices
+    exactly one payload on the joiner's ready time; fixed-membership
+    traces report no churn keys."""
+    tr, sched, _ = _trace_and_schedule()
+    cp = CostParams(flops_per_step=1e9, hbm_bytes_per_step=1e7,
+                    payload_bytes=10**6)
+    rep = predict_walltime(tr, cp)
+    assert rep["n_joins"] == tr.meta["n_joins"] > 0
+    assert rep["n_leaves"] == tr.meta["n_leaves"] > 0
+    assert rep["join_comm_s"] == pytest.approx(
+        rep["n_joins"] * cp.comm_time_s())
+
+    # drop the LEAVE events: identical prediction (they cost nothing)
+    keep = tr.kinds != EVENT_LEAVE
+    from repro.sched import Trace
+    tr_noleave = Trace(tr.n_nodes, tr.times[keep], tr.pairs[keep],
+                       tr.h[keep], tr.rates, tr.h_max, meta=dict(tr.meta),
+                       kinds=tr.kinds[keep], alive=tr.alive[keep])
+    rep2 = predict_walltime(tr_noleave, cp)
+    assert rep2["total_s"] == rep["total_s"]
+    assert rep2["comm_total_s"] == rep["comm_total_s"]
+
+    # fixed-membership path is untouched (no churn keys)
+    g = make_graph("complete", N)
+    prof = RateProfile("lognormal", sigma=0.8)
+    plain = generate_trace(g, prof, 40, H=H_MEAN, h_max=H_MAX,
+                           h_mode="rate", seed=13)
+    repp = predict_walltime(plain, cp)
+    assert "n_joins" not in repp
+
+
+def test_bin_trace_rejects_static_transports_for_churn():
+    tr, _, _ = _trace_and_schedule(n_events=30)
+    with pytest.raises(ValueError, match="gather"):
+        bin_trace(tr, static_pairs=[(0, 1)])
+
+
+def test_registry_gates_churn():
+    """Capability matrix: --avail is swarm-only, gather-only, no overlap."""
+    from repro.algorithms import validate_run_config
+    caps = validate_run_config("swarm", avail=AVAIL_SPEC)
+    assert caps.churn
+    with pytest.raises(ValueError, match="elastic membership"):
+        validate_run_config("sgp", avail=AVAIL_SPEC)
+    with pytest.raises(ValueError, match="gossip-impl"):
+        validate_run_config("swarm", avail=AVAIL_SPEC,
+                            gossip_impl="ppermute")
+    with pytest.raises(ValueError, match="overlap"):
+        validate_run_config("swarm", avail=AVAIL_SPEC, nonblocking=True,
+                            overlap=True)
+
+
+def test_uptime_based_h_accrual():
+    """Rate-mode h credits UP-time, not wall gap: replaying the fixture
+    trace's per-node gaps, every gap's up-time is <= the wall gap, and at
+    least one mix-event gap spans an off window (strict inequality) — the
+    hours a node is down are really being withheld from its h credit."""
+    g = make_graph("complete", N)
+    prof = RateProfile("uniform")
+    spec = "day_night:period=10,duty=0.4,seed=1"
+    av = parse_avail(spec, N, seed=0)
+    clocks = PoissonClocks(g, prof.make_rates(N, 5), 5, avail=av)
+    tr = generate_trace(g, prof, 120, H=4, h_max=16, h_mode="rate",
+                        seed=5, clocks=clocks)
+    last_t = np.zeros(N)
+    some_strict = False
+    for e in range(tr.n_events):
+        if int(tr.kinds[e]) != EVENT_MIX:
+            continue
+        t = float(tr.times[e])
+        for k in range(2):
+            i = int(tr.pairs[e, k])
+            wall = t - last_t[i]
+            up = av.uptime(i, last_t[i], t)
+            assert up <= wall + 1e-12
+            if up < wall - 1e-9:
+                some_strict = True
+            last_t[i] = t
+    assert some_strict, "no gap spanned an off window — fixture too easy"

@@ -1,0 +1,260 @@
+"""Mid-run checkpoint/resume under the CI env-leg matrix, and the
+scan-driver --eval-mean fix (ISSUE satellites 2 and 3).
+
+The CI legs drive the SAME suites through env knobs (REPRO_CODEC,
+REPRO_SCAN_CHUNK, REPRO_RATE_PROFILE); this file reads those knobs the
+way tests/test_sched_parity.py reads REPRO_RATE_PROFILE, defaulting to
+the matrix corner the ISSUE names (q4 x chunk-4 x lognormal), and proves:
+
+* a run interrupted at a checkpointable point and resumed into a FRESH
+  engine equals the uninterrupted run bit for bit — per-step driver and
+  chunked scan driver, scheduled (masked, variable-h) traces included;
+* the mean-model evaluation a scan-chunked run reports at a chunk
+  boundary is bitwise the value the per-step driver reports at the same
+  step (the drivers themselves are bitwise identical, so the fix is
+  evaluating at boundaries rather than refusing the combination).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core import (SwarmConfig, make_graph, make_superstep_scan,
+                        make_swarm_step, swarm_init)
+from repro.core.swarm import (codec_checkpoint_tree, make_mean_model_eval,
+                              restore_codec_state)
+from repro.optim import make_optimizer
+from repro.quant.schemes import ModularQuantConfig
+from repro.sched import RateProfile, bin_trace, generate_trace
+
+N, D, H, H_MAX, B = 8, 12, 2, 4, 4
+LR = 0.05
+QCFG = ModularQuantConfig(safety=16.0)
+
+_CODEC = os.environ.get("REPRO_CODEC") or "q4"
+_CHUNK = int(os.environ.get("REPRO_SCAN_CHUNK") or 4)
+_ENV_PROFILE = os.environ.get("REPRO_RATE_PROFILE", "lognormal")
+PROFILE = RateProfile(_ENV_PROFILE if _ENV_PROFILE in
+                      ("uniform", "lognormal") else "lognormal", sigma=0.8)
+
+
+def _sched_inputs(n_events=48, seed=13):
+    g = make_graph("complete", N)
+    tr = generate_trace(g, PROFILE, n_events, H=H, h_max=H_MAX,
+                        h_mode="rate", seed=seed)
+    sched = bin_trace(tr)
+    return sched.perms, sched.h, sched.mask
+
+
+def _data(S, seed=42):
+    r = np.random.default_rng(seed)
+    X = r.normal(size=(S, N, H_MAX, B, D)).astype(np.float32)
+    Y = r.normal(size=(S, N, H_MAX, B)).astype(np.float32)
+    return X, Y
+
+
+def _lin_loss(p, mb):
+    x, y = mb
+    return 0.5 * jnp.mean((x @ p["w"] - y) ** 2)
+
+
+def _make_engine(scfg):
+    opt = make_optimizer("sgd", lr=LR, momentum=0.0)
+    state = swarm_init(jax.random.PRNGKey(0), scfg,
+                       lambda k: {"w": jax.random.normal(k, (D,)) * 0.3},
+                       opt.init, same_init=False)
+    step = jax.jit(make_swarm_step(scfg, _lin_loss, opt.update,
+                                   lambda s: LR))
+    return step, state
+
+
+def _scfg():
+    return SwarmConfig(n_nodes=N, H=H, h_mode="trace", h_max=H_MAX,
+                       nonblocking=True, quantize=True, codec=_CODEC,
+                       quant=QCFG, gossip_impl="gather",
+                       track_potential=False)
+
+
+def _run_per_step(step, state, X, Y, perms, hs, masks, key, lo, hi):
+    for t in range(lo, hi):
+        key, sub = jax.random.split(key)
+        state, _ = step(state, (jnp.asarray(X[t]), jnp.asarray(Y[t])),
+                        jnp.asarray(perms[t]), jnp.asarray(hs[t]), sub,
+                        jnp.asarray(masks[t]))
+    return state, key
+
+
+def _run_scan(step, state, key, X, Y, perms, hs, masks, starts, chunk,
+              donate=True):
+    chunk_fn = make_superstep_scan(step, with_mask=True, donate=donate)
+    boundary_states = {}
+    for t in starts:
+        K = min(chunk, len(perms) - t)
+        state, key, _ = chunk_fn(
+            state, key,
+            (jnp.asarray(X[t:t + K]), jnp.asarray(Y[t:t + K])),
+            jnp.asarray(perms[t:t + K]), jnp.asarray(hs[t:t + K]),
+            jnp.asarray(masks[t:t + K]))
+        boundary_states[t + K - 1] = state
+    return state, key, boundary_states
+
+
+def _ckpt_roundtrip(state, key, tmp_path, tag):
+    """Save exactly what the driver persists (codec tree + rng key) and
+    restore it into a FRESH engine — the restored run must not rely on
+    any live in-process state."""
+    tree = codec_checkpoint_tree(state)
+    tree["rng_key"] = np.asarray(jax.device_get(key))
+    ck = str(tmp_path / f"ck_{tag}")
+    save_checkpoint(ck, jax.device_get(tree), {"codec": _CODEC})
+    _, fresh = _make_engine(_scfg())
+    loaded = load_checkpoint(ck, tree)
+    restored_key = jnp.asarray(loaded.pop("rng_key"))
+    return restore_codec_state(fresh, loaded), restored_key
+
+
+def _assert_states_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for name in ("prev", "residual"):
+        xa, xb = getattr(a, name), getattr(b, name)
+        assert (xa is None) == (xb is None), name
+        for x, y in zip(jax.tree.leaves(xa), jax.tree.leaves(xb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_per_step_mid_run_resume_bitexact(tmp_path):
+    """Per-step driver, scheduled trace, env-leg codec: interrupt at the
+    midpoint, restore into a fresh engine, finish — final state equals
+    the uninterrupted run bitwise (params, comm copy, residual)."""
+    perms, hs, masks = _sched_inputs()
+    S = len(perms)
+    X, Y = _data(S)
+    step, state = _make_engine(_scfg())
+    full, _ = _run_per_step(step, state, X, Y, perms, hs, masks,
+                            jax.random.PRNGKey(7), 0, S)
+
+    step2, s0 = _make_engine(_scfg())
+    mid, mid_key = _run_per_step(step2, s0, X, Y, perms, hs, masks,
+                                 jax.random.PRNGKey(7), 0, S // 2)
+    restored, key = _ckpt_roundtrip(mid, mid_key, tmp_path, "per_step")
+    step3, _ = _make_engine(_scfg())
+    resumed, _ = _run_per_step(step3, restored, X, Y, perms, hs, masks,
+                               key, S // 2, S)
+    _assert_states_bitwise(full, resumed)
+
+
+def test_chunked_scan_mid_run_resume_bitexact(tmp_path):
+    """Scan driver at the env-leg chunk size on a scheduled trace:
+    checkpoint at a chunk boundary, resume, bitwise-equal final state —
+    the scheduler-masked generalization of
+    tests/test_scan_driver.py::test_chunked_scan_checkpoint_resume_bitexact."""
+    perms, hs, masks = _sched_inputs()
+    S = (len(perms) // _CHUNK) * _CHUNK
+    assert S >= 2 * _CHUNK, "trace too short for a mid-run boundary"
+    perms, hs, masks = perms[:S], hs[:S], masks[:S]
+    X, Y = _data(S)
+    starts = list(range(0, S, _CHUNK))
+    step, state = _make_engine(_scfg())
+    full, _, _ = _run_scan(step, state, jax.random.PRNGKey(7), X, Y,
+                           perms, hs, masks, starts, _CHUNK)
+
+    cut = starts[len(starts) // 2]
+    step2, s0 = _make_engine(_scfg())
+    mid, mid_key, _ = _run_scan(step2, s0, jax.random.PRNGKey(7), X, Y,
+                                perms[:cut], hs[:cut], masks[:cut],
+                                starts[:len(starts) // 2], _CHUNK)
+    restored, key = _ckpt_roundtrip(mid, mid_key, tmp_path, "scan")
+    step3, _ = _make_engine(_scfg())
+    resumed, _, _ = _run_scan(step3, restored, key, X[cut:], Y[cut:],
+                              perms[cut:], hs[cut:], masks[cut:],
+                              list(range(0, S - cut, _CHUNK)), _CHUNK)
+    _assert_states_bitwise(full, resumed)
+
+
+def test_cross_driver_resume_bitexact(tmp_path):
+    """The drivers are interchangeable at a boundary: run the first half
+    chunked, resume the second half PER-STEP — still bitwise equal to the
+    uninterrupted per-step run (chunk boundaries are honest checkpoints,
+    not scan-internal state)."""
+    perms, hs, masks = _sched_inputs()
+    S = (len(perms) // _CHUNK) * _CHUNK
+    perms, hs, masks = perms[:S], hs[:S], masks[:S]
+    X, Y = _data(S)
+    step, state = _make_engine(_scfg())
+    full, _ = _run_per_step(step, state, X, Y, perms, hs, masks,
+                            jax.random.PRNGKey(7), 0, S)
+
+    cut = (S // (2 * _CHUNK)) * _CHUNK
+    step2, s0 = _make_engine(_scfg())
+    mid, mid_key, _ = _run_scan(step2, s0, jax.random.PRNGKey(7), X, Y,
+                                perms[:cut], hs[:cut], masks[:cut],
+                                list(range(0, cut, _CHUNK)), _CHUNK)
+    restored, key = _ckpt_roundtrip(mid, mid_key, tmp_path, "cross")
+    step3, _ = _make_engine(_scfg())
+    resumed, _ = _run_per_step(step3, restored, X, Y, perms, hs, masks,
+                               key, cut, S)
+    _assert_states_bitwise(full, resumed)
+
+
+def test_eval_mean_at_chunk_boundary_matches_per_step():
+    """Satellite 3: μ evaluated at a scan chunk boundary is BITWISE the
+    per-step driver's value at the same step — --eval-mean now composes
+    with --scan-chunk instead of being refused."""
+    perms, hs, masks = _sched_inputs()
+    S = (len(perms) // _CHUNK) * _CHUNK
+    perms, hs, masks = perms[:S], hs[:S], masks[:S]
+    X, Y = _data(S)
+    ev = make_mean_model_eval(_lin_loss)
+    eval_batch = (jnp.asarray(X[0, 0]).reshape(-1, D)[:B],
+                  jnp.asarray(Y[0, 0]).reshape(-1)[:B])
+
+    step, state = _make_engine(_scfg())
+    per_step_vals = {}
+    key = jax.random.PRNGKey(7)
+    for t in range(S):
+        state, key = _run_per_step(step, state, X, Y, perms, hs, masks,
+                                   key, t, t + 1)
+        if (t + 1) % _CHUNK == 0:
+            per_step_vals[t] = {k: np.asarray(v) for k, v in
+                                ev(state.params, eval_batch).items()}
+
+    # donate=False: the boundary snapshots must outlive the next chunk
+    # (donation would invalidate their buffers); values are identical
+    # either way (tests/test_scan_driver.py asserts that)
+    step2, s2 = _make_engine(_scfg())
+    _, _, boundaries = _run_scan(step2, s2, jax.random.PRNGKey(7), X, Y,
+                                 perms, hs, masks,
+                                 list(range(0, S, _CHUNK)), _CHUNK,
+                                 donate=False)
+    assert set(per_step_vals) == set(boundaries)
+    for t, ref in per_step_vals.items():
+        got = ev(boundaries[t].params, eval_batch)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], np.asarray(got[k]), k)
+
+
+def test_train_cli_accepts_scan_chunk_with_eval_mean(capsys, monkeypatch):
+    """The driver no longer refuses --scan-chunk + --eval-mean: a tiny run
+    emits chunk-boundary records carrying the mean-model keys."""
+    import json
+    import sys
+
+    from repro.launch.train import main
+    # the churn CI leg exports REPRO_AVAIL_PROFILE, which the driver reads
+    # as the --avail default; churn (join bins) legitimately refuses the
+    # scan driver, and this test is about --scan-chunk + --eval-mean only
+    monkeypatch.delenv("REPRO_AVAIL_PROFILE", raising=False)
+    monkeypatch.setattr(sys, "argv", [
+        "train", "--arch", "transformer-wmt", "--reduced", "--layers", "1",
+        "--d-model", "16", "--nodes", "4", "--steps", "4", "--batch", "1",
+        "--seq", "16", "--scan-chunk", "2", "--eval-mean",
+        "--log-every", "2"])
+    main()
+    recs = [json.loads(line) for line in
+            capsys.readouterr().out.strip().splitlines()]
+    boundary_steps = {r["step"] for r in recs if "loss_mean_model" in r}
+    assert {1, 3} <= boundary_steps, recs
