@@ -36,6 +36,11 @@ results/bench/. Paper mapping:
                      trace (joins + leaves) through the bridged engine's
                      retire/join/masked-superstep loop, kind-aware
                      predicted-vs-simulated wall-clock
+  t15_serve        — DESIGN.md §Serving: continuous-batching engine under
+                     open-loop Poisson arrivals with a swarm model landing
+                     mid-run — tokens/s, p50/p99 token latency, queue
+                     depth, time-to-fresh-model; asserts >=1 hot swap,
+                     0 dropped in-flight, 0 decode recompiles
 """
 from __future__ import annotations
 
@@ -1060,13 +1065,98 @@ def t14_churn(quick=False):
     return out
 
 
+def t15_serve(quick=False):
+    """DESIGN.md §Serving: the continuous-batching engine under a
+    synthetic open-loop Poisson arrival process on CPU, with a fresh swarm
+    mean model landing MID-RUN through the hot-swap path. Reports
+    tokens/s, p50/p99 per-token latency, queue depth, and
+    time-to-fresh-model; asserts the serving contract — at least one model
+    refresh adopted, zero in-flight sequences dropped, zero decode-step
+    recompiles after warmup (jit-cache-miss counter). Emits
+    results/bench/t15_serve.json (CI artifact)."""
+    import time
+
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    from repro.serve import EngineConfig, ModelUpdate, Request, ServeEngine
+    from repro.serve.engine import serve_openloop
+
+    cfg = reduced(get_config("mamba2-780m"), n_layers=2, d_model=64)
+    n_requests = 8 if quick else 16
+    ecfg = EngineConfig(max_slots=4, prompt_len=16, max_new_tokens=12,
+                        queue_depth=8, seed=0)
+
+    k_a, k_b, k_prompts = jax.random.split(jax.random.PRNGKey(0), 3)
+    params_a = init_params(k_a, cfg)
+    params_b = init_params(k_b, cfg)     # the "training made progress" model
+
+    class MidRunSource:
+        """Releases model B once the engine has completed half the load —
+        the swarm checkpoint that lands mid-serving (load-triggered, not
+        wall-clock, so jit warmup can't race the swap past generation 1)."""
+
+        def __init__(self, after_completions):
+            self.after = after_completions
+            self.engine = None           # bound after engine construction
+            self.done = False
+
+        def poll(self):
+            if self.done or self.engine is None or \
+                    len(self.engine.completions) < self.after:
+                return None
+            self.done = True
+            return ModelUpdate(params_b, 1, time.time(), tag="refresh")
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (n_requests, ecfg.prompt_len))
+    # open-loop Poisson arrivals: exponential gaps, ~25 req/s offered
+    gaps = rng.exponential(0.04, n_requests)
+    t_arr = np.cumsum(gaps)
+    arrivals = [(float(t_arr[i]),
+                 Request(i, prompts[i].astype(np.int32)))
+                for i in range(n_requests)]
+
+    src = MidRunSource(after_completions=n_requests // 3)
+    engine = ServeEngine(cfg, ecfg, params=params_a, source=src)
+    src.engine = engine
+    completions = serve_openloop(engine, arrivals)
+    s = engine.metrics.summary()
+
+    gens = sorted({c.gen for c in completions})
+    assert s["swaps_adopted"] >= 2 and len(gens) >= 2, \
+        f"no model refresh adopted mid-run: {s} gens={gens}"
+    assert s["dropped_in_flight"] == 0, s
+    assert s["completed"] + s["rejected"] == n_requests, s
+    assert s["decode_cache_misses"] == 0, \
+        f"decode step recompiled under swap/churn: {s}"
+    out = {"arch": cfg.name, "n_requests": n_requests,
+           "engine": {"max_slots": ecfg.max_slots,
+                      "prompt_len": ecfg.prompt_len,
+                      "max_new_tokens": ecfg.max_new_tokens,
+                      "queue_depth": ecfg.queue_depth},
+           "generations_served": gens, **s}
+    emit("t15_serve/openloop", s["latency_p50_ms"] * 1e3,
+         f"tok_s={s['tokens_per_s']};p50_ms={s['latency_p50_ms']};"
+         f"p99_ms={s['latency_p99_ms']};qmax={s['queue_depth_max']};"
+         f"completed={s['completed']};rejected={s['rejected']}")
+    emit("t15_serve/hot_swap", 0.0,
+         f"swaps={s['swaps_adopted']};gens={gens};"
+         f"fresh_max_s={s['time_to_fresh_max_s']};"
+         f"dropped={s['dropped_in_flight']};"
+         f"recompiles={s['decode_cache_misses']}")
+    save("t15_serve", out)
+    return out
+
+
 TABLES = {
     "t1": t1_convergence, "t2": t2_localsteps, "t3": t3_quantization,
     "t4": t4_comm_cost, "t5": t5_potential, "t6": t6_nonblocking,
     "t7": t7_roofline, "t8": t8_topology, "t8_transport": t8_transport,
     "t9": t9_node_scaling, "t9_async": t9_async, "t10_sched": t10_sched,
     "t11_baselines": t11_baselines, "t12_codecs": t12_codecs,
-    "t13_fused": t13_fused, "t14_churn": t14_churn,
+    "t13_fused": t13_fused, "t14_churn": t14_churn, "t15_serve": t15_serve,
 }
 
 

@@ -1,1 +1,3 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    load_checkpoint, load_metadata, mean_model_tree, save_checkpoint,
+)

@@ -74,3 +74,24 @@ def load_checkpoint(path: str, like: Any) -> Any:
 def load_metadata(path: str) -> dict:
     with open(path + ".json") as f:
         return json.load(f)["metadata"]
+
+
+def mean_model_tree(params_stacked):
+    """Node-stacked params -> the swarm's TRUE average model μ as a
+    SINGLE-model tree: pack to the flat [n_nodes, n_padded] fp32 buffer,
+    mean over the node axis, unpack through a single-node layout (original
+    leaf dtypes). THE shared mean-model code path: the serving subsystem's
+    checkpoint follower (serve/source.py) and the training driver's
+    ``--eval-mean`` (core/swarm.py make_mean_model_eval) both materialize
+    μ through this function — bitwise-equal to the historical per-leaf
+    ``potential.mean_model`` + cast (asserted in tests/test_serve.py)."""
+    import jax.numpy as jnp
+
+    from repro.core import bucket as B
+    layout = B.build_layout(params_stacked)
+    buf = B.pack(layout, params_stacked)
+    probe = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params_stacked)
+    flat = B.build_flat_layout(probe)
+    assert flat.n_padded == layout.n_padded, (flat.n_padded, layout.n_padded)
+    return B.unpack_flat(flat, jnp.mean(buf, axis=0))

@@ -507,14 +507,16 @@ def retire_nodes(state: SwarmState, left_mask) -> SwarmState:
 def make_mean_model_eval(loss_fn: Callable):
     """Evaluate the swarm's TRUE average model μ vs per-node models — the
     paper's §5 check ("the real average of all models is usually more
-    accurate than an arbitrary model, but not significantly")."""
-    from repro.core.potential import mean_model
+    accurate than an arbitrary model, but not significantly"). μ comes
+    from checkpoint.mean_model_tree — the SAME code path the serving
+    subsystem's checkpoint follower uses (serve/source.py), so --eval-mean
+    and a served mean model can never silently diverge (bitwise-equal to
+    the historical per-leaf mean; tests/test_serve.py)."""
+    from repro.checkpoint import mean_model_tree
 
     @jax.jit
     def evaluate(params_stacked, batch_single):
-        mu = mean_model(params_stacked)
-        mu = jax.tree.map(lambda a, like: a.astype(like.dtype),
-                          mu, jax.tree.map(lambda x: x[0], params_stacked))
+        mu = mean_model_tree(params_stacked)
         loss_mu = loss_fn(mu, batch_single)
         loss_nodes = jax.vmap(lambda p: loss_fn(p, batch_single))(params_stacked)
         return {"loss_mean_model": loss_mu,

@@ -367,6 +367,14 @@ def main():
     ap.add_argument("--eval-mean", action="store_true",
                     help="also evaluate the true average model μ (paper §5)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N steps into --ckpt (treated as "
+                         "a DIRECTORY of step-stamped checkpoints — the "
+                         "layout repro.serve's CheckpointFollower polls). "
+                         "The per-step driver lands them every N steps; "
+                         "the scan driver at the chunk boundaries that "
+                         "cross a multiple of N (the checkpointable "
+                         "points). 0 = one final checkpoint at --ckpt")
     ap.add_argument("--out", default=None, help="json metrics path")
     args = ap.parse_args()
     # --eval-mean composes with the scan driver: the intermediate states
@@ -428,6 +436,38 @@ def main():
 
     history = []
     t0 = time.time()
+
+    def write_ckpt(path, ck_state, step_no):
+        """One checkpoint-writing path for final and periodic saves; meta
+        carries the swarm width (serving followers validate it) and the
+        step the save landed at."""
+        meta = {"arch": cfg.name, "algo": args.algo, "steps": args.steps,
+                "nodes": args.nodes, "step": step_no}
+        if sched_on:
+            meta["sched"] = sched_checkpoint_meta(args, trace, clocks)
+        if args.quantize:
+            # persist the codec state (comm copy + error-feedback residual)
+            # alongside the params so a resumed quantized run continues
+            # the encode sequence bit-exactly (tests/test_codecs.py). A
+            # pipelined run drains FIRST: in overlap mode the comm copy
+            # lives packed in state.inflight, and the epilogue unpacks it
+            # back into prev so the checkpoint carries a LIVE scale proxy
+            # (on a COPY — the training state itself keeps flowing)
+            from repro.core.swarm import codec_checkpoint_tree
+            if scfg.overlap:
+                from repro.core import pipeline_epilogue
+                ck_state = pipeline_epilogue(scfg, ck_state)
+            tree = codec_checkpoint_tree(ck_state)
+            meta["codec"] = {"spec": args.codec or "q8",
+                             "state": sorted(tree)}
+            save_checkpoint(path, jax.device_get(tree), meta)
+        else:
+            save_checkpoint(path, jax.device_get(ck_state.params), meta)
+
+    def periodic_ckpt(step_no):
+        os.makedirs(args.ckpt, exist_ok=True)
+        path = os.path.join(args.ckpt, f"step_{step_no:06d}")
+        write_ckpt(path, state, step_no)
 
     # satellite of ROADMAP item 5: presample the WHOLE schedule host-side
     # and ship it once — the steady-state loop (either driver) reads
@@ -510,6 +550,9 @@ def main():
                         rec.update(em)
                     history.append(rec)
                     print(json.dumps(rec))
+            if args.ckpt and args.ckpt_every and \
+                    (t + K) // args.ckpt_every > t // args.ckpt_every:
+                periodic_ckpt(t + K)
     else:
         perm_rows = [jnp.asarray(p) for p in perms_np]
         h_rows = [jnp.asarray(h) for h in hs_np]
@@ -564,6 +607,9 @@ def main():
                     rec.update({k: float(v) for k, v in em.items()})
                 history.append(rec)
                 print(json.dumps(rec))
+            if args.ckpt and args.ckpt_every and \
+                    (t + 1) % args.ckpt_every == 0:
+                periodic_ckpt(t + 1)
         if churn and schedule.retire[n_steps].any():
             from repro.core import retire_nodes
             state = retire_nodes(state, jnp.asarray(schedule.retire[n_steps]))
@@ -589,27 +635,13 @@ def main():
                 payload_factor=bsp_payload_factor(args.algo, graph))
         print(json.dumps({"sched_cost": predicted}))
     if args.ckpt:
-        meta = {"arch": cfg.name, "algo": args.algo, "steps": args.steps}
-        if sched_on:
-            meta["sched"] = sched_checkpoint_meta(args, trace, clocks)
-        if args.quantize:
-            # persist the codec state (comm copy + error-feedback residual)
-            # alongside the params so a resumed quantized run continues
-            # the encode sequence bit-exactly (tests/test_codecs.py). A
-            # pipelined run drains FIRST: in overlap mode the comm copy
-            # lives packed in state.inflight, and the epilogue unpacks it
-            # back into prev so the checkpoint carries a LIVE scale proxy
-            from repro.core.swarm import codec_checkpoint_tree
-            if scfg.overlap:
-                from repro.core import pipeline_epilogue
-                state = pipeline_epilogue(scfg, state)
-            tree = codec_checkpoint_tree(state)
-            meta["codec"] = {"spec": args.codec or "q8",
-                             "state": sorted(tree)}
-            save_checkpoint(args.ckpt, jax.device_get(tree), meta)
+        if args.ckpt_every:
+            path = os.path.join(args.ckpt, f"step_{n_steps:06d}")
+            periodic_ckpt(n_steps)
         else:
-            save_checkpoint(args.ckpt, jax.device_get(state.params), meta)
-        print("checkpoint ->", args.ckpt)
+            path = args.ckpt
+            write_ckpt(path, state, n_steps)
+        print("checkpoint ->", path)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

@@ -133,6 +133,16 @@ class WireCodec:
         n_padded] buffer -> (y + decode(wire; y)) / 2, per-row masked."""
         raise NotImplementedError
 
+    def decode(self, wire, ybuf, *, tile_rows: int = 8,
+               backend=None) -> jax.Array:
+        """Plain reconstruction x̂ = decode(wire; y) — NO averaging: the
+        weight-LOAD half the serving subsystem uses to materialize codec
+        checkpoints (serve/source.py; DESIGN.md §Serving). Routes through
+        the SAME kernel entry point as the gossip receive (decode_avg with
+        its fused average switched off), so a served checkpoint is bitwise
+        the value the training side would decode from the same wire."""
+        raise NotImplementedError
+
 
 # ---------------------------------------------------------------------------
 # Lattice family: q2..q16 (the paper's modular scheme, packed below 5 bits)
@@ -207,6 +217,14 @@ class LatticeCodec(WireCodec):
                             tile_rows=tile_rows, backend=backend,
                             pack4=self.packed)
 
+    def decode(self, wire, ybuf, *, tile_rows: int = 8, backend=None):
+        from repro.kernels import ops as K
+        q, s = wire
+        return K.decode_avg(q, s, ybuf, average=False,
+                            block=self.quant.block, bits=self.quant.bits,
+                            tile_rows=tile_rows, backend=backend,
+                            pack4=self.packed)
+
 
 # ---------------------------------------------------------------------------
 # bf16 cast: no scales, no rng, no reference — 2 bytes/coordinate
@@ -237,6 +255,11 @@ class Bf16Codec(WireCodec):
         if matched_rows is not None:
             out = jnp.where(matched_rows.reshape(-1, 1) != 0, out, yb)
         return out.reshape(ybuf.shape).astype(ybuf.dtype)
+
+    def decode(self, wire, ybuf, *, tile_rows: int = 8, backend=None):
+        # the cast IS the reconstruction: y is only a shape/dtype template
+        return wire[0].astype(jnp.float32).reshape(ybuf.shape) \
+            .astype(ybuf.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -313,6 +336,14 @@ class TopKCodec(WireCodec):
         if matched_rows is not None:
             out = jnp.where(matched_rows.reshape(-1, 1) != 0, out, yb)
         return out.reshape(ybuf.shape).astype(ybuf.dtype)
+
+    def decode(self, wire, ybuf, *, tile_rows: int = 8, backend=None):
+        vals, idx = wire
+        yb = ybuf.reshape(-1, self.block).astype(jnp.float32)
+        rows = jnp.arange(yb.shape[0])[:, None]
+        c = jnp.zeros_like(yb).at[rows, idx.astype(jnp.int32)].set(
+            vals.astype(jnp.float32))
+        return (yb + c).reshape(ybuf.shape).astype(ybuf.dtype)   # x̂ = y + c
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,19 @@
+"""Serving subsystem (DESIGN.md §Serving): continuous-batching inference
+over live swarm checkpoints.
+
+* ``source``  — model sources: a checkpoint follower that polls a run
+  directory and materializes the mean model (codec checkpoints decode
+  through quant/codecs.py), plus an in-process live snapshot source;
+* ``swap``    — double-buffered, generation-tagged hot swap of params;
+* ``engine``  — slot-based continuous-batching scheduler over the
+  prefill/decode fns with admission control and backpressure;
+* ``metrics`` — tokens/s, per-token latency percentiles, queue depth,
+  time-to-fresh-model.
+"""
+from repro.serve.engine import EngineConfig, Request, ServeEngine  # noqa: F401
+from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.source import (  # noqa: F401
+    CheckpointFollower, LiveSource, ModelUpdate, export_serving_checkpoint,
+    load_serving_checkpoint,
+)
+from repro.serve.swap import HotSwap  # noqa: F401

@@ -1,0 +1,381 @@
+"""Continuous-batching serving engine (DESIGN.md §Serving).
+
+Slot-based scheduling over the repo's prefill/decode fns: the KV cache is
+a fixed bank of `max_slots` per-sequence lanes (every cache leaf carries a
+leading slot axis; decode is vmapped over it), sequences join and retire
+MID-BATCH by flipping a lane mask — the same masking discipline the
+training engine uses for churn (core/swarm.py): every lane computes every
+step, only masked lanes COMMIT, so all shapes are static and the decode
+step compiles exactly once.
+
+Hot swap (serve/swap.py) composes with the batch through generations: a
+lane is pinned to the param generation it was ADMITTED under and finishes
+on it; new admissions use the newest adopted generation.  At most two
+generations are ever live (adopted + draining), and a decode step runs one
+dispatch per live generation — same shapes, so a swap is a jit-cache HIT
+(the engine counts cache misses; the t15 bench asserts zero after
+warmup).
+
+Admission control: a bounded FIFO queue (`queue_depth`); `submit` on a
+full queue REJECTS (backpressure to the client) and counts it — the
+server degrades by shedding load, never by growing latency without bound.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import forward, init_cache
+from repro.models.transformer import logits_head
+from repro.serve.metrics import ServeMetrics
+from repro.serve.swap import HotSwap
+
+
+def grow_cache(full, cache):
+    """Copy a (smaller) prefill cache into a full-capacity cache bank.
+
+    Every leaf must either match shapes exactly or grow into a same-rank
+    leaf that is at least as large on every axis; anything else raises
+    with the offending leaf path — a shape mismatch silently keeping the
+    EMPTY destination (the historical fallback) would serve garbage KV
+    state.
+    """
+    def grow(path, dst, src):
+        name = jax.tree_util.keystr(path)
+        if dst.ndim != src.ndim:
+            raise ValueError(
+                f"cache leaf {name}: rank mismatch {src.shape} -> "
+                f"{dst.shape}; prefill and serving caches must share "
+                "structure")
+        if dst.shape == src.shape:
+            return src
+        if any(d < s for d, s in zip(dst.shape, src.shape)):
+            raise ValueError(
+                f"cache leaf {name}: cannot grow {src.shape} into smaller "
+                f"{dst.shape}")
+        return dst.at[tuple(slice(0, s) for s in src.shape)].set(src)
+    return jax.tree_util.tree_map_with_path(grow, full, cache)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 4           # concurrent sequences (KV-cache lanes)
+    prompt_len: int = 32         # fixed admission prompt length
+    max_new_tokens: int = 16     # default per-request generation budget
+    cache_size: int = 0         # 0 = prompt_len + max_new_tokens
+    queue_depth: int = 16        # bounded admission queue (backpressure)
+    temperature: float = 0.0     # 0 = greedy (deterministic serving)
+    seed: int = 0
+
+    @property
+    def kv_capacity(self) -> int:
+        return self.cache_size or (self.prompt_len + self.max_new_tokens)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                   # [prompt_len] int32
+    max_new_tokens: int = 0              # 0 = engine default
+    t_submit: float = 0.0
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray                   # [n_generated] int32
+    gen: int                             # param generation served under
+    t_submit: float
+    t_admit: float
+    t_first_token: float
+    t_done: float
+
+
+@dataclass
+class _Lane:
+    rid: int = -1
+    gen: int = -1
+    active: bool = False
+    remaining: int = 0
+    tokens: List[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+
+
+class ServeEngine:
+    """Continuous-batching engine over one model config.
+
+    `source` is any object with ``poll() -> Optional[ModelUpdate]``
+    (serve/source.py); `params` seeds generation 1 directly when no source
+    is used (the one-shot/oracle mode). At least one of the two must
+    provide a model before the first admission.
+    """
+
+    def __init__(self, cfg, ecfg: EngineConfig, *, params=None, source=None):
+        if cfg.frontend is not None:
+            raise ValueError(
+                f"{cfg.name}: the continuous-batching engine serves "
+                "token-only architectures; multimodal prefix serving runs "
+                "through the one-shot path (launch/serve.py)")
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.source = source
+        self.swap = HotSwap()
+        self.metrics = ServeMetrics()
+        self.queue: Deque[Request] = deque()
+        self.lanes = [_Lane() for _ in range(ecfg.max_slots)]
+        self.live: Dict[int, Any] = {}       # gen -> params (<= 2 entries)
+        self.adopted_gen = -1
+        self.completions: List[Completion] = []
+        self._key = jax.random.PRNGKey(ecfg.seed)
+        self._build_fns()
+        self._caches = self._init_cache_bank()
+        self._tokens = jnp.zeros((ecfg.max_slots, 1), jnp.int32)
+        if params is not None:
+            self.swap.publish(params, t_landed=time.time(), tag="init")
+
+    # -- compiled serving fns (each compiles exactly once) -----------------
+
+    def _build_fns(self):
+        cfg, ecfg = self.cfg, self.ecfg
+        temp = ecfg.temperature
+
+        def sample(logits_v, key):           # [vocab] -> scalar int32
+            if temp <= 0:
+                return jnp.argmax(logits_v, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(
+                key, logits_v / temp).astype(jnp.int32)
+
+        def prefill(params, tokens, key):
+            hidden, cache, _ = forward(cfg, params, tokens, mode="prefill")
+            logits = logits_head(cfg, params, hidden[:, -1:])   # [1,1,V]
+            return sample(logits[0, -1], key), cache
+
+        def install(caches, tokens, cache1, tok, i):
+            """Install a grown batch-1 cache (+ its first token) into lane
+            i — i is TRACED, so every lane index hits one compilation."""
+            def put(bank, c):
+                return jax.lax.dynamic_update_index_in_dim(
+                    bank, c.astype(bank.dtype), i, 0)
+            return (jax.tree.map(put, caches, cache1),
+                    jax.lax.dynamic_update_index_in_dim(
+                        tokens, tok[None], i, 0))
+
+        def decode_masked(params, caches, tokens, commit, key):
+            """One decode step over ALL lanes; only `commit` lanes commit
+            their cache/token updates (masking discipline = churn)."""
+            def one(cache, tok):
+                hidden, c2, _ = forward(cfg, params, tok[None, :],
+                                        mode="decode", cache=cache)
+                return logits_head(cfg, params, hidden)[0, -1], c2
+            logits, new_caches = jax.vmap(one)(caches, tokens)  # [slots,V]
+            keys = jax.random.split(key, ecfg.max_slots)
+            toks = jax.vmap(sample)(logits, keys)               # [slots]
+
+            def sel(new, old):
+                m = commit.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(m, new, old)
+            caches_out = jax.tree.map(sel, new_caches, caches)
+            toks_out = jnp.where(commit, toks, tokens[:, 0])[:, None]
+            return toks_out, caches_out
+
+        self._prefill = jax.jit(prefill)
+        self._install = jax.jit(install)
+        self._decode = jax.jit(decode_masked)
+
+    def _grow_full(self, cache1):
+        return grow_cache(
+            init_cache(self.cfg, 1, self.ecfg.kv_capacity), cache1)
+
+    def _init_cache_bank(self):
+        one = init_cache(self.cfg, 1, self.ecfg.kv_capacity)
+        return jax.tree.map(
+            lambda x: jnp.stack([x] * self.ecfg.max_slots), one)
+
+    # -- model management --------------------------------------------------
+
+    def poll_source(self):
+        """Pull at most one fresh model from the source into the swap."""
+        if self.source is None:
+            return
+        upd = self.source.poll()
+        if upd is not None:
+            self.swap.publish(upd.params, t_landed=upd.t_landed,
+                              tag=upd.tag)
+
+    def _gens_in_use(self) -> set:
+        return {ln.gen for ln in self.lanes if ln.active}
+
+    def _try_adopt(self):
+        """Adopt the newest published generation for NEW admissions.
+
+        Double-buffer invariant: at most two generations live at once —
+        adoption DEFERS while two distinct generations still hold active
+        lanes (the draining one finishes first; sequences are finite, so
+        this always unblocks)."""
+        latest = self.swap.latest()
+        if latest is None:
+            return
+        gen, params = latest
+        if gen == self.adopted_gen:
+            return
+        in_use = self._gens_in_use()
+        if len(in_use - {gen}) >= 2:
+            return                         # two gens draining: defer
+        assert gen > self.adopted_gen, "generation tags must be monotone"
+        self.adopted_gen = gen
+        self.live[gen] = params
+        self.metrics.record_adoption(gen, self.swap.landed_at(gen))
+        self._gc_live()
+
+    def _gc_live(self):
+        keep = self._gens_in_use() | {self.adopted_gen}
+        for g in [g for g in self.live if g not in keep]:
+            del self.live[g]
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Bounded-queue admission: False = rejected (backpressure)."""
+        if len(self.queue) >= self.ecfg.queue_depth:
+            self.metrics.rejected += 1
+            self.metrics.record_queue(len(self.queue))
+            return False
+        self.metrics.submitted += 1
+        if not req.t_submit:
+            req.t_submit = time.time()
+        self.queue.append(req)
+        self.metrics.record_queue(len(self.queue))
+        return True
+
+    def _free_lanes(self) -> List[int]:
+        return [i for i, ln in enumerate(self.lanes) if not ln.active]
+
+    def _admit(self, now: float):
+        """Prefill queued requests into free lanes under the adopted
+        generation; the prompt's next-token prediction is the sequence's
+        first committed token (same convention as the one-shot path)."""
+        if self.adopted_gen < 0:
+            return
+        params = self.live[self.adopted_gen]
+        for i in self._free_lanes():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            assert req.prompt.shape == (self.ecfg.prompt_len,), \
+                (req.prompt.shape, self.ecfg.prompt_len)
+            t0 = time.time()
+            self._key, sub = jax.random.split(self._key)
+            tok1, c1 = self._prefill(
+                params, jnp.asarray(req.prompt)[None, :], sub)
+            full = self._grow_full(c1)
+            self._caches, self._tokens = self._install(
+                self._caches, self._tokens, full, tok1, i)
+            jax.block_until_ready(self._tokens)
+            dt = time.time() - t0
+            budget = req.max_new_tokens or self.ecfg.max_new_tokens
+            ln = self.lanes[i]
+            ln.rid, ln.gen, ln.active = req.rid, self.adopted_gen, True
+            ln.tokens = [int(tok1)]
+            ln.remaining = budget - 1
+            ln.t_submit, ln.t_admit = req.t_submit, now
+            ln.t_first = time.time()
+            self.metrics.record_step(dt, 1)
+            self.metrics.record_first_token(ln.gen, ln.t_first)
+            if ln.remaining <= 0:
+                self._retire(i)
+
+    # -- decode / harvest --------------------------------------------------
+
+    def _retire(self, i: int):
+        ln = self.lanes[i]
+        self.completions.append(Completion(
+            ln.rid, np.asarray(ln.tokens, np.int32), ln.gen,
+            ln.t_submit, ln.t_admit, ln.t_first, time.time()))
+        self.metrics.completed += 1
+        self.lanes[i] = _Lane()
+
+    def step(self) -> int:
+        """One engine iteration: poll -> adopt -> admit -> one decode step
+        per live generation -> harvest. Returns # tokens committed."""
+        now = time.time()
+        if self.metrics.t_start is None:
+            self.metrics.t_start = now
+        self.poll_source()
+        self._try_adopt()
+        self._admit(now)
+        committed = 0
+        # one masked dispatch per live generation (usually one; two while
+        # a swap drains) — identical shapes, so each is a jit-cache hit
+        for g in sorted(self._gens_in_use()):
+            commit = np.array([ln.active and ln.gen == g and
+                               ln.remaining > 0 for ln in self.lanes])
+            if not commit.any():
+                continue
+            self._key, sub = jax.random.split(self._key)
+            t0 = time.time()
+            toks, self._caches = self._decode(
+                self.live[g], self._caches, self._tokens,
+                jnp.asarray(commit), sub)
+            toks_np = np.asarray(toks)     # sync point
+            dt = time.time() - t0
+            self._tokens = toks
+            n = 0
+            for i, ln in enumerate(self.lanes):
+                if commit[i]:
+                    ln.tokens.append(int(toks_np[i, 0]))
+                    ln.remaining -= 1
+                    n += 1
+            committed += n
+            self.metrics.record_step(dt, n)
+        for i, ln in enumerate(self.lanes):
+            if ln.active and ln.remaining <= 0:
+                self._retire(i)
+        self._gc_live()
+        self.metrics.t_end = time.time()
+        self.metrics.decode_cache_misses = max(
+            0, self._decode._cache_size() - 1)
+        return committed
+
+    def drain(self, max_steps: int = 10_000):
+        """Run until queue + lanes are empty (no new arrivals)."""
+        for _ in range(max_steps):
+            if not self.queue and not any(ln.active for ln in self.lanes):
+                return
+            self.step()
+        raise RuntimeError("drain did not converge")
+
+    @property
+    def active_count(self) -> int:
+        return sum(ln.active for ln in self.lanes)
+
+
+def serve_openloop(engine: ServeEngine, arrivals, *, settle_steps: int = 0):
+    """Drive the engine under a synthetic OPEN-LOOP arrival process:
+    `arrivals` is a list of (t_offset_s, Request) relative to loop start.
+    Arrivals are injected by wall clock regardless of engine progress (the
+    open-loop property — load does not slow down when the server does);
+    returns the engine's completions once all work drains."""
+    t0 = time.time()
+    pending = sorted(arrivals, key=lambda a: a[0])
+    i = 0
+    while i < len(pending) or engine.queue or engine.active_count:
+        now = time.time() - t0
+        while i < len(pending) and pending[i][0] <= now:
+            engine.submit(pending[i][1])
+            i += 1
+        if i < len(pending) and not engine.queue and \
+                not engine.active_count:
+            time.sleep(min(0.001, max(0.0, pending[i][0] - now)))
+            continue
+        engine.step()
+    for _ in range(settle_steps):
+        engine.step()
+    return engine.completions

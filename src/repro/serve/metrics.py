@@ -1,0 +1,94 @@
+"""Serving metrics (DESIGN.md §Serving): what the t15 bench reports.
+
+Collected host-side by the engine, zero device traffic:
+
+* throughput       — committed tokens / serving wall time;
+* per-token latency — wall time of each decode step, attributed to every
+  token it committed; p50/p99 over the run;
+* queue depth      — sampled at every admission decision, plus the reject
+  counter (bounded queue = the backpressure signal);
+* freshness        — time-to-fresh-model: checkpoint-lands (the source's
+  ``t_landed``) -> first token COMMITTED from a sequence admitted under
+  that generation. The serving-side half of the paper's asynchrony story:
+  how long until users see the swarm's newest average.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+def percentile(xs: List[float], p: float) -> float:
+    """Nearest-rank percentile; 0.0 on empty input."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    k = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
+    return s[k]
+
+
+@dataclass
+class ServeMetrics:
+    token_latencies_s: List[float] = field(default_factory=list)
+    queue_depths: List[int] = field(default_factory=list)
+    rejected: int = 0
+    submitted: int = 0
+    completed: int = 0
+    dropped_in_flight: int = 0          # must stay 0: the swap contract
+    decode_cache_misses: int = 0        # must stay 0 after warmup
+    swaps_adopted: int = 0
+    t_start: Optional[float] = None
+    t_end: Optional[float] = None
+    # gen -> (t_landed, t_first_token_committed)
+    _fresh_landed: Dict[int, float] = field(default_factory=dict)
+    _fresh_first: Dict[int, float] = field(default_factory=dict)
+
+    # -- recording ---------------------------------------------------------
+
+    def record_step(self, dt_s: float, n_tokens: int):
+        if n_tokens > 0:
+            self.token_latencies_s.extend([dt_s] * n_tokens)
+
+    def record_queue(self, depth: int):
+        self.queue_depths.append(depth)
+
+    def record_adoption(self, gen: int, t_landed: float):
+        self.swaps_adopted += 1
+        self._fresh_landed[gen] = t_landed
+
+    def record_first_token(self, gen: int, t: float):
+        self._fresh_first.setdefault(gen, t)
+
+    # -- summary -----------------------------------------------------------
+
+    def freshness_s(self) -> List[float]:
+        """time-to-fresh-model per adopted generation (landed -> first
+        token committed from it); generations still waiting are omitted."""
+        return [self._fresh_first[g] - t for g, t in
+                self._fresh_landed.items() if g in self._fresh_first]
+
+    def summary(self) -> dict:
+        n_tok = len(self.token_latencies_s)
+        wall = (self.t_end - self.t_start) \
+            if self.t_start is not None and self.t_end is not None else 0.0
+        fresh = self.freshness_s()
+        lat_ms = [1e3 * x for x in self.token_latencies_s]
+        return {
+            "tokens": n_tok,
+            "wall_s": round(wall, 4),
+            "tokens_per_s": round(n_tok / wall, 2) if wall > 0 else 0.0,
+            "latency_p50_ms": round(percentile(lat_ms, 50), 3),
+            "latency_p99_ms": round(percentile(lat_ms, 99), 3),
+            "queue_depth_max": max(self.queue_depths, default=0),
+            "queue_depth_mean": round(
+                sum(self.queue_depths) / len(self.queue_depths), 3)
+            if self.queue_depths else 0.0,
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "dropped_in_flight": self.dropped_in_flight,
+            "decode_cache_misses": self.decode_cache_misses,
+            "swaps_adopted": self.swaps_adopted,
+            "time_to_fresh_s": [round(x, 4) for x in fresh],
+            "time_to_fresh_max_s": round(max(fresh), 4) if fresh else None,
+        }

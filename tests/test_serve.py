@@ -1,0 +1,383 @@
+"""Serving subsystem (DESIGN.md §Serving): codec weight-loading bitwise
+vs the training-side decode, mean-model materialization, checkpoint
+following, hot-swap atomicity, admission control, and the CLI paths.
+
+The CI tier1-serve leg runs this file under REPRO_CODEC=q4; the codec
+round-trip tests fold that spec into their matrix the way
+tests/test_resume_matrix.py does.
+"""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import mean_model_tree, save_checkpoint
+from repro.configs.base import get_config, reduced
+from repro.core import bucket as B
+from repro.core.exchange import GossipTransport
+from repro.core.potential import mean_model
+from repro.models import init_cache, init_params
+from repro.quant.codecs import make_codec
+from repro.serve import (CheckpointFollower, EngineConfig, LiveSource,
+                         Request, ServeEngine, export_serving_checkpoint,
+                         load_serving_checkpoint)
+from repro.serve.engine import grow_cache
+
+_ENV_CODEC = os.environ.get("REPRO_CODEC") or "q4"
+SPECS = sorted({"q8", "q4", "topk:0.25", _ENV_CODEC})
+N_NODES = 4
+
+
+def _cfg(arch="mamba2-780m", d_model=32):
+    return reduced(get_config(arch), n_layers=2, d_model=d_model)
+
+
+def _params(cfg, seed=0):
+    return init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def _stacked(params, n=N_NODES):
+    return jax.tree.map(
+        lambda x: jnp.stack([x + 0.01 * i for i in range(n)]), params)
+
+
+def _trees_equal(a, b):
+    return all(jax.tree.leaves(jax.tree.map(
+        lambda x, y: bool(jnp.array_equal(x, y)), a, b)))
+
+
+# ---------------------------------------------------------------------------
+# Codec serving checkpoints: weight load == training-side decode, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_serving_checkpoint_bitwise_vs_training_decode(spec, tmp_path):
+    """The persisted wire decodes to EXACTLY the buffer the training-side
+    kernel path reconstructs from the same wire: WireCodec.decode is
+    decode_avg with the fused average off, not a reimplementation."""
+    cfg = _cfg()
+    params = _params(cfg)
+    path = str(tmp_path / "serving")
+    export_serving_checkpoint(path, params, spec)
+    loaded = load_serving_checkpoint(path, params)
+
+    codec = make_codec(spec)
+    flat = B.build_flat_layout(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
+        block=codec.block)
+    buf = B.pack_flat(flat, params)
+    wire = codec.encode(buf, jnp.zeros_like(buf), jax.random.PRNGKey(0))
+    want = B.unpack_flat(flat, codec.decode(wire, jnp.zeros_like(buf)))
+    assert _trees_equal(loaded, want)
+
+
+def test_serving_checkpoint_q_lattice_zero_reference_is_tight(tmp_path):
+    """Zero-reference lattice encoding satisfies the distance criterion by
+    construction, so the decoded weights sit within one scale step of the
+    originals (q8: ~max|x|*8/128 per block)."""
+    cfg = _cfg()
+    params = _params(cfg)
+    path = str(tmp_path / "s_q8")
+    export_serving_checkpoint(path, params, "q8")
+    loaded = load_serving_checkpoint(path, params)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        loaded, params)))
+    assert err < 0.25, err
+
+
+def test_serving_checkpoint_rejects_wrong_model(tmp_path):
+    cfg = _cfg()
+    path = str(tmp_path / "serving")
+    export_serving_checkpoint(path, _params(cfg), "q8")
+    other = _params(_cfg(d_model=64))
+    with pytest.raises(AssertionError, match="n_padded"):
+        load_serving_checkpoint(path, other)
+
+
+# ---------------------------------------------------------------------------
+# mean-model export helper (satellite): one shared μ code path
+# ---------------------------------------------------------------------------
+
+
+def test_mean_model_tree_bitwise_vs_per_leaf_mean():
+    """pack -> mean over the node axis -> unpack_flat is bitwise the
+    historical per-leaf mean (same fp32 reduction, same element order) —
+    the server and --eval-mean may share this path safely."""
+    cfg = _cfg()
+    stacked = _stacked(_params(cfg))
+    via_buffer = mean_model_tree(stacked)
+    per_leaf = mean_model(stacked)     # core/potential.py, fp32 leaves
+    want = jax.tree.map(lambda m, x: m.astype(x.dtype), per_leaf,
+                        jax.tree.map(lambda x: x[0], stacked))
+    assert _trees_equal(via_buffer, want)
+
+
+def test_live_source_bitwise_vs_mean_model_tree():
+    cfg = _cfg()
+    stacked = _stacked(_params(cfg))
+    src = LiveSource(GossipTransport("gather", N_NODES))
+    src.publish(stacked, t_landed=1.0)
+    upd = src.poll()
+    assert upd.t_landed == 1.0 and upd.version == 1
+    assert _trees_equal(upd.params, mean_model_tree(stacked))
+    assert src.poll() is None          # consumed
+    src.publish(stacked)
+    src.publish(stacked)               # newest wins between polls
+    assert src.poll().version == 3
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint follower
+# ---------------------------------------------------------------------------
+
+
+def test_follower_plain_and_codec_state_checkpoints(tmp_path):
+    cfg = _cfg()
+    params = _params(cfg)
+    stacked = _stacked(params)
+    mu = mean_model_tree(stacked)
+
+    save_checkpoint(str(tmp_path / "step_000002"), jax.device_get(stacked),
+                    {"arch": cfg.name, "nodes": N_NODES})
+    fol = CheckpointFollower(str(tmp_path), params, N_NODES)
+    upd = fol.poll()
+    assert upd is not None and _trees_equal(upd.params, mu)
+    assert fol.poll() is None
+
+    # codec-state checkpoint: params + comm copy, like a --quantize run
+    tree = {"params": stacked, "prev": stacked}
+    save_checkpoint(str(tmp_path / "step_000004"), jax.device_get(tree),
+                    {"arch": cfg.name, "nodes": N_NODES,
+                     "codec": {"spec": "q8", "state": ["params", "prev"]}})
+    upd = fol.poll()
+    assert upd is not None and upd.version == 2
+    assert _trees_equal(upd.params, mu)
+
+
+def test_follower_newest_wins_and_skips_half_written(tmp_path):
+    cfg = _cfg()
+    params = _params(cfg)
+    fol = CheckpointFollower(str(tmp_path), params, N_NODES)
+    assert fol.poll() is None          # empty dir
+
+    s1 = _stacked(params)
+    s2 = jax.tree.map(lambda x: x * 2.0, s1)
+    save_checkpoint(str(tmp_path / "step_000001"), jax.device_get(s1),
+                    {"nodes": N_NODES})
+    save_checkpoint(str(tmp_path / "step_000002"), jax.device_get(s2),
+                    {"nodes": N_NODES})
+    upd = fol.poll()                   # both fresh: newest only
+    assert upd.tag.endswith("step_000002")
+    assert _trees_equal(upd.params, mean_model_tree(s2))
+    assert fol.poll() is None          # step_000001 is stale, not pending
+
+    # npz without json = mid-save: invisible. json without npz: skipped.
+    (tmp_path / "step_000003.json").write_text(json.dumps({"nodes": 4}))
+    assert fol.poll() is None
+
+
+def test_follower_rejects_node_mismatch(tmp_path):
+    cfg = _cfg()
+    params = _params(cfg)
+    save_checkpoint(str(tmp_path / "step_000001"),
+                    jax.device_get(_stacked(params)), {"nodes": N_NODES})
+    fol = CheckpointFollower(str(tmp_path), params, N_NODES + 1)
+    with pytest.raises(ValueError, match="nodes"):
+        fol.poll()
+
+
+# ---------------------------------------------------------------------------
+# grow_cache (satellite): structural mismatch raises with the leaf path
+# ---------------------------------------------------------------------------
+
+
+def test_grow_cache_raises_on_rank_mismatch():
+    cfg = _cfg()
+    small = init_cache(cfg, 1, 8)
+    full = init_cache(cfg, 1, 16)
+    grown = grow_cache(full, small)    # happy path: same structure
+    assert jax.tree.structure(grown) == jax.tree.structure(full)
+
+    broken = jax.tree.map(lambda x: x[None] if x.ndim > 2 else x, small)
+    with pytest.raises(ValueError, match="rank mismatch") as ei:
+        grow_cache(full, broken)
+    # the error names the offending leaf path, not just "mismatch"
+    assert "[" in str(ei.value), str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# Hot swap: atomic, monotone, in-flight finishes bitwise on its generation
+# ---------------------------------------------------------------------------
+
+
+def _prompts(cfg, n, length, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, length).astype(np.int32)
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "olmo-1b"])
+def test_hot_swap_in_flight_bitwise(arch):
+    """Swap mid-generation: lanes admitted before the swap finish on the
+    OLD params bitwise (vs a run that never swaps); lanes admitted after
+    run on the new generation; generation tags are monotone; zero decode
+    recompiles; zero dropped requests."""
+    cfg = _cfg(arch)
+    pA, pB = _params(cfg, 0), _params(cfg, 1)
+    prompts = _prompts(cfg, 4, 8)
+    ecfg = EngineConfig(max_slots=2, prompt_len=8, max_new_tokens=6)
+
+    e1 = ServeEngine(cfg, ecfg, params=pA)       # oracle: no swap
+    e1.submit(Request(0, prompts[0]))
+    e1.submit(Request(1, prompts[1]))
+    e1.drain()
+    base = {c.rid: c.tokens.tolist() for c in e1.completions}
+
+    e2 = ServeEngine(cfg, ecfg, params=pA)
+    e2.submit(Request(0, prompts[0]))
+    e2.submit(Request(1, prompts[1]))
+    e2.step(); e2.step()                          # 0,1 mid-flight
+    assert e2.swap.publish(pB, tag="B") == 2      # monotone tag
+    e2.submit(Request(2, prompts[2]))
+    e2.submit(Request(3, prompts[3]))
+    e2.drain()
+    got = {c.rid: (c.tokens.tolist(), c.gen) for c in e2.completions}
+    assert got[0] == (base[0], 1) and got[1] == (base[1], 1)
+    assert got[2][1] == 2 and got[3][1] == 2
+    s = e2.metrics.summary()
+    assert s["dropped_in_flight"] == 0
+    assert s["decode_cache_misses"] == 0
+    assert s["completed"] == 4 and s["swaps_adopted"] == 2
+
+
+def test_swap_generations_monotone_and_newest_wins():
+    cfg = _cfg()
+    eng = ServeEngine(cfg, EngineConfig(max_slots=1, prompt_len=4),
+                      params=_params(cfg, 0))
+    assert eng.swap.generation == 1
+    eng.swap.publish(_params(cfg, 1))
+    eng.swap.publish(_params(cfg, 2))    # replaces unadopted gen 2
+    gen, _ = eng.swap.latest()
+    assert gen == 3
+    eng.step()
+    assert eng.adopted_gen == 3          # never adopted the skipped gen
+
+
+def test_engine_rejects_multimodal_arch():
+    cfg = reduced(get_config("paligemma-3b"), n_layers=2, d_model=32)
+    if cfg.frontend is None:
+        pytest.skip("arch lost its frontend under reduction")
+    with pytest.raises(ValueError, match="one-shot"):
+        ServeEngine(cfg, EngineConfig(), params=None)
+
+
+# ---------------------------------------------------------------------------
+# Admission control: bounded queue, rejects counted, nothing lost
+# ---------------------------------------------------------------------------
+
+
+def test_admission_bounds_and_backpressure():
+    cfg = _cfg()
+    ecfg = EngineConfig(max_slots=2, prompt_len=4, max_new_tokens=3,
+                        queue_depth=3)
+    eng = ServeEngine(cfg, ecfg, params=_params(cfg))
+    prompts = _prompts(cfg, 8, 4)
+    accepted = [eng.submit(Request(i, prompts[i])) for i in range(8)]
+    assert accepted == [True] * 3 + [False] * 5   # bounded at queue_depth
+    s = eng.metrics.summary()
+    assert s["rejected"] == 5 and s["submitted"] == 3
+    assert s["queue_depth_max"] <= ecfg.queue_depth
+    eng.drain()
+    s = eng.metrics.summary()
+    assert s["completed"] == 3 and s["dropped_in_flight"] == 0
+    assert len(eng.completions) == 3
+    # backpressure clears once lanes free up
+    assert eng.submit(Request(99, prompts[0]))
+    eng.drain()
+    assert eng.metrics.completed == 4
+
+
+# ---------------------------------------------------------------------------
+# CLI smokes: one-shot oracle (SSM + attention), and the full
+# train --scan-chunk -> checkpoint -> serve --follow loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "olmo-1b"])
+def test_serve_cli_oneshot(arch, capsys, monkeypatch):
+    from repro.launch.serve import main
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--arch", arch, "--reduced", "--layers", "1",
+        "--d-model", "32", "--batch", "1", "--prompt-len", "8",
+        "--gen", "4"])
+    main()
+    out = capsys.readouterr().out
+    assert "generated tokens" in out and f"arch={arch}" in out
+
+
+def test_train_ckpt_every_then_serve_follow_cli(tmp_path, capsys,
+                                                monkeypatch):
+    """End to end: a scan-chunked training run lands step-stamped
+    checkpoints in a dir; the serve CLI follows the dir, adopts the swarm
+    mean, and answers requests — with the serving contract intact."""
+    from repro.launch.serve import main as serve_main
+    from repro.launch.train import main as train_main
+    run_dir = str(tmp_path / "run")
+    monkeypatch.delenv("REPRO_AVAIL_PROFILE", raising=False)
+    monkeypatch.delenv("REPRO_SCAN_CHUNK", raising=False)
+    monkeypatch.setattr(sys, "argv", [
+        "train", "--arch", "mamba2-780m", "--reduced", "--layers", "1",
+        "--d-model", "32", "--nodes", "4", "--steps", "4", "--batch", "1",
+        "--seq", "16", "--scan-chunk", "2", "--ckpt", run_dir,
+        "--ckpt-every", "2", "--log-every", "2"])
+    train_main()
+    capsys.readouterr()
+    names = sorted(os.listdir(run_dir))
+    assert "step_000002.json" in names and "step_000004.npz" in names
+    meta = json.loads(
+        (tmp_path / "run" / "step_000004.json").read_text())["metadata"]
+    assert meta["nodes"] == 4 and meta["step"] == 4
+
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--arch", "mamba2-780m", "--reduced", "--layers", "1",
+        "--d-model", "32", "--source", "follow", "--follow", run_dir,
+        "--nodes", "4", "--prompt-len", "8", "--gen", "4",
+        "--requests", "2", "--slots", "2", "--wait-s", "10"])
+    serve_main()
+    out = capsys.readouterr().out
+    rec = json.loads([ln for ln in out.splitlines()
+                      if ln.startswith("{\"serve\"")][0])["serve"]
+    assert rec["completed"] == 2
+    assert rec["dropped_in_flight"] == 0
+    assert rec["decode_cache_misses"] == 0
+    assert rec["swaps_adopted"] >= 1
+
+
+def test_serve_cli_weights_roundtrip(tmp_path, capsys, monkeypatch):
+    """--weights feeds a codec serving checkpoint into the one-shot path;
+    generation under the decoded weights is deterministic (greedy)."""
+    from repro.launch.serve import main as serve_main
+    cfg = _cfg(d_model=32)
+    cfg2 = reduced(get_config("mamba2-780m"), n_layers=1, d_model=32)
+    params = init_params(jax.random.PRNGKey(7), cfg2)
+    path = str(tmp_path / "weights")
+    export_serving_checkpoint(path, params, _ENV_CODEC)
+    argv = ["serve", "--arch", "mamba2-780m", "--reduced", "--layers", "1",
+            "--d-model", "32", "--batch", "1", "--prompt-len", "8",
+            "--gen", "4", "--weights", path]
+    monkeypatch.setattr(sys, "argv", argv)
+    serve_main()
+    out1 = capsys.readouterr().out
+    monkeypatch.setattr(sys, "argv", argv)
+    serve_main()
+    out2 = capsys.readouterr().out
+    tok1 = [ln for ln in out1.splitlines() if "generated" in ln]
+    tok2 = [ln for ln in out2.splitlines() if "generated" in ln]
+    assert tok1 == tok2 and tok1
