@@ -36,7 +36,8 @@ class BenchSetup:
 
 def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
           h_mode="fixed", gossip_impl=None, pool_size=4, overlap=False,
-          h_max=8, rate_profile="none", codec=None):
+          h_max=8, rate_profile="none", codec=None, topology=None,
+          compress_state=False):
     """Bench trainer = the ACTUAL launch/train.py build_trainer on the
     reduced bench transformer (one construction path, not a copy), with the
     bench quant config (safety 16 keeps the decode distance criterion valid
@@ -49,7 +50,8 @@ def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
         nonblocking=nonblocking, graph_kind=setup.graph, seed=setup.seed,
         h_mode=h_mode, gossip_impl=gossip_impl, pool_size=pool_size,
         overlap=overlap, h_max=h_max, quant=ModularQuantConfig(safety=16.0),
-        rate_profile=rate_profile, codec=codec)
+        rate_profile=rate_profile, codec=codec, topology=topology,
+        compress_state=compress_state)
     ds = SyntheticLMDataset(
         DataConfig(vocab_size=cfg.vocab_size, seq_len=setup.seq,
                    seed=setup.seed), n_nodes=setup.n_nodes)
@@ -57,8 +59,10 @@ def build(setup: BenchSetup, algo: str, *, quantize=False, nonblocking=False,
 
 
 def run_steps(setup, algo, steps, **kw):
+    from repro.core.hier import parse_topology
     from repro.launch.train import sample_gossip_perm
     cfg, graph, scfg, step, state, ds = build(setup, algo, **kw)
+    topo = parse_topology(getattr(scfg, "topology", None), scfg.n_nodes)
     rng_np = np.random.default_rng(setup.seed)
     key = jax.random.PRNGKey(setup.seed + 1)
     h_max = scfg.h_loop_bound
@@ -69,7 +73,8 @@ def run_steps(setup, algo, steps, **kw):
         batch = {k: jnp.asarray(v.reshape(setup.n_nodes, h_max, setup.batch,
                                           setup.seq))
                  for k, v in nb.items()}
-        perm = jnp.asarray(sample_gossip_perm(scfg, graph, rng_np, setup.seed)
+        perm = jnp.asarray(sample_gossip_perm(scfg, graph, rng_np,
+                                              setup.seed, topo)
                            if swarm else sample_matching(graph, rng_np))
         h = jnp.asarray(sample_h_counts(scfg, rng_np))
         key, sub = jax.random.split(key)

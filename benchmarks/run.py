@@ -41,6 +41,11 @@ results/bench/. Paper mapping:
                      mid-run — tokens/s, p50/p99 token latency, queue
                      depth, time-to-fresh-model; asserts >=1 hot swap,
                      0 dropped in-flight, 0 decode recompiles
+  t16_hier         — DESIGN.md §Hierarchy: flat vs two-tier hier gossip at
+                     equal node count — trajectory quality, step time,
+                     per-tier payload bytes/seconds from the tiered cost
+                     model, q8-compressed resident comm copy (>= 2x), and
+                     the 1024-node/512-device dry-run lowering
 """
 from __future__ import annotations
 
@@ -1150,6 +1155,154 @@ def t15_serve(quick=False):
     return out
 
 
+def t16_hier(quick=False):
+    """DESIGN.md §Hierarchy: two-tier gossip at equal node count — flat
+    8-node vs hier 2x4 (same total nodes, same step budget): trajectory
+    quality, host step time, per-tier payload bytes and wall-clock from
+    the tiered cost model (predicted-vs-simulated inside a t10-style
+    envelope), the q8-compressed resident comm copy's >= 2x state
+    reduction, and the 1024-node/512-device dry-run lowering. Emits
+    results/bench/t16_hier.json (CI artifact)."""
+    import subprocess
+    import textwrap
+
+    import jax
+
+    from benchmarks.common import bench_stacked_params
+    from repro.configs import get_config, reduced
+    from repro.core import bucket as B
+    from repro.core.hier import parse_topology
+    from repro.quant.codecs import make_codec
+    from repro.quant.schemes import ModularQuantConfig
+    from repro.sched import (RateProfile, cost_params_from_model,
+                             generate_trace, predict_all_modes)
+
+    steps = 8 if quick else 24
+    setup = BenchSetup()
+    n = setup.n_nodes
+    out = {"n_nodes": n, "steps": steps, "topology": "hier:4"}
+
+    # -- flat vs hier at equal node count: trajectory + host step time
+    runs = {
+        "flat_fp32": dict(),
+        "hier_fp32": dict(topology="hier:4"),
+        "flat_q8": dict(quantize=True, codec="q8"),
+        "hier_q8_compressed": dict(quantize=True, codec="q8",
+                                   topology="hier:4", compress_state=True),
+    }
+    for name, kw in runs.items():
+        r = run_steps(setup, "swarm", steps, **kw)
+        out[name] = {"final_loss": float(np.mean(r["loss"][-4:])),
+                     "final_gamma": r["gamma"][-1],
+                     "us_per_step": r["us_per_step"],
+                     "compile_s": r["compile_s"]}
+        emit(f"t16_hier/{name}", r["us_per_step"],
+             f"final_loss={out[name]['final_loss']:.4f};"
+             f"gamma={r['gamma'][-1]:.3f}")
+    # quality envelope: sharding the swarm must not cost convergence at
+    # equal steps (the matching marginals change, the average does not)
+    assert out["hier_fp32"]["final_loss"] <= \
+        out["flat_fp32"]["final_loss"] * 1.05 + 0.02, out
+    assert out["hier_q8_compressed"]["final_loss"] <= \
+        out["flat_q8"]["final_loss"] * 1.05 + 0.02, out
+
+    # -- per-tier payload bytes + predicted-vs-simulated wall-clock
+    topo = parse_topology("hier:4", n)
+    trace = generate_trace(topo.union_graph(),
+                           RateProfile("lognormal", sigma=0.5),
+                           steps * (n // 2), H=setup.H, h_max=8,
+                           seed=setup.seed,
+                           edge_weights=topo.edge_weights())
+    tiers = topo.tier_of_pairs(trace.pairs)
+    out["inter_event_frac"] = float(tiers.mean())
+    cfg = reduced(get_config("transformer-wmt"), n_layers=setup.layers,
+                  d_model=setup.d_model, vocab=512)
+    cost_hier = cost_params_from_model(cfg, seq_len=setup.seq,
+                                       local_batch=setup.batch,
+                                       quantize=True, codec="q8",
+                                       topology="hier:4")
+    cost_flat = cost_params_from_model(cfg, seq_len=setup.seq,
+                                       local_batch=setup.batch,
+                                       quantize=True, codec="q8")
+    pred_hier = predict_all_modes(trace, cost_hier, tiers=tiers)
+    pred_flat = predict_all_modes(trace, cost_flat)
+    out["walltime_tiered"] = pred_hier
+    out["walltime_flat_priced"] = pred_flat
+    for mode in ("blocking", "nonblocking", "overlap"):
+        ratio = pred_hier[mode]["predicted_over_simulated"]
+        assert 0.2 <= ratio <= 5.0, (mode, ratio)   # t10-style envelope
+    tt = pred_hier["blocking"]["tiers"]
+    assert tt["inter"]["comm_time_s"] > tt["intra"]["comm_time_s"]
+    emit("t16_hier/tiered_cost", 0.0,
+         f"inter_frac={out['inter_event_frac']:.2f};"
+         f"intra_B={tt['intra']['bytes']};inter_B={tt['inter']['bytes']};"
+         f"sim_hier_s={pred_hier['blocking']['simulated_s']:.4g};"
+         f"sim_flat_s={pred_flat['blocking']['simulated_s']:.4g}")
+
+    # -- resident-state shrink: q8 wire prev vs the dense fp32 comm copy
+    stacked = bench_stacked_params(n_nodes=n)
+    codec = make_codec("q8", ModularQuantConfig())
+    layout = B.build_layout(stacked, block=codec.block)
+    wire = codec.encode_state(B.pack(layout, stacked),
+                              jax.random.PRNGKey(0))
+    dense_b = layout.n_padded * 4
+    wire_b = sum(int(jax.device_get(w).nbytes) for w in wire) // n
+    out["prev_bytes_per_node"] = {"dense_fp32": dense_b, "q8_wire": wire_b,
+                                  "reduction_x": dense_b / wire_b}
+    assert wire_b * 2 <= dense_b, out["prev_bytes_per_node"]
+    emit("t16_hier/state_bytes", 0.0,
+         f"dense={dense_b};wire={wire_b};x={dense_b / wire_b:.2f}")
+
+    # -- 1024-node hier:32 swarm lowers on a 512-device mesh (SDS only)
+    script = textwrap.dedent("""
+        import os, sys
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=512"
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import bucket as B
+        from repro.core.swarm import SwarmConfig, SwarmState, make_swarm_step
+        from repro.optim import make_optimizer
+        from repro.quant.codecs import make_codec
+        from repro.quant.schemes import ModularQuantConfig
+        NN, D, NDEV = 1024, 4096, 512
+        mesh = jax.make_mesh((NDEV,), ("node",))
+        scfg = SwarmConfig(n_nodes=NN, H=2, quantize=True, codec="q8",
+                           compress_state=True, topology="hier:32",
+                           track_potential=False)
+        opt = make_optimizer("sgd", lr=0.05, momentum=0.9)
+        loss = lambda p, mb: 0.5 * jnp.mean((mb[0] @ p["w"] - mb[1]) ** 2)
+        step = make_swarm_step(scfg, loss, opt.update, lambda s: 0.05)
+        codec = make_codec("q8", ModularQuantConfig())
+        psds = {"w": jax.ShapeDtypeStruct((NN, D), jnp.float32)}
+        lay = B.build_layout(psds, block=codec.block)
+        prev = codec.wire_layout().wire_sds(NN * lay.rows_per_node)
+        msds = {"m": {"w": jax.ShapeDtypeStruct((NN, D), jnp.float32)}}
+        st = SwarmState(psds, msds, prev,
+                        jax.ShapeDtypeStruct((), jnp.int32))
+        node = NamedSharding(mesh, P("node"))
+        repl = NamedSharding(mesh, P())
+        sh = SwarmState({"w": node}, {"m": {"w": node}},
+                        tuple(node for _ in prev), repl)
+        jax.jit(step, in_shardings=(sh, (node, node), repl, repl, repl)) \
+            .lower(st, (jax.ShapeDtypeStruct((NN, 2, 1, D), jnp.float32),
+                        jax.ShapeDtypeStruct((NN, 2, 1), jnp.float32)),
+                   jax.ShapeDtypeStruct((NN,), jnp.int32),
+                   jax.ShapeDtypeStruct((NN,), jnp.int32),
+                   jax.ShapeDtypeStruct((2,), jnp.uint32))
+        print("lowered 1")
+    """)
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out["dryrun_1024_nodes_512_devices"] = "lowered 1" in proc.stdout
+    assert out["dryrun_1024_nodes_512_devices"]
+    emit("t16_hier/dryrun_1024", 0.0, "lowered=ok")
+    save("t16_hier", out)
+    return out
+
+
 TABLES = {
     "t1": t1_convergence, "t2": t2_localsteps, "t3": t3_quantization,
     "t4": t4_comm_cost, "t5": t5_potential, "t6": t6_nonblocking,
@@ -1157,6 +1310,7 @@ TABLES = {
     "t9": t9_node_scaling, "t9_async": t9_async, "t10_sched": t10_sched,
     "t11_baselines": t11_baselines, "t12_codecs": t12_codecs,
     "t13_fused": t13_fused, "t14_churn": t14_churn, "t15_serve": t15_serve,
+    "t16_hier": t16_hier,
 }
 
 

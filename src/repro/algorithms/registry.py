@@ -49,6 +49,13 @@ class AlgoCaps:
                  join/leave events, sched/avail.py): the algorithm can
                  bootstrap a joiner from a donor payload and retire a
                  leaver without corrupting its exchange semantics;
+    hier       — two-tier hierarchical topologies (--topology hier:G,
+                 core/hier.py): the algorithm consumes arbitrary
+                 event-sampled matchings, so the tiered perm stream
+                 (intra-group matchings + lane-aligned inter-group
+                 exchanges) is just another perm source; fixed-pattern
+                 algorithms (global means, dense W-mixing, cyclic shifts)
+                 have no per-event partner choice to tier;
     why        — one-line rationale for the matrix row.
     """
     transports: Tuple[str, ...]
@@ -61,6 +68,7 @@ class AlgoCaps:
     pricing: str
     why: str
     churn: bool = False
+    hier: bool = False
 
 
 #: every lattice/cast family — the codecs with no cross-superstep state
@@ -79,7 +87,7 @@ CAPABILITIES = {
         "the overlap pipeline); elastic membership via the join-bootstrap "
         "step and residual retirement (gather transport, no overlap — "
         "join pairs are dynamic and an in-flight payload would predate "
-        "membership)", churn=True),
+        "membership)", churn=True, hier=True),
     "adpsgd": AlgoCaps(
         ("gather", "ppermute", "ppermute_pool"),
         ("blocking", "nonblocking"), True, _STATELESS_CODECS + ("topk",),
@@ -87,7 +95,7 @@ CAPABILITIES = {
         "= SwarmSGD with H=1: same matchings, same pairwise average "
         "(stale variant = the original asynchronous AD-PSGD), same codec "
         "family incl. the error-feedback residual; no overlap pipeline "
-        "(nothing to hide one grad step under)"),
+        "(nothing to hide one grad step under)", hier=True),
     "sgp": AlgoCaps(
         ("gather",), ("blocking",), True, _STATELESS_CODECS,
         True, False, False, "pairwise",
@@ -157,7 +165,9 @@ def make_algorithm(name: str, **kw) -> Callable:
 def validate_run_config(algo: str, *, gossip_impl: str = None,
                         quantize: bool = False, nonblocking: bool = False,
                         overlap: bool = False, rate_profile: str = "none",
-                        codec: str = None, avail: str = None) -> AlgoCaps:
+                        codec: str = None, avail: str = None,
+                        topology: str = None, compress_state: bool = False,
+                        n_nodes: int = None) -> AlgoCaps:
     """Config-time validation of a run against the capability matrix.
 
     Raises ValueError with the algorithm's matrix row when the requested
@@ -165,7 +175,10 @@ def validate_run_config(algo: str, *, gossip_impl: str = None,
     unsupported; returns the AlgoCaps row otherwise so callers can branch
     on it. `codec` is the ``--codec`` spec (None follows the quant config
     = the q8 lattice family; the env default REPRO_CODEC is resolved here
-    too, mirroring REPRO_DEFAULT_GOSSIP_IMPL)."""
+    too, mirroring REPRO_DEFAULT_GOSSIP_IMPL). `topology` is the
+    ``--topology`` spec (env default REPRO_TOPOLOGY; parsed against
+    `n_nodes` when given) and `compress_state` the wire-compressed comm
+    copy — both validated against their own restriction rows here."""
     if algo not in CAPABILITIES:
         raise ValueError(f"unknown algorithm {algo!r}; known: "
                          f"{sorted(CAPABILITIES)}")
@@ -209,6 +222,7 @@ def validate_run_config(algo: str, *, gossip_impl: str = None,
             reject(f"--avail {avail} with the overlap pipeline (an "
                    "in-flight payload packed before a join predates the "
                    "joiner's membership)")
+    c = None
     if quantize:
         # resolve the spec to its family through the same parser the
         # transport uses — a bogus spec (q17, topk:2) raises HERE with
@@ -230,4 +244,47 @@ def validate_run_config(algo: str, *, gossip_impl: str = None,
                 reject(f"--codec {c.name} with the overlap pipeline (the "
                        "residual updates against a matched mask the "
                        "pipelined encode learns one interaction late)")
+    # hierarchical topology (core/hier.py; DESIGN.md §Hierarchy)
+    if topology is None:
+        topology = os.environ.get("REPRO_TOPOLOGY") or None
+    from repro.core.hier import parse_topology
+    topo = parse_topology(topology, n_nodes) if n_nodes is not None else None
+    if topology is not None and str(topology).strip() not in ("", "flat",
+                                                              "none"):
+        if n_nodes is None:
+            # grammar-only check when the caller has no node count
+            if not str(topology).startswith("hier:"):
+                raise ValueError(f"unknown topology spec {topology!r}")
+        if not caps.hier:
+            reject(f"--topology {topology} (two-tier hierarchical gossip)")
+        if base == "ppermute":
+            reject(f"--topology {topology} with --gossip-impl {gossip_impl} "
+                   "(ONE static matching cannot carry both tiers — use "
+                   "gather or ppermute_pool)")
+        if avail is not None:
+            reject(f"--topology {topology} with --avail (hier traces do "
+                   "not carry join/leave events yet)")
+    # wire-compressed comm copy (core/swarm.py compress_state)
+    if compress_state:
+        if algo != "swarm":
+            reject("--compress-state (the wire-compressed comm copy lives "
+                   "in SwarmState)")
+        if not quantize:
+            reject("--compress-state without --quantize (there is no comm "
+                   "copy to compress on the exact path)")
+        if c is not None and c.family not in ("q4", "q8", "q16"):
+            reject(f"--compress-state with --codec {c.name} (lattice "
+                   "codecs only: the zero-reference encode_state needs "
+                   "the modular scale window; see quant/codecs.py)")
+        if nonblocking or overlap:
+            reject("--compress-state outside the blocking path (Algorithm "
+                   "2 re-adds the decoded stale copy into the state, "
+                   "which would compound quantization error)")
+        if gossip_impl.endswith("_legacy"):
+            reject(f"--compress-state with --gossip-impl {gossip_impl} "
+                   "(the per-leaf oracles keep a tree-shaped comm copy)")
+        if avail is not None:
+            reject("--compress-state with --avail (the join bootstrap "
+                   "re-bases the per-leaf comm copy)")
+    del topo
     return caps

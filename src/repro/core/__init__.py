@@ -12,6 +12,7 @@ from repro.core.graph import (  # noqa: F401
     Graph, irregular_graph, make_graph, sample_matching,
     sample_weighted_matching,
 )
+from repro.core.hier import HierTopology, parse_topology  # noqa: F401
 from repro.core.potential import gamma_potential, mean_model  # noqa: F401
 from repro.core.scan import make_superstep_scan  # noqa: F401
 from repro.core.swarm import (  # noqa: F401

@@ -354,7 +354,8 @@ class GossipTransport:
     # -- exchange primitives ----------------------------------------------
 
     def mix_pair(self, tree, perm, matched, *, quantize: bool = False,
-                 prev=None, rng=None, mask=None, residual=None):
+                 prev=None, prev_buf=None, rng=None, mask=None,
+                 residual=None):
         """Average each node's `tree` entry with its partner's — over the
         flat-buffer transport unless a *_legacy oracle is selected. `perm`
         is the raw engine input (it carries the scalar pool index in
@@ -363,6 +364,13 @@ class GossipTransport:
         directed exchanges). `mask` is additionally threaded to the flat
         shard_map transports, whose wire pairs are compiled in, so a
         dynamic gate can land a PARTIAL matching.
+
+        The quantized encode's distance proxy comes from `prev` (a
+        tree-shaped comm copy, packed here) or — under compress_state
+        (core/swarm.py; DESIGN.md §Hierarchy) — from `prev_buf`, the
+        already-packed [n_nodes, n_padded] fp32 buffer the superstep
+        lazily decoded from the wire-compressed copy. Flat transports
+        only: the per-leaf legacy oracles have no packed form.
 
         When the transport's codec carries an error-feedback residual
         (`self.codec.carries_residual`) the call takes and RETURNS the
@@ -376,6 +384,9 @@ class GossipTransport:
                 "legacy oracles bake a full static matching")
         ef = quantize and self.codec.carries_residual
         quant = self.codec if quantize else None
+        if prev_buf is not None:
+            assert not self.routes_per_leaf(quantize), \
+                "prev_buf (compress_state) needs the flat packed transport"
         if self.routes_per_leaf(quantize):
             # per-leaf oracles speak the lattice scheme only (checked in
             # __init__), and never carry a residual
@@ -395,7 +406,8 @@ class GossipTransport:
             return gossip_exact(tree, perm, matched)
         layout = B.build_layout(tree, block=self.codec.block)
         buf = B.pack(layout, tree)
-        pbuf = B.pack(layout, prev) if quantize else None
+        pbuf = prev_buf if prev_buf is not None else \
+            (B.pack(layout, prev) if quantize else None)
         new_residual = None
         if self.base_impl == "gather":
             if quantize:
@@ -519,6 +531,15 @@ def transport_from_config(scfg, graph, seed: int = 0, param_probe=None
             kw["static_pairs"] = B.pairs_from_perm(
                 static_ppermute_matching(graph, seed))
         else:
-            kw["matching_pool"] = make_matching_pool(
-                graph, K=getattr(scfg, "pool_size", 8), seed=seed)
+            from repro.core.hier import parse_topology
+            topo = parse_topology(getattr(scfg, "topology", None),
+                                  scfg.n_nodes)
+            K = getattr(scfg, "pool_size", 8)
+            if topo is not None:
+                # hier pool: K intra matchings (rng-identical to the flat
+                # pool for a single group) + the inter-group perm suffix
+                kw["matching_pool"], _ = topo.matching_pool(K, seed)
+            else:
+                kw["matching_pool"] = make_matching_pool(graph, K=K,
+                                                         seed=seed)
     return GossipTransport(impl, scfg.n_nodes, **kw)

@@ -25,6 +25,13 @@ inflight update in place across the boundary instead of double-buffering
 the packed model. Callers MUST rebind both from the return value; the
 donated inputs are dead after the call (tests/test_scan_driver.py asserts
 the aliasing actually happens via repro.compat.donation_alias_count).
+
+Composition with compress_state (DESIGN.md §Hierarchy): when the comm
+copy lives codec-encoded, `state.prev` is a tuple of wire-word arrays —
+still ordinary carry leaves, so they donate through the scan boundary
+like any other buffer and the chunked run stays bitwise the per-step
+driver's (tests/test_hier.py). Hierarchical perm streams are plain [K, n]
+xs rows; the scan body never learns which tier a row came from.
 """
 from __future__ import annotations
 

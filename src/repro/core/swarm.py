@@ -91,6 +91,21 @@ class SwarmConfig:
     gossip_impl: str = field(default_factory=lambda: os.environ.get(
         "REPRO_DEFAULT_GOSSIP_IMPL", "gather"))
     pool_size: int = 8
+    # two-tier hierarchical gossip (core/hier.py; DESIGN.md §Hierarchy):
+    # None = flat single-tier node axis; "hier:G[:inter_frac]" groups nodes
+    # by G — intra-group matchings on the fast tier, `inter_frac` of events
+    # lane-aligned cross-group exchanges on the slow tier. The engine sees
+    # ordinary perms; the topology shapes how the driver SAMPLES them and
+    # how the scheduler prices/bins them. Env default: REPRO_TOPOLOGY.
+    topology: Optional[str] = field(default_factory=lambda: os.environ.get(
+        "REPRO_TOPOLOGY") or None)
+    # store the `prev` comm copy codec-compressed (wire tuple encoded vs a
+    # zero reference, decoded lazily inside the superstep) instead of a
+    # full fp32 tree copy — the ~4x (q8) state shrink that lets a
+    # 1024-node swarm lower on a 512-device mesh (launch/dryrun.py).
+    # Requires quantize + a lattice codec + blocking + a flat transport
+    # (validated in algorithms/registry.py).
+    compress_state: bool = False
 
     @property
     def h_loop_bound(self) -> int:
@@ -149,9 +164,23 @@ def swarm_init(rng, cfg: SwarmConfig, param_init: Callable, opt_init: Callable,
         # pipelined mode: the comm copy lives packed inside `inflight`
         state = SwarmState(params, opt, None, jnp.zeros((), jnp.int32))
         return pipeline_prologue(cfg, state, jax.random.fold_in(rng, 0x1F))
-    prev = jax.tree.map(jnp.copy, params) if (cfg.quantize or cfg.nonblocking) \
-        else None
+    prev = None
     residual = None
+    if cfg.compress_state:
+        # compressed comm copy: the wire tuple of the packed params encoded
+        # vs a zero reference (WireCodec.encode_state) — decoded lazily at
+        # the top of each superstep, refreshed row-masked on interaction
+        assert cfg.quantize and not cfg.nonblocking, \
+            "compress_state stores the quantized blocking comm copy " \
+            "(validated in algorithms/registry.py)"
+        codec = make_codec(cfg.codec, cfg.quant)
+        assert not codec.carries_residual, \
+            "compress_state is lattice-only (no error-feedback slot)"
+        layout = B.build_layout(params, block=codec.block)
+        prev = codec.encode_state(B.pack(layout, params),
+                                  jax.random.fold_in(rng, 0x5E))
+    elif cfg.quantize or cfg.nonblocking:
+        prev = jax.tree.map(jnp.copy, params)
     if cfg.quantize:
         codec = make_codec(cfg.codec, cfg.quant)
         if codec.carries_residual:
@@ -277,6 +306,16 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
         cfg.gossip_impl
     tr.check_specs(cfg.quantize)
     ef = cfg.quantize and tr.codec.carries_residual   # error-feedback codec
+    cs = cfg.compress_state                    # wire-compressed comm copy
+    if cs:
+        assert cfg.quantize and not cfg.nonblocking and not cfg.overlap, \
+            "compress_state: quantized blocking path only " \
+            "(validated in algorithms/registry.py)"
+        assert not tr.codec.carries_residual, \
+            "compress_state is lattice-only (no error-feedback slot)"
+        assert not tr.legacy, \
+            "compress_state needs the flat packed transport (the per-leaf " \
+            "legacy oracles keep a tree-shaped comm copy)"
     if cfg.overlap:
         assert cfg.nonblocking, \
             "overlap=True pipelines Algorithm 2: set nonblocking=True"
@@ -374,6 +413,15 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
 
         new_residual = state.residual
 
+        # compress_state: `state.prev` is the WIRE tuple of the comm copy
+        # (encode_state in swarm_init) — decode it lazily to the packed
+        # buffer the quantized exchange consumes as its distance proxy
+        prev_buf = None
+        if cs:
+            layout = B.build_layout(S, block=tr.codec.block)
+            prev_buf = tr.codec.decode_state(
+                state.prev, (cfg.n_nodes, layout.n_padded))
+
         def exchange(tree, use_quant: bool):
             """Average each node's `tree` entry with its partner's through
             the transport (flat-buffer unless a *_legacy oracle routes
@@ -383,7 +431,9 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
             one quantized exchange runs per superstep)."""
             nonlocal new_residual
             out = tr.mix_pair(tree, perm, matched, quantize=use_quant,
-                              prev=state.prev if use_quant else None,
+                              prev=(state.prev if use_quant and not cs
+                                    else None),
+                              prev_buf=prev_buf if use_quant else None,
                               rng=rng, mask=mask,
                               residual=state.residual if use_quant else None)
             if use_quant and ef:
@@ -411,7 +461,18 @@ def make_swarm_step(cfg: SwarmConfig, loss_fn: Callable, opt_update: Callable,
 
         params = jax.tree.map(lambda x: shard(x, "param"), params)
         new_prev = None
-        if state.prev is not None:
+        if cs:
+            # compressed refresh: re-encode the post-interaction model vs
+            # zeros ONCE, then select wire ROWS by the matched mask —
+            # unmatched nodes keep their old wire bytes untouched, so the
+            # stored copy never re-quantizes (no error compounding)
+            layout = B.build_layout(params, block=tr.codec.block)
+            enc = tr.codec.encode_state(B.pack(layout, params),
+                                        jax.random.fold_in(rng, 0x5E))
+            m_rows = jnp.repeat(matched, layout.rows_per_node)
+            new_prev = tuple(jnp.where(m_rows[:, None], e, o)
+                             for e, o in zip(enc, state.prev))
+        elif state.prev is not None:
             # comm copy refreshes on interaction. Blocking: to the
             # post-interaction (averaged) model — the NEXT encode input is
             # H local steps away from it, so the quant distance proxy
@@ -460,6 +521,9 @@ def make_join_step(cfg: SwarmConfig):
     assert not cfg.overlap, \
         "join bootstrap needs the non-pipelined driver (overlap=False): " \
         "an in-flight payload packed before the join would go stale"
+    assert not cfg.compress_state, \
+        "join bootstrap re-bases the per-leaf comm copy; the wire-tuple " \
+        "prev of compress_state is rejected at config time (registry)"
     codec = make_codec(cfg.codec, cfg.quant)
 
     def join_step(state: SwarmState, perm, join_mask):

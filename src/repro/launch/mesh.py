@@ -31,4 +31,7 @@ def make_host_mesh(n_nodes: int = 1):
 PEAK_FLOPS_BF16 = 197e12     # FLOP/s
 HBM_BW = 819e9               # B/s
 ICI_LINK_BW = 50e9           # B/s per link (conservative single-link figure)
+DCN_LINK_BW = 6.25e9         # B/s cross-pod data-center link (~50 Gb/s per
+# host NIC) — the slow tier of hierarchical gossip pricing (sched/cost.py;
+# DESIGN.md §Hierarchy): intra-group payloads ride ICI, inter-group DCN
 HBM_PER_CHIP = 16 * 1024**3  # 16 GiB

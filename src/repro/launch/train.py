@@ -40,7 +40,8 @@ def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
                   gossip_impl: str = None, pool_size: int = 8,
                   overlap: bool = False, h_max: int = 8,
                   quant: ModularQuantConfig = None,
-                  rate_profile: str = "none", codec: str = None):
+                  rate_profile: str = "none", codec: str = None,
+                  topology: str = None, compress_state: bool = False):
     """One construction path for EVERY algorithm (DESIGN.md §Baselines):
     validate the requested combination against the capability matrix,
     build ONE GossipTransport (whose wire codec comes from `codec`, the
@@ -50,7 +51,9 @@ def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
     caps = validate_run_config(algo, gossip_impl=gossip_impl,
                                quantize=quantize, nonblocking=nonblocking,
                                overlap=overlap, rate_profile=rate_profile,
-                               codec=codec)
+                               codec=codec, topology=topology,
+                               compress_state=compress_state,
+                               n_nodes=n_nodes)
     graph = make_graph(graph_kind, n_nodes)
     opt = make_optimizer("sgd", lr=lr, momentum=momentum,
                          state_dtype=cfg.opt_state_dtype)
@@ -67,7 +70,10 @@ def build_trainer(cfg, algo: str, n_nodes: int, H: int, lr: float,
     skw = dict(n_nodes=n_nodes, H=algo_H, h_mode=algo_h_mode, h_max=h_max,
                quantize=quantize,
                nonblocking=nonblocking or overlap, overlap=overlap,
-               quant=quant or ModularQuantConfig(), pool_size=pool_size)
+               quant=quant or ModularQuantConfig(), pool_size=pool_size,
+               compress_state=compress_state)
+    if topology is not None:
+        skw["topology"] = topology
     if codec is not None:
         skw["codec"] = codec
     if gossip_impl is not None:
@@ -126,8 +132,14 @@ def build_schedule(args, graph, scfg, caps=None):
     capability row) drops the trace's local-step accrual to H=1 for the
     algorithms that interact every step (adpsgd/sgp/dpsgd/allreduce).
     With ``--avail`` (elastic membership, DESIGN.md §Churn) the clocks
-    carry an AvailabilityModel and the schedule gains join/leave bins."""
+    carry an AvailabilityModel and the schedule gains join/leave bins.
+    Under a hierarchical topology (DESIGN.md §Hierarchy) the clocks run on
+    the two-tier union graph with edge weights tuned so inter-group events
+    land at ``inter_frac``; the per-event tier labels ride trace.meta and
+    split the bins tier-pure so each bin prices on ONE link class."""
     from repro import sched as S
+    from repro.core.hier import parse_topology
+    topo = parse_topology(getattr(scfg, "topology", None), scfg.n_nodes)
     tseed = args.trace_seed if args.trace_seed is not None else args.seed
     H_eff = args.H if caps is None or caps.local_H else 1
     if scfg.gossip_impl not in ("gather", "gather_legacy"):
@@ -146,6 +158,12 @@ def build_schedule(args, graph, scfg, caps=None):
                 "--rate-profile uniform_async or lognormal")
         avail = S.parse_avail(args.avail, args.nodes, tseed)
     if args.rate_profile == "uniform":
+        if topo is not None and topo.n_groups > 1:
+            raise ValueError(
+                "--topology hier needs an asynchronous --rate-profile "
+                "(uniform_async or lognormal): the synchronous uniform "
+                "trace has no per-event tier coin, so inter-group "
+                "exchanges would never fire")
         if graph.name != "complete" or graph.n % 2:
             # bit-exactness with the unscheduled driver needs every
             # sampled matching to be PERFECT (unmatched nodes still run
@@ -168,13 +186,24 @@ def build_schedule(args, graph, scfg, caps=None):
             else args.rate_profile
         profile = S.RateProfile(kind, sigma=args.rate_sigma)
         straggler = parse_straggler(args.straggler)
-        clocks = S.PoissonClocks(graph, profile.make_rates(args.nodes, tseed),
-                                 tseed, straggler, avail=avail)
+        event_graph, ew = graph, None
+        if topo is not None and topo.n_groups > 1:
+            # two-tier clocks: union graph carries both edge classes,
+            # weighted so P(inter event) ≈ inter_frac (core/hier.py)
+            event_graph, ew = topo.union_graph(), topo.edge_weights()
+        clocks = S.PoissonClocks(event_graph,
+                                 profile.make_rates(args.nodes, tseed),
+                                 tseed, straggler, edge_weights=ew,
+                                 avail=avail)
         n_events = args.steps * max(1, args.nodes // 2)
-        trace = S.generate_trace(graph, profile, n_events, H=H_eff,
+        trace = S.generate_trace(event_graph, profile, n_events, H=H_eff,
                                  h_max=scfg.h_max if H_eff > 1 else 1,
                                  h_mode="rate", seed=tseed, clocks=clocks)
-    return S.bin_trace(trace), trace, clocks
+    tiers = None
+    if topo is not None and topo.n_groups > 1:
+        tiers = topo.tier_of_pairs(trace.pairs)
+        trace.meta["tiers"] = tiers
+    return S.bin_trace(trace, tiers=tiers), trace, clocks
 
 
 def sched_checkpoint_meta(args, trace, clocks) -> dict:
@@ -239,13 +268,28 @@ def restore_sched_clocks(meta: dict, graph):
 
 
 def sample_gossip_perm(scfg: SwarmConfig, graph, rng_np,
-                       seed: int = 0) -> "np.ndarray":
+                       seed: int = 0, topo=None) -> "np.ndarray":
     """Per-superstep `perm` input: a fresh matching for the gather modes,
     the scalar pool index (broadcast [n_nodes]) that ppermute_pool's
     lax.switch consumes, or — for the plain ppermute modes, whose pairs are
     compiled in — the one static matching baked at build time (`seed` must
-    match the build_trainer seed)."""
+    match the build_trainer seed). A `topo` (core/hier.py HierTopology)
+    re-routes the draw through the tier coin: `sample_event` /
+    `sample_pool_index` flip inter w.p. inter_frac, and DEGENERATE to this
+    function's flat draws bit-for-bit when n_groups == 1 (the G = n
+    contract, tests/test_hier.py)."""
     impl = scfg.gossip_impl
+    if topo is not None:
+        if impl.startswith("ppermute_pool"):
+            idx, _tier = topo.sample_pool_index(rng_np, scfg.pool_size)
+            return np.full((scfg.n_nodes,), idx, np.int32)
+        if impl.startswith("ppermute"):
+            raise ValueError(
+                "hier topology cannot ride the single static ppermute "
+                "matching (one compiled matching carries one tier) — use "
+                "gather or ppermute_pool")
+        perm, _tier = topo.sample_event(rng_np)
+        return perm
     if impl.startswith("ppermute_pool"):
         idx = int(rng_np.integers(scfg.pool_size))
         return np.full((scfg.n_nodes,), idx, np.int32)
@@ -255,7 +299,7 @@ def sample_gossip_perm(scfg: SwarmConfig, graph, rng_np,
 
 
 def presample_inputs(scfg: SwarmConfig, graph, rng_np, seed: int,
-                     n_steps: int, uses_matching: bool = True):
+                     n_steps: int, uses_matching: bool = True, topo=None):
     """Host-side presample of the whole run's (perm, h) streams as stacked
     [n_steps, n_nodes] int32 arrays. Consumes `rng_np` in EXACTLY the
     per-superstep order the old loop drew (perm, then h, step by step), so
@@ -267,7 +311,7 @@ def presample_inputs(scfg: SwarmConfig, graph, rng_np, seed: int,
     perms = np.empty((n_steps, scfg.n_nodes), np.int32)
     hs = np.empty((n_steps, scfg.n_nodes), np.int32)
     for t in range(n_steps):
-        perms[t] = (sample_gossip_perm(scfg, graph, rng_np, seed)
+        perms[t] = (sample_gossip_perm(scfg, graph, rng_np, seed, topo)
                     if uses_matching else sample_matching(graph, rng_np))
         hs[t] = sample_h_counts(scfg, rng_np)
     return perms, hs
@@ -312,6 +356,25 @@ def main():
     ap.add_argument("--pool-size", "--pool_size", type=int, default=8,
                     help="K precompiled matchings for the ppermute_pool "
                          "lax.switch transport")
+    ap.add_argument("--topology", default=os.environ.get("REPRO_TOPOLOGY")
+                    or None,
+                    help="node-axis topology (DESIGN.md §Hierarchy): "
+                         "'hier:G[:inter_frac]' shards the swarm into "
+                         "groups of G nodes — gossip is intra-group except "
+                         "an inter_frac (default 0.25) slice of events "
+                         "that exchange one lane-aligned cross-group "
+                         "matching, priced on the slow DCN tier. 'flat' / "
+                         "unset = the complete single-tier swarm. "
+                         "'hier:G' with G = nodes is bitwise the flat "
+                         "path. Env default: REPRO_TOPOLOGY")
+    ap.add_argument("--compress-state", "--compress_state",
+                    action="store_true",
+                    help="keep the quantized comm copy codec-encoded at "
+                         "rest (core/swarm.py compress_state): the prev "
+                         "buffer lives as lattice wire words, decoded "
+                         "lazily inside the exchange — ~4x less resident "
+                         "state per node for q8. Requires --quantize with "
+                         "a lattice codec; blocking mode only")
     ap.add_argument("--graph", default="complete")
     # validate the env-provided default HERE: argparse only checks values
     # given on the command line, so a typo'd REPRO_RATE_PROFILE would
@@ -408,7 +471,9 @@ def main():
     caps = validate_run_config(
         args.algo, gossip_impl=args.gossip_impl, quantize=args.quantize,
         nonblocking=args.nonblocking, overlap=args.overlap,
-        rate_profile=args.rate_profile, codec=args.codec, avail=args.avail)
+        rate_profile=args.rate_profile, codec=args.codec, avail=args.avail,
+        topology=args.topology, compress_state=args.compress_state,
+        n_nodes=args.nodes)
     h_mode = args.h_mode
     if sched_on and args.rate_profile != "uniform" and caps.local_H:
         h_mode = "trace"           # per-node counts come from the bridge
@@ -417,7 +482,10 @@ def main():
         args.nonblocking, args.graph, args.seed, h_mode,
         gossip_impl=args.gossip_impl, pool_size=args.pool_size,
         overlap=args.overlap, h_max=args.h_max,
-        rate_profile=args.rate_profile, codec=args.codec)
+        rate_profile=args.rate_profile, codec=args.codec,
+        topology=args.topology, compress_state=args.compress_state)
+    from repro.core.hier import parse_topology
+    topo = parse_topology(args.topology, args.nodes)
     rng_np = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed + 1)
     h_max = scfg.h_loop_bound
@@ -486,7 +554,8 @@ def main():
                 schedule, 0, n_steps, scfg.gossip_impl)
     else:
         perms_np, hs_np = presample_inputs(scfg, graph, rng_np, args.seed,
-                                           n_steps, caps.uses_matching)
+                                           n_steps, caps.uses_matching,
+                                           topo=topo)
         mask_np = None
     # pre-split into per-step / per-chunk device arrays HERE, not in the
     # loop: indexing a stacked device array with a fresh python int is a
@@ -626,14 +695,23 @@ def main():
         cp = cost_params_from_model(cfg, seq_len=args.seq,
                                     local_batch=args.batch,
                                     quantize=args.quantize,
-                                    codec=args.codec)
+                                    codec=args.codec,
+                                    topology=args.topology)
         if caps.pricing == "pairwise":
-            predicted = predict_all_modes(trace, cp)
+            predicted = predict_all_modes(trace, cp,
+                                          tiers=trace.meta.get("tiers"))
         else:
             predicted = predict_bsp_walltime(
                 trace, schedule, cp,
                 payload_factor=bsp_payload_factor(args.algo, graph))
         print(json.dumps({"sched_cost": predicted}))
+        if trace.meta.get("tiers") is not None \
+                and isinstance(predicted.get("blocking"), dict):
+            # per-tier link utilization at a glance (the full per-mode
+            # breakdown is inside sched_cost["<mode>"]["tiers"])
+            print(json.dumps({"link_util": {
+                "topology": args.topology,
+                **predicted["blocking"]["tiers"]}}))
     if args.ckpt:
         if args.ckpt_every:
             path = os.path.join(args.ckpt, f"step_{n_steps:06d}")

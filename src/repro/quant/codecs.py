@@ -143,6 +143,26 @@ class WireCodec:
         the value the training side would decode from the same wire."""
         raise NotImplementedError
 
+    # -- resident-state compression (compress_state; DESIGN.md §Hierarchy) --
+
+    def encode_state(self, buf, rng, *, tile_rows: int = 8, backend=None):
+        """Codec-compress a RESIDENT state buffer ([*, n_padded] fp32)
+        against an all-zeros reference — how `core/swarm.py` stores the
+        `prev` comm copy wire-compressed under ``compress_state``. The
+        zero reference means decoding needs no stored context
+        (`decode_state` below), at the cost of the scale tracking |x|
+        instead of |x - prev|; the lattice safety margin absorbs the
+        proxy error (the serve/source.py codec-checkpoint idiom)."""
+        return self.encode(buf, jnp.zeros_like(buf), rng,
+                           tile_rows=tile_rows, backend=backend)
+
+    def decode_state(self, wire, shape, *, tile_rows: int = 8,
+                     backend=None) -> jax.Array:
+        """Inverse of `encode_state`: wire tuple -> [*, n_padded] fp32
+        buffer (`shape` restores the node-stacked leading dim)."""
+        return self.decode(wire, jnp.zeros(shape, jnp.float32),
+                           tile_rows=tile_rows, backend=backend)
+
 
 # ---------------------------------------------------------------------------
 # Lattice family: q2..q16 (the paper's modular scheme, packed below 5 bits)

@@ -64,6 +64,12 @@ class BinnedSchedule:
     kinds: Optional[np.ndarray] = None      # [S] int8 (churn only)
     alive: Optional[np.ndarray] = None      # [S, n] bool (churn only)
     retire: Optional[np.ndarray] = None     # [S+1, n] bool (churn only)
+    # hierarchical traces only (core/hier.py; DESIGN.md §Hierarchy): the
+    # link tier each bin schedules against (0 intra / 1 inter). Bins are
+    # tier-PURE — `bin_trace(tiers=...)` closes the open bin on a tier
+    # change — so a whole superstep prices against one link class and the
+    # inter bins are exactly the ones that ride the slow tier.
+    tiers: Optional[np.ndarray] = None      # [S] int8 (hier only)
 
     @property
     def n_supersteps(self) -> int:
@@ -94,6 +100,9 @@ class BinnedSchedule:
                     f"bin {s}: participants must be members"
         if self.retire is not None:
             assert self.retire.shape == (S + 1, n)
+        if self.tiers is not None:
+            assert self.tiers.shape == (S,), \
+                f"tiers shape {self.tiers.shape} != ({S},)"
         return self
 
     def density(self) -> float:
@@ -119,16 +128,25 @@ def pool_edges(pool: Sequence[np.ndarray]) -> np.ndarray:
 
 
 def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
-              static_pairs: Optional[Sequence] = None) -> BinnedSchedule:
+              static_pairs: Optional[Sequence] = None,
+              tiers: Optional[np.ndarray] = None) -> BinnedSchedule:
     """Greedy time-ordered binning of a trace into engine supersteps.
 
     An event opens a new bin when its endpoints collide with the current
     bin, or (pool mode) when no single pool matching contains the bin plus
-    the event. Preserves event order within each node, total interaction
-    count, and per-node step counts exactly (hypothesis property in
-    tests/test_sched.py).
+    the event, or (hier mode: `tiers` = per-EVENT link tier from
+    `HierTopology.tier_of_pairs`) when the event's tier differs from the
+    open bin's — bins stay tier-pure, so inter-group supersteps schedule
+    against the slow link as one unit. Preserves event order within each
+    node, total interaction count, and per-node step counts exactly
+    (hypothesis property in tests/test_sched.py).
     """
     n, E = trace.n_nodes, trace.n_events
+    if tiers is not None:
+        tiers = np.asarray(tiers)
+        if tiers.shape != (E,):
+            raise ValueError(f"tiers shape {tiers.shape} != ({E},): one "
+                             "tier per trace event")
     if pool is not None and static_pairs is not None:
         raise ValueError("pool and static_pairs are mutually exclusive")
     churn = trace.kinds is not None
@@ -149,6 +167,7 @@ def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
     masks: List[np.ndarray] = []
     bin_kinds: List[int] = []
     bin_alive: List[np.ndarray] = []
+    bin_tiers: List[int] = []
     retires: List = []  # (effect bin idx at record time, node)
     pool_ids: List[int] = []
     event_bin = np.empty(E, np.int32)
@@ -169,6 +188,7 @@ def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
     cur_alive = member.copy()
     cur_cand = list(range(len(pool_sets))) if pool_sets is not None else None
     cur_count = 0
+    cur_tier = 0
 
     def close():
         nonlocal cur_perm, cur_h, cur_used, cur_cand, cur_count, cur_alive
@@ -179,6 +199,7 @@ def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
         masks.append(cur_perm != np.arange(n))
         bin_kinds.append(EVENT_MIX)
         bin_alive.append(cur_alive)
+        bin_tiers.append(cur_tier)
         if pool_sets is not None:
             pool_ids.append(cur_cand[0])
         cur_perm = np.arange(n, dtype=np.int32)
@@ -214,6 +235,7 @@ def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
             masks.append(m)
             bin_kinds.append(EVENT_JOIN)
             bin_alive.append(member.copy())
+            bin_tiers.append(0 if tiers is None else int(tiers[e]))
             event_bin[e] = len(perms) - 1
             cur_alive = member.copy()
             continue
@@ -230,14 +252,17 @@ def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
             new_cand = [k for k in cur_cand if key in pool_sets[k]]
         else:
             new_cand = None
+        tier_e = 0 if tiers is None else int(tiers[e])
         if cur_used[i] or cur_used[j] or (new_cand is not None
-                                          and not new_cand):
+                                          and not new_cand) \
+                or (cur_count > 0 and tier_e != cur_tier):
             close()
             if pool_sets is not None:
                 new_cand = [k for k in range(len(pool_sets))
                             if key in pool_sets[k]]
         if cur_count == 0:
             cur_alive = member.copy()  # membership as of bin open
+            cur_tier = tier_e
         cur_perm[i], cur_perm[j] = j, i
         cur_h[i], cur_h[j] = trace.h[e, 0], trace.h[e, 1]
         cur_used[i] = cur_used[j] = True
@@ -264,6 +289,7 @@ def bin_trace(trace: Trace, *, pool: Optional[Sequence[np.ndarray]] = None,
         alive=np.stack(bin_alive) if churn and bin_alive
         else (np.zeros((0, n), bool) if churn else None),
         retire=retire,
+        tiers=np.asarray(bin_tiers, np.int8) if tiers is not None else None,
     )
     return sched.validate()
 

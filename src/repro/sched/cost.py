@@ -60,6 +60,13 @@ class CostParams:
     hbm_bw: float = _DEFAULTS["hbm_bw"]
     link_bw: float = _DEFAULTS["link_bw"]
     link_latency_s: float = 5e-6   # per-message fixed cost
+    # bandwidth tiers (DESIGN.md §Hierarchy): `link_bw` prices tier 0
+    # (intra-group, the fast interconnect); inter-group events (tier 1 in a
+    # hier trace) price against the slower `inter_link_bw` when set — like
+    # the paper's supercomputer, where cross-node links are ~an order of
+    # magnitude behind intra-node ones. None = single-tier (flat) pricing.
+    inter_link_bw: Optional[float] = None
+    inter_link_latency_s: Optional[float] = None
     meta: Dict = field(default_factory=dict)
 
     def step_time_s(self, speed: float = 1.0) -> float:
@@ -69,14 +76,25 @@ class CostParams:
                    self.hbm_bytes_per_step / self.hbm_bw)
         return base / max(speed, 1e-12)
 
-    def comm_time_s(self) -> float:
+    def comm_time_s(self, tier: int = 0) -> float:
+        """Seconds for one payload over the tier's link (0 = intra/fast,
+        1 = inter/slow; tier 1 falls back to tier 0 when no inter tier is
+        configured — flat pricing)."""
+        if tier and self.inter_link_bw is not None:
+            lat = self.link_latency_s if self.inter_link_latency_s is None \
+                else self.inter_link_latency_s
+            return lat + self.payload_bytes / self.inter_link_bw
         return self.link_latency_s + self.payload_bytes / self.link_bw
 
 
 def cost_params_from_model(cfg, *, seq_len: int, local_batch: int,
                            quantize: bool = False, quant=None,
                            codec=None, link_latency_s: float = 5e-6,
-                           link_bw: Optional[float] = None) -> CostParams:
+                           link_bw: Optional[float] = None,
+                           topology=None,
+                           inter_link_bw: Optional[float] = None,
+                           inter_link_latency_s: Optional[float] = None
+                           ) -> CostParams:
     """Price one node's local step + one gossip payload for a model config.
 
     FLOPs/bytes come from the roofline analytic model evaluated for ONE
@@ -88,12 +106,19 @@ def cost_params_from_model(cfg, *, seq_len: int, local_batch: int,
     ``--codec`` spec string or a WireCodec; None follows `quant` = the q8
     lattice), so predicted-vs-simulated stays honest for every wire
     format (t12_codecs).
+
+    `topology` (a ``--topology`` spec string or HierTopology, or None)
+    switches on two-tier pricing: intra-group payloads ride `link_bw`
+    (ICI) and inter-group ones `inter_link_bw` (default: the mesh's DCN
+    figure), matching how the trace's tier labels are priced downstream.
     """
     import jax
 
     from repro.configs.base import InputShape
     from repro.core import bucket as B
-    from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+    from repro.launch.mesh import (
+        DCN_LINK_BW, HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16,
+    )
     from repro.models import init_params
     from repro.quant.codecs import WireCodec, make_codec
     from repro.quant.schemes import ModularQuantConfig
@@ -112,19 +137,28 @@ def cost_params_from_model(cfg, *, seq_len: int, local_batch: int,
         lambda x: jax.ShapeDtypeStruct((1,) + x.shape, x.dtype), probe)
     layout = B.build_layout(stacked, block=wire.block)
     payload = layout.payload_num_bytes(wire if quantize else None)
+    topo_spec = getattr(topology, "spec", topology)
+    hier = topo_spec is not None and str(topo_spec) not in ("", "flat",
+                                                            "none")
+    if hier and inter_link_bw is None:
+        inter_link_bw = DCN_LINK_BW
     return CostParams(
         flops_per_step=flops, hbm_bytes_per_step=hbm, payload_bytes=payload,
         peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW,
         link_bw=link_bw or ICI_LINK_BW, link_latency_s=link_latency_s,
+        inter_link_bw=inter_link_bw if hier else None,
+        inter_link_latency_s=inter_link_latency_s if hier else None,
         meta={"arch": getattr(cfg, "name", "?"), "seq_len": seq_len,
               "local_batch": local_batch, "quantize": quantize,
               "codec": wire.name if quantize else "fp32",
-              "n_padded": layout.n_padded})
+              "n_padded": layout.n_padded,
+              **({"topology": str(topo_spec)} if hier else {})})
 
 
 def predict_walltime(trace: Trace, cost: CostParams, *,
                      mode: str = "blocking",
-                     speeds: Optional[np.ndarray] = None) -> Dict:
+                     speeds: Optional[np.ndarray] = None,
+                     tiers: Optional[np.ndarray] = None) -> Dict:
     """Discrete-event replay of the trace under the cost model.
 
     mode: blocking (Algorithm 1 — rendezvous + exchange on the critical
@@ -133,6 +167,12 @@ def predict_walltime(trace: Trace, cost: CostParams, *,
     under the local steps — pays only the uncovered remainder).
     `speeds` defaults to the trace's clock rates: a node that rings slowly
     computes slowly (the straggler model of trace.py).
+
+    `tiers` ([n_events] int, 0 intra / 1 inter — `HierTopology
+    .tier_of_pairs(trace.pairs)`) prices each event against its tier's
+    link (`CostParams.comm_time_s(tier)`); None prices everything on the
+    fast tier, bitwise the pre-hier behavior. The result then carries a
+    per-tier link-utilization breakdown under ``"tiers"``.
 
     Elastic membership (traces with `kinds`): a LEAVE prices zero — the
     left node simply stops accruing events, and a node whose availability
@@ -147,17 +187,30 @@ def predict_walltime(trace: Trace, cost: CostParams, *,
     n = trace.n_nodes
     speeds = trace.rates if speeds is None else np.asarray(speeds, np.float64)
     step_t = np.asarray([cost.step_time_s(s) for s in speeds])
-    comm_t = cost.comm_time_s()
+    comm_by_tier = (cost.comm_time_s(0), cost.comm_time_s(1))
+
+    def tier_of(e):
+        return 0 if tiers is None else int(tiers[e])
+
     ready = np.zeros(n, np.float64)
     busy = np.zeros(n, np.float64)         # compute-busy seconds per node
     wait = np.zeros(n, np.float64)         # rendezvous wait per node
     comm_total = 0.0
+    join_comm = 0.0
+    tier_events = [0, 0]
+    tier_bytes = [0, 0]
+    tier_seconds = [0.0, 0.0]
     n_joins = n_leaves = 0
     for e in range(trace.n_events):
         i, j = int(trace.pairs[e, 0]), int(trace.pairs[e, 1])
+        comm_t = comm_by_tier[tier_of(e)]
         if trace.kinds is not None and int(trace.kinds[e]) != 0:
             if int(trace.kinds[e]) == EVENT_JOIN:
                 comm_total += comm_t
+                join_comm += comm_t
+                tier_events[tier_of(e)] += 1
+                tier_bytes[tier_of(e)] += cost.payload_bytes
+                tier_seconds[tier_of(e)] += comm_t
                 ready[i] = max(ready[i], ready[j]) + comm_t
                 n_joins += 1
             else:
@@ -169,6 +222,9 @@ def predict_walltime(trace: Trace, cost: CostParams, *,
         busy[i] += ci
         busy[j] += cj
         comm_total += 2 * comm_t
+        tier_events[tier_of(e)] += 1
+        tier_bytes[tier_of(e)] += 2 * cost.payload_bytes
+        tier_seconds[tier_of(e)] += 2 * comm_t
         if mode == "blocking":
             meet = max(ti, tj)
             wait[i] += meet - ti
@@ -183,9 +239,14 @@ def predict_walltime(trace: Trace, cost: CostParams, *,
     total = float(ready.max()) if n else 0.0
     churn = {} if trace.kinds is None else \
         {"n_joins": n_joins, "n_leaves": n_leaves,
-         "join_comm_s": n_joins * comm_t}
+         "join_comm_s": join_comm}
+    tier_table = {} if tiers is None else {"tiers": {
+        name: {"events": tier_events[t], "bytes": tier_bytes[t],
+               "seconds": tier_seconds[t], "comm_time_s": comm_by_tier[t]}
+        for t, name in enumerate(("intra", "inter"))}}
     return {
         **churn,
+        **tier_table,
         "mode": mode,
         "total_s": total,
         "events_per_s": trace.n_events / total if total > 0 else 0.0,
@@ -194,44 +255,54 @@ def predict_walltime(trace: Trace, cost: CostParams, *,
         "wait_frac": float(wait.sum() / max(busy.sum() + wait.sum(), 1e-30)),
         "comm_total_s": comm_total,
         "step_time_s": step_t.tolist(),
-        "comm_time_s": comm_t,
+        "comm_time_s": comm_by_tier[0],
     }
 
 
 def analytic_walltime(trace: Trace, cost: CostParams, *,
                       mode: str = "blocking",
-                      speeds: Optional[np.ndarray] = None) -> float:
+                      speeds: Optional[np.ndarray] = None,
+                      tiers: Optional[np.ndarray] = None) -> float:
     """Closed-form envelope (no event replay): per-node serial work from
     the trace's aggregate step counts, evenly overlapped — the system
     finishes no sooner than its busiest node and no sooner than the mean
     load. Blocking adds the two-sample rendezvous penalty: each exchange
     waits E|T_i − T_j| ≈ the gap between the pair's expected accrued-work
-    times, approximated from the speed spread."""
+    times, approximated from the speed spread. `tiers` prices each
+    event's payload on its own link tier (see `predict_walltime`); None
+    keeps the single-tier closed form bitwise."""
     n = trace.n_nodes
     speeds = trace.rates if speeds is None else np.asarray(speeds, np.float64)
     step_t = np.asarray([cost.step_time_s(s) for s in speeds])
     comm_t = cost.comm_time_s()
+    comm_by_tier = (cost.comm_time_s(0), cost.comm_time_s(1))
     def kind_of(e):
         return 0 if trace.kinds is None else int(trace.kinds[e])
 
     work = np.zeros(n, np.float64)
     part = np.zeros(n, np.int64)
+    comm_acc = np.zeros(n, np.float64)   # per-node tier-priced comm seconds
     for e in range(trace.n_events):
         k = kind_of(e)
+        ct = comm_by_tier[0 if tiers is None else int(tiers[e])]
         if k == EVENT_LEAVE:
             continue                     # a leave prices nothing
         if k == EVENT_JOIN:
             part[trace.pairs[e, 0]] += 1  # joiner waits for one payload
+            comm_acc[trace.pairs[e, 0]] += ct
             continue
         for s in range(2):
             i = int(trace.pairs[e, s])
             work[i] += int(trace.h[e, s]) * step_t[i]
+            comm_acc[i] += ct
         part[trace.pairs[e, 0]] += 1
         part[trace.pairs[e, 1]] += 1
     if mode == "overlap":
         per_node = work  # comm fully hidden (first-order)
+    elif tiers is None:
+        per_node = work + part * comm_t   # the pre-hier closed form, bitwise
     else:
-        per_node = work + part * comm_t
+        per_node = work + comm_acc
     lower = float(max(per_node.max(), per_node.mean()))
     if mode != "blocking":
         return lower
@@ -306,18 +377,23 @@ def predict_bsp_walltime(trace: Trace, sched, cost: CostParams, *,
 
 
 def predict_all_modes(trace: Trace, cost: CostParams,
-                      speeds: Optional[np.ndarray] = None) -> Dict:
+                      speeds: Optional[np.ndarray] = None,
+                      tiers: Optional[np.ndarray] = None) -> Dict:
     """Replay + closed form for all three execution modes — the
-    predicted-vs-simulated table t10_sched reports per rate profile."""
+    predicted-vs-simulated table t10_sched reports per rate profile.
+    `tiers` switches on two-tier pricing and adds the per-tier
+    link-utilization breakdown to each mode's row."""
     out = {}
     for mode in ("blocking", "nonblocking", "overlap"):
-        rep = predict_walltime(trace, cost, mode=mode, speeds=speeds)
+        rep = predict_walltime(trace, cost, mode=mode, speeds=speeds,
+                               tiers=tiers)
         out[mode] = {
             "simulated_s": rep["total_s"],
             "predicted_s": analytic_walltime(trace, cost, mode=mode,
-                                             speeds=speeds),
+                                             speeds=speeds, tiers=tiers),
             "wait_frac": rep["wait_frac"],
             "events_per_s": rep["events_per_s"],
+            **({"tiers": rep["tiers"]} if tiers is not None else {}),
         }
         out[mode]["predicted_over_simulated"] = (
             out[mode]["predicted_s"] / out[mode]["simulated_s"]

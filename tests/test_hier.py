@@ -1,0 +1,445 @@
+"""Hierarchical two-tier gossip (core/hier.py; DESIGN.md §Hierarchy).
+
+Covers the topology grammar and sampling laws, the degenerate G = n
+contract (hier with a single group is BITWISE the flat path — perms, pool
+indices, and whole engine trajectories, fp32 and q8), hier × scan-chunk
+bitwise parity, the codec-compressed resident comm copy (compress_state),
+tier-pure schedule binning, the two-tier cost pricing, and the capability
+matrix rejections."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SwarmConfig, make_graph, make_superstep_scan,
+                        make_swarm_step, sample_matching, swarm_init,
+                        transport_from_config)
+from repro.core.graph import complete
+from repro.core.hier import (DEFAULT_INTER_FRAC, HierTopology, INTER, INTRA,
+                             parse_topology)
+from repro.core.swarm import sample_h_counts
+from repro.optim import make_optimizer
+from repro.quant.schemes import ModularQuantConfig
+
+N, D, H, B = 8, 12, 2, 4
+LR = 0.05
+QCFG = ModularQuantConfig(safety=16.0)
+
+
+# -- topology unit laws ------------------------------------------------------
+
+def test_parse_topology_grammar():
+    assert parse_topology(None, 8) is None
+    assert parse_topology("", 8) is None
+    assert parse_topology("flat", 8) is None
+    assert parse_topology("none", 8) is None
+    t = parse_topology("hier:4", 16)
+    assert (t.group_size, t.n_groups, t.inter_frac) == \
+        (4, 4, DEFAULT_INTER_FRAC)
+    t = parse_topology("hier:2:0.1", 8)
+    assert (t.group_size, t.n_groups, t.inter_frac) == (2, 4, 0.1)
+    assert t.spec == "hier:2:0.1"
+    with pytest.raises(ValueError, match="unknown topology"):
+        parse_topology("ring:4", 8)
+    with pytest.raises(ValueError, match="not divisible"):
+        parse_topology("hier:3", 8)
+    with pytest.raises(ValueError, match="group size"):
+        parse_topology("hier:1", 8)
+    with pytest.raises(ValueError, match="inter_frac"):
+        parse_topology("hier:4:1.5", 8)
+
+
+def test_edge_weights_hit_inter_frac():
+    """Poisson partner draws: each node's inter-edge weight share must be
+    exactly inter_frac — the tier-coin law the clock realizes."""
+    for spec, n in (("hier:4:0.25", 16), ("hier:8:0.1", 32),
+                    ("hier:2:0.5", 8)):
+        t = parse_topology(spec, n)
+        u, w = t.union_graph(), t.edge_weights()
+        tiers = t.tier_of_pairs(u.edges)
+        node_w = np.zeros((n, 2))
+        for (i, j), wt, tr in zip(u.edges, w, tiers):
+            node_w[i, tr] += wt
+            node_w[j, tr] += wt
+        frac = node_w[:, 1] / node_w.sum(1)
+        np.testing.assert_allclose(frac, t.inter_frac, rtol=1e-12)
+
+
+def test_inter_group_perm_is_cross_group_involution():
+    t = parse_topology("hier:4", 16)
+    for seed in range(5):
+        perm = t.inter_group_perm(np.random.default_rng(seed))
+        assert np.array_equal(perm[perm], np.arange(16))
+        pairs = np.stack([np.arange(16), perm], 1)
+        assert (t.tier_of_pairs(pairs) == INTER).all()
+        # lane alignment: node c*G+i exchanges with c'*G+i
+        assert np.array_equal(perm % 4, np.arange(16) % 4)
+
+
+def test_tier_of_pairs():
+    t = parse_topology("hier:4", 16)
+    pairs = np.array([[0, 1], [0, 4], [5, 6], [3, 12], [13, 15]])
+    np.testing.assert_array_equal(t.tier_of_pairs(pairs), [0, 1, 0, 1, 0])
+    assert t.tier_of_pairs(np.zeros((0, 2), np.int32)).shape == (0,)
+
+
+def test_sample_event_tier_frequency():
+    t = parse_topology("hier:4:0.25", 16)
+    rng = np.random.default_rng(0)
+    tiers = []
+    for _ in range(600):
+        perm, tier = t.sample_event(rng)
+        assert np.array_equal(perm[perm], np.arange(16))
+        ptiers = t.tier_of_pairs(
+            np.stack([np.arange(16), perm], 1)[perm != np.arange(16)])
+        assert (ptiers == tier).all()   # events are tier-pure
+        tiers.append(tier)
+    assert 0.18 < np.mean(tiers) < 0.33   # ~Binomial(600, 0.25)
+
+
+# -- degenerate G = n: bitwise the flat path ---------------------------------
+
+def test_degenerate_sampling_bitwise():
+    """hier:G with one group consumes the SAME rng stream as the flat
+    samplers — perms, pools, and pool indices are element-wise identical."""
+    from repro.core.exchange import make_matching_pool
+    t = parse_topology(f"hier:{N}", N)
+    g = complete(N)
+    r1, r2 = np.random.default_rng(3), np.random.default_rng(3)
+    for _ in range(20):
+        perm, tier = t.sample_event(r1)
+        assert tier == INTRA
+        np.testing.assert_array_equal(perm, sample_matching(g, r2))
+    pool, tiers = t.matching_pool(6, seed=5)
+    flat_pool = make_matching_pool(g, K=6, seed=5)
+    assert len(pool) == len(flat_pool) and (tiers == INTRA).all()
+    for a, b in zip(pool, flat_pool):
+        np.testing.assert_array_equal(a, b)
+    r1, r2 = np.random.default_rng(9), np.random.default_rng(9)
+    for _ in range(20):
+        idx, tier = t.sample_pool_index(r1, 6)
+        assert tier == INTRA and idx == int(r2.integers(6))
+
+
+def _data(t, h_slots=H):
+    r = np.random.default_rng(100 + t)
+    x = r.normal(size=(N, h_slots, B, D)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(x.sum(-1) > 0, jnp.float32)
+
+
+def _lin_loss(p, mb):
+    x, y = mb
+    return 0.5 * jnp.mean((x @ p["w"] - y) ** 2)
+
+
+def _run_engine(scfg, perms, graph=None, pool_seed=0):
+    opt = make_optimizer("sgd", lr=LR, momentum=0.9)
+    state = swarm_init(jax.random.PRNGKey(0), scfg,
+                       lambda k: {"w": jax.random.normal(k, (D,)) * 0.3},
+                       opt.init, same_init=False)
+    kw = {}
+    if scfg.gossip_impl.startswith("ppermute_pool"):
+        probe = {"w": jax.ShapeDtypeStruct((D,), jnp.float32)}
+        kw["transport"] = transport_from_config(
+            scfg, graph or make_graph("complete", N), pool_seed, probe)
+    step = jax.jit(make_swarm_step(scfg, _lin_loss, opt.update,
+                                   lambda s: LR, **kw))
+    key = jax.random.PRNGKey(7)
+    rng_np = np.random.default_rng(11)
+    for t in range(len(perms)):
+        key, sub = jax.random.split(key)
+        state, m = step(state, _data(t), jnp.asarray(perms[t]),
+                        jnp.asarray(sample_h_counts(scfg, rng_np)), sub)
+    return state
+
+
+def _driver_perms(scfg, topo, steps=6, seed=4):
+    from repro.launch.train import sample_gossip_perm
+    g = make_graph("complete", scfg.n_nodes)
+    rng_np = np.random.default_rng(seed)
+    return np.stack([sample_gossip_perm(scfg, g, rng_np, 0, topo)
+                     for _ in range(steps)])
+
+
+@pytest.mark.parametrize("quantize", [False, True],
+                         ids=["fp32", "q8"])
+def test_degenerate_engine_bitwise_gather(quantize):
+    """Golden oracle: hier:N (single group) on the gather transport ==
+    the flat run, bit for bit, fp32 and quantized."""
+    topo = parse_topology(f"hier:{N}", N)
+    flat_cfg = SwarmConfig(n_nodes=N, H=H, quantize=quantize, quant=QCFG,
+                           topology=None)
+    hier_cfg = SwarmConfig(n_nodes=N, H=H, quantize=quantize, quant=QCFG,
+                           topology=f"hier:{N}")
+    pf = _driver_perms(flat_cfg, None)
+    ph = _driver_perms(hier_cfg, topo)
+    np.testing.assert_array_equal(pf, ph)
+    a, b = _run_engine(flat_cfg, pf), _run_engine(hier_cfg, ph)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    if quantize:
+        for x, y in zip(jax.tree.leaves(a.prev), jax.tree.leaves(b.prev)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_degenerate_pool_bitwise():
+    """Single-group hier on the ppermute_pool transport: the pool indices
+    AND the compiled pool itself match the flat run -> same trajectory."""
+    topo = parse_topology(f"hier:{N}", N)
+    flat_cfg = SwarmConfig(n_nodes=N, H=H, gossip_impl="ppermute_pool",
+                           pool_size=4, topology=None)
+    hier_cfg = SwarmConfig(n_nodes=N, H=H, gossip_impl="ppermute_pool",
+                           pool_size=4, topology=f"hier:{N}")
+    pf = _driver_perms(flat_cfg, None)
+    ph = _driver_perms(hier_cfg, topo)
+    np.testing.assert_array_equal(pf, ph)
+    a, b = _run_engine(flat_cfg, pf), _run_engine(hier_cfg, ph)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- hier × scan: bitwise parity ---------------------------------------------
+
+@pytest.mark.parametrize("compress", [False, True],
+                         ids=["plain", "compress_state"])
+def test_hier_scan_parity(compress):
+    """A hier perm stream (both tiers) through the fused scan driver ==
+    the per-step driver, bit for bit — with the comm copy either
+    tree-shaped or codec-compressed (the wire tuple donates through the
+    scan carry like any other leaf)."""
+    topo = parse_topology("hier:4:0.5", N)
+    scfg = SwarmConfig(n_nodes=N, H=H, quantize=True, quant=QCFG,
+                       codec="q8", topology="hier:4:0.5",
+                       compress_state=compress)
+    perms = _driver_perms(scfg, topo, steps=6)
+    assert (topo.tier_of_pairs(
+        np.stack([np.tile(np.arange(N), (6, 1)), perms], -1)) == 1).any(), \
+        "perm stream should include an inter-group event (seed-dependent)"
+    opt = make_optimizer("sgd", lr=LR, momentum=0.9)
+    init = lambda: swarm_init(  # noqa: E731
+        jax.random.PRNGKey(0), scfg,
+        lambda k: {"w": jax.random.normal(k, (D,)) * 0.3},
+        opt.init, same_init=False)
+    step = jax.jit(make_swarm_step(scfg, _lin_loss, opt.update,
+                                   lambda s: LR))
+    hs = np.full((6, N), H, np.int32)
+    # per-step driver
+    state_a = init()
+    key = jax.random.PRNGKey(7)
+    for t in range(6):
+        key, sub = jax.random.split(key)
+        state_a, _ = step(state_a, _data(t), jnp.asarray(perms[t]),
+                          jnp.asarray(hs[t]), sub)
+    # scan driver, two chunks
+    chunk_fn = make_superstep_scan(step, donate=False)
+    state_b, key = init(), jax.random.PRNGKey(7)
+    for t0, K in ((0, 3), (3, 3)):
+        X = jnp.stack([_data(t)[0] for t in range(t0, t0 + K)])
+        Y = jnp.stack([_data(t)[1] for t in range(t0, t0 + K)])
+        state_b, key, _ = chunk_fn(state_b, key, (X, Y),
+                                   jnp.asarray(perms[t0:t0 + K]),
+                                   jnp.asarray(hs[t0:t0 + K]))
+    for x, y in zip(jax.tree.leaves(state_a.params),
+                    jax.tree.leaves(state_b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree.leaves(state_a.prev),
+                    jax.tree.leaves(state_b.prev)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- compress_state: the codec-encoded resident comm copy --------------------
+
+def test_compress_state_prev_is_wire_and_small():
+    """With compress_state the comm copy is a tuple of wire-word arrays
+    ~4x smaller than the fp32 copy (q8: 1B codes + per-block scales), and
+    the engine still trains (finite loss, params move)."""
+    from repro.core import bucket as bk
+    from repro.quant.codecs import make_codec
+    scfg = SwarmConfig(n_nodes=N, H=H, quantize=True, quant=QCFG,
+                       codec="q8", compress_state=True)
+    opt = make_optimizer("sgd", lr=LR, momentum=0.9)
+    big_init = lambda k: {"w": jax.random.normal(k, (64, 32)) * 0.3}  # noqa: E731
+    state = swarm_init(jax.random.PRNGKey(0), scfg, big_init, opt.init,
+                       same_init=False)
+    assert isinstance(state.prev, tuple)
+    codec = make_codec("q8", QCFG)
+    layout = bk.build_layout(state.params, block=codec.block)
+    dense_bytes = N * layout.n_padded * 4
+    wire_bytes = sum(np.asarray(w).nbytes for w in state.prev)
+    assert wire_bytes * 2 <= dense_bytes, (wire_bytes, dense_bytes)
+
+    def loss(p, mb):
+        x, y = mb
+        return 0.5 * jnp.mean(((x @ p["w"]).sum(-1) - y) ** 2)
+
+    step = jax.jit(make_swarm_step(scfg, loss, opt.update, lambda s: LR))
+    g = make_graph("complete", N)
+    rng_np = np.random.default_rng(0)
+    key = jax.random.PRNGKey(7)
+    w0 = np.asarray(state.params["w"]).copy()
+    for t in range(4):
+        r = np.random.default_rng(t)
+        x = jnp.asarray(r.normal(size=(N, H, B, 64)), jnp.float32)
+        mb = (x, jnp.asarray(r.normal(size=(N, H, B, 32)), jnp.float32)
+              .sum(-1))
+        key, sub = jax.random.split(key)
+        state, m = step(state, mb, jnp.asarray(sample_matching(g, rng_np)),
+                        jnp.asarray(sample_h_counts(scfg, rng_np)), sub)
+    assert np.isfinite(float(m["loss"]))
+    assert not np.array_equal(w0, np.asarray(state.params["w"]))
+
+
+def test_compress_state_rejects_residual_and_nonblocking():
+    """The engine's own backstops (the registry rejects these at config
+    time; swarm_init/make_swarm_step assert for direct engine users)."""
+    opt = make_optimizer("sgd", lr=LR, momentum=0.9)
+    init = lambda k: {"w": jax.random.normal(k, (D,)) * 0.3}  # noqa: E731
+    with pytest.raises(AssertionError, match="lattice-only"):
+        swarm_init(jax.random.PRNGKey(0),
+                   SwarmConfig(n_nodes=N, quantize=True, codec="topk:0.25",
+                               compress_state=True), init, opt.init)
+    with pytest.raises(AssertionError, match="blocking"):
+        swarm_init(jax.random.PRNGKey(0),
+                   SwarmConfig(n_nodes=N, quantize=True, nonblocking=True,
+                               compress_state=True), init, opt.init)
+    with pytest.raises(AssertionError, match="legacy|flat packed"):
+        make_swarm_step(SwarmConfig(n_nodes=N, quantize=True,
+                                    gossip_impl="gather_legacy",
+                                    compress_state=True),
+                        _lin_loss, opt.update, lambda s: LR)
+
+
+# -- tier-pure binning and two-tier pricing ----------------------------------
+
+def _toy_trace(tiers, n=8):
+    from repro.sched.trace import Trace
+    E = len(tiers)
+    rng = np.random.default_rng(0)
+    pairs = np.zeros((E, 2), np.int32)
+    for e, tr in enumerate(tiers):
+        i = int(rng.integers(n))
+        j = (i + (4 if tr else 1)) % n   # groups of 4: +4 crosses, +1 stays
+        pairs[e] = (i, j) if i < j else (j, i)
+    return Trace(n_nodes=n, times=np.arange(E, dtype=np.float64),
+                 pairs=pairs, h=np.ones((E, 2), np.int32),
+                 rates=np.ones(n), h_max=2).validate()
+
+
+def test_bin_trace_tiers_are_pure():
+    """A tier flip closes the open bin: every bin holds events of ONE tier
+    and BinnedSchedule.tiers labels it; tiers=None stays pre-hier."""
+    from repro.sched import bin_trace
+    tiers = np.array([0, 0, 1, 1, 0, 1, 0, 0, 0, 1], np.int64)
+    trace = _toy_trace(tiers)
+    sched = bin_trace(trace, tiers=tiers)
+    assert sched.tiers is not None and len(sched.tiers) == sched.n_supersteps
+    # replay: every event lands in a bin labeled with its own tier
+    e = 0
+    for s in range(sched.n_supersteps):
+        k = int(sched.mask[s].sum()) // 2
+        for _ in range(k):
+            assert tiers[e] == sched.tiers[s], (e, s)
+            e += 1
+    assert e == trace.n_events
+    assert bin_trace(trace).tiers is None
+
+
+def test_cost_two_tier_pricing():
+    from repro.sched.cost import CostParams, predict_walltime
+    flat = CostParams(flops_per_step=1e9, hbm_bytes_per_step=1e6,
+                      payload_bytes=1 << 20)
+    hier = CostParams(flops_per_step=1e9, hbm_bytes_per_step=1e6,
+                      payload_bytes=1 << 20, inter_link_bw=6.25e9)
+    assert flat.comm_time_s(0) == flat.comm_time_s(1)   # no inter tier
+    assert hier.comm_time_s(1) > hier.comm_time_s(0) * 5
+    tiers = np.array([0, 1, 0, 0, 1, 1, 0, 0, 0, 0], np.int64)
+    trace = _toy_trace(tiers)
+    rep = predict_walltime(trace, hier, tiers=tiers)
+    tt = rep["tiers"]
+    assert tt["intra"]["events"] == 7 and tt["inter"]["events"] == 3
+    assert tt["intra"]["bytes"] == 7 * 2 * (1 << 20)
+    assert tt["inter"]["seconds"] == pytest.approx(
+        3 * 2 * hier.comm_time_s(1))
+    # tiered run must cost more than pricing everything on the fast link
+    base = predict_walltime(trace, hier)
+    assert "tiers" not in base
+    assert rep["comm_total_s"] > base["comm_total_s"]
+
+
+def test_cost_tiers_none_bitwise_pre_hier():
+    """tiers=None and all-intra tiers price identically (the pre-hier
+    closed forms are preserved bit for bit)."""
+    from repro.sched.cost import CostParams, analytic_walltime, \
+        predict_walltime
+    cp = CostParams(flops_per_step=1e9, hbm_bytes_per_step=1e6,
+                    payload_bytes=1 << 18, inter_link_bw=6.25e9)
+    trace = _toy_trace(np.zeros(12, np.int64))
+    zeros = np.zeros(12, np.int64)
+    for mode in ("blocking", "nonblocking", "overlap"):
+        a = predict_walltime(trace, cp, mode=mode)
+        b = predict_walltime(trace, cp, mode=mode, tiers=zeros)
+        assert a["total_s"] == b["total_s"]
+        assert analytic_walltime(trace, cp, mode=mode) == \
+            analytic_walltime(trace, cp, mode=mode, tiers=zeros)
+
+
+def test_cost_params_from_model_topology():
+    from repro.configs import get_config, reduced
+    from repro.launch.mesh import DCN_LINK_BW
+    from repro.sched import cost_params_from_model
+    cfg = reduced(get_config("transformer-wmt"), n_layers=1, d_model=32)
+    flat = cost_params_from_model(cfg, seq_len=16, local_batch=2)
+    assert flat.inter_link_bw is None
+    hier = cost_params_from_model(cfg, seq_len=16, local_batch=2,
+                                  topology="hier:4")
+    assert hier.inter_link_bw == DCN_LINK_BW
+    assert hier.meta["topology"] == "hier:4"
+    assert hier.comm_time_s(1) > hier.comm_time_s(0)
+
+
+# -- capability matrix -------------------------------------------------------
+
+def test_validate_run_config_hier():
+    from repro.algorithms import validate_run_config
+    ok = validate_run_config("swarm", topology="hier:4", n_nodes=8)
+    assert ok.hier
+    validate_run_config("adpsgd", topology="hier:4", n_nodes=8)
+    with pytest.raises(ValueError, match="hier"):
+        validate_run_config("localsgd", topology="hier:4", n_nodes=8)
+    with pytest.raises(ValueError, match="ONE static matching"):
+        validate_run_config("swarm", gossip_impl="ppermute",
+                            topology="hier:4", n_nodes=8)
+    validate_run_config("swarm", gossip_impl="ppermute_pool",
+                        topology="hier:4", n_nodes=8)
+    with pytest.raises(ValueError, match="avail"):
+        validate_run_config("swarm", topology="hier:4", n_nodes=8,
+                            rate_profile="lognormal",
+                            avail="day_night:period=8,duty=0.5")
+    with pytest.raises(ValueError, match="not divisible"):
+        validate_run_config("swarm", topology="hier:3", n_nodes=8)
+    with pytest.raises(ValueError, match="unknown topology"):
+        validate_run_config("swarm", topology="ring:4")
+
+
+def test_validate_run_config_compress_state():
+    from repro.algorithms import validate_run_config
+    validate_run_config("swarm", quantize=True, codec="q8",
+                        compress_state=True)
+    with pytest.raises(ValueError, match="without --quantize"):
+        validate_run_config("swarm", compress_state=True)
+    with pytest.raises(ValueError, match="lattice"):
+        validate_run_config("swarm", quantize=True, codec="topk:0.25",
+                            compress_state=True)
+    with pytest.raises(ValueError, match="lattice"):
+        validate_run_config("swarm", quantize=True, codec="bf16",
+                            compress_state=True)
+    with pytest.raises(ValueError, match="blocking"):
+        validate_run_config("swarm", quantize=True, codec="q8",
+                            nonblocking=True, compress_state=True)
+    with pytest.raises(ValueError, match="SwarmState"):
+        validate_run_config("adpsgd", quantize=True, codec="q8",
+                            compress_state=True)
+    with pytest.raises(ValueError, match="legacy|oracle"):
+        validate_run_config("swarm", quantize=True, codec="q8",
+                            gossip_impl="gather_legacy",
+                            compress_state=True)
