@@ -1151,6 +1151,90 @@ def t15_serve(quick=False):
          f"fresh_max_s={s['time_to_fresh_max_s']};"
          f"dropped={s['dropped_in_flight']};"
          f"recompiles={s['decode_cache_misses']}")
+
+    # -- paired prefill schedules: head-of-line blocking under a burst ---
+    # Same burst (all arrivals at t=0, an attention arch, long prompts),
+    # blocking admission vs chunked prefill. The latency series is the
+    # per-lane inter-commit gap, so a blocking prefill that stalls every
+    # live decode lane lands in the tail; chunked prefill interleaves one
+    # [slots, T] chunk per engine step and must STRICTLY cut p99.
+    acfg = reduced(get_config("olmo-1b"), n_layers=2, d_model=64)
+    aparams = init_params(k_a, acfg)
+    n_burst = 8 if quick else 12
+    plen = 48
+
+    def burst_run(**kw):
+        from repro.serve import ServeMetrics
+        e = EngineConfig(max_slots=4, prompt_len=plen, max_new_tokens=12,
+                         queue_depth=n_burst, seed=0, **kw)
+        eng = ServeEngine(acfg, e, params=aparams)
+        bp = rng.integers(0, acfg.vocab_size, (n_burst + 2, plen))
+        # warm up every compiled path (prefill/chunk/decode/install) so
+        # the measured gaps are steady-state, not first-dispatch compiles
+        for w in range(2):
+            eng.submit(Request(-1 - w, bp[n_burst + w].astype(np.int32)))
+        eng.drain()
+        eng.completions.clear()
+        kv_b, kv_d = eng.metrics.kv_bytes, eng.metrics.kv_dense_bytes
+        eng.metrics = ServeMetrics()
+        eng.metrics.kv_bytes, eng.metrics.kv_dense_bytes = kv_b, kv_d
+        arr = [(0.0, Request(i, bp[i].astype(np.int32)))
+               for i in range(n_burst)]
+        serve_openloop(eng, arr)
+        ms = eng.metrics.summary()
+        assert ms["completed"] == n_burst and \
+            ms["dropped_in_flight"] == 0, ms
+        return eng, ms
+
+    _, blocking = burst_run()
+    _, chunked = burst_run(prefill_chunk=8)
+    assert chunked["prefill_cache_misses"] == 0, chunked
+    assert chunked["latency_p99_ms"] < blocking["latency_p99_ms"], \
+        ("chunked prefill must strictly cut in-flight p99 under bursts",
+         blocking["latency_p99_ms"], chunked["latency_p99_ms"])
+    out["prefill_paired"] = {
+        "arch": acfg.name, "n_burst": n_burst, "prompt_len": plen,
+        "blocking": blocking, "chunked": chunked,
+        "p99_ratio": round(chunked["latency_p99_ms"] /
+                           max(blocking["latency_p99_ms"], 1e-9), 4)}
+    emit("t15_serve/prefill_paired", blocking["latency_p99_ms"] * 1e3,
+         f"blocking_p99_ms={blocking['latency_p99_ms']};"
+         f"chunked_p99_ms={chunked['latency_p99_ms']};"
+         f"blocking_ttft_p99_ms={blocking['ttft_p99_ms']};"
+         f"chunked_ttft_p99_ms={chunked['ttft_p99_ms']}")
+
+    # -- paged KV pool vs dense bank memory at 50% slot occupancy --------
+    # A pool holding HALF the lanes' worth of pages must cost less device
+    # memory than the dense full-attention bank — and still serve the
+    # whole burst (admissions defer on pool pressure, nothing drops).
+    half_pool = EngineConfig(
+        max_slots=4, prompt_len=plen, max_new_tokens=12,
+        queue_depth=n_burst, seed=0, prefill_chunk=8, paged=True,
+        page_size=4)
+    half_pool = EngineConfig(
+        **{**half_pool.__dict__, "n_pages": 2 * half_pool.pages_per_lane})
+    eng_p, paged_s = burst_run(paged=True, page_size=4, prefill_chunk=8,
+                               n_pages=half_pool.n_pages)
+    assert paged_s["decode_cache_misses"] == 0, paged_s
+    assert eng_p.allocator.in_use == 0
+    assert 0 < paged_s["kv_bytes"] < paged_s["kv_dense_bytes"], \
+        ("paged pool at 50% occupancy must beat the dense bank",
+         paged_s["kv_bytes"], paged_s["kv_dense_bytes"])
+    out["paged_memory"] = {
+        "arch": acfg.name, "page_size": 4,
+        "pool_pages": half_pool.pool_pages,
+        "kv_bytes": paged_s["kv_bytes"],
+        "kv_dense_bytes": paged_s["kv_dense_bytes"],
+        "bytes_ratio": round(paged_s["kv_bytes"] /
+                             paged_s["kv_dense_bytes"], 4),
+        "pool_deferrals": paged_s["pool_deferrals"],
+        "completed": paged_s["completed"]}
+    emit("t15_serve/paged_memory", 0.0,
+         f"pool_bytes={paged_s['kv_bytes']};"
+         f"dense_bytes={paged_s['kv_dense_bytes']};"
+         f"ratio={out['paged_memory']['bytes_ratio']};"
+         f"deferrals={paged_s['pool_deferrals']};"
+         f"recompiles={paged_s['decode_cache_misses']}")
     save("t15_serve", out)
     return out
 
@@ -1314,15 +1398,93 @@ TABLES = {
 }
 
 
+# One headline metric per t8-t16 table: (artifact, metric name, extractor
+# over the saved json). Extractors are defensive — a table that has not
+# been run (or an older artifact schema) lands in "missing"/"failed"
+# instead of killing the consolidation.
+_HEADLINES = [
+    ("t8_topology", "complete_final_loss",
+     lambda d: float(np.mean(d["complete"]["loss"][-5:]))),
+    ("t8_transport", "gather_q8_flat_vs_legacy_speedup",
+     lambda d: round(d["gather_q8_legacy"]["us_per_call"] /
+                     d["gather_q8_flat"]["us_per_call"], 3)),
+    ("t9_node_scaling", "final_loss_max_nodes",
+     lambda d: float(np.mean(
+         d[max(d, key=lambda k: int(k))]["loss"][-5:]))),
+    ("t9_async", "paired_median_blocking_minus_overlap_us",
+     lambda d: d["paired_median_blocking_minus_overlap_us"]),
+    ("t10_sched", "lognormal_final_loss",
+     lambda d: d["lognormal"]["final_loss"]),
+    ("t11_baselines", "swarm_q8_final_loss",
+     lambda d: d["swarm_q8"]["final_loss"]),
+    ("t12_codecs", "q8_payload_ratio",
+     lambda d: round(d["measured_payload"]["q8_payload_bytes"] /
+                     d["measured_payload"]["fp32_payload_bytes"], 4)),
+    ("t13_fused", "q8_scan_speedup", lambda d: d["q8"]["scan_speedup"]),
+    ("t14_churn", "final_loss_under_churn", lambda d: d["final_loss"]),
+    ("t15_serve", "tokens_per_s", lambda d: d["tokens_per_s"]),
+    ("t15_serve", "latency_p99_ms", lambda d: d["latency_p99_ms"]),
+    ("t15_serve", "chunked_prefill_p99_ratio",
+     lambda d: d["prefill_paired"]["p99_ratio"]),
+    ("t15_serve", "paged_kv_bytes_ratio",
+     lambda d: d["paged_memory"]["bytes_ratio"]),
+    ("t16_hier", "hier_fp32_final_loss",
+     lambda d: d["hier_fp32"]["final_loss"]),
+]
+
+
+def summarize():
+    """Consolidate the per-table artifacts into results/bench/summary.json:
+    one row per t8-t16 headline metric (the numbers README quotes), so CI
+    uploads a single machine-readable file next to the raw tables."""
+    rows, missing, failed = [], [], []
+    cache = {}
+    for table, metric, fn in _HEADLINES:
+        path = os.path.join(OUT, table + ".json")
+        if table not in cache:
+            if not os.path.exists(path):
+                missing.append(table)
+                cache[table] = None
+            else:
+                with open(path) as f:
+                    cache[table] = json.load(f)
+        if cache[table] is None:
+            continue
+        try:
+            rows.append({"table": table, "metric": metric,
+                         "value": fn(cache[table]), "source": path})
+        except (KeyError, TypeError, ValueError, ZeroDivisionError) as e:
+            failed.append({"table": table, "metric": metric,
+                           "error": repr(e)})
+    summary = {"rows": rows, "missing": sorted(set(missing)),
+               "failed": failed}
+    save("summary", summary)
+    for r in rows:
+        emit(f"summary/{r['table']}.{r['metric']}", 0.0,
+             f"value={r['value']}")
+    if missing or failed:
+        emit("summary/incomplete", 0.0,
+             f"missing={sorted(set(missing))};failed={len(failed)}")
+    return summary
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--summary", action="store_true",
+                    help="consolidate existing results/bench/*.json into "
+                         "summary.json (one row per t8-t16 headline "
+                         "metric); runs after any tables selected")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(TABLES)
+    if args.summary and args.only is None:
+        names = []                     # bare --summary: consolidate only
     print("name,us_per_call,derived")
     for n in names:
         TABLES[n](quick=args.quick)
+    if args.summary:
+        summarize()
 
 
 if __name__ == "__main__":

@@ -106,13 +106,27 @@ def _make_requests(cfg, args, key):
     return [(i * gap, Request(i, prompts[i])) for i in range(args.requests)]
 
 
+def _engine_cfg(args):
+    """EngineConfig from CLI args; paged/chunked knobs left at None fall
+    through to the EngineConfig env-var defaults (REPRO_SERVE_PAGED,
+    REPRO_SERVE_PAGE_SIZE, REPRO_PREFILL_CHUNK)."""
+    from repro.serve import EngineConfig
+    kw = dict(max_slots=args.slots, prompt_len=args.prompt_len,
+              max_new_tokens=args.gen, queue_depth=args.queue_depth,
+              temperature=args.temperature, seed=args.seed)
+    for name, val in (("paged", args.paged),
+                      ("page_size", args.page_size),
+                      ("n_pages", args.kv_pages),
+                      ("prefill_chunk", args.prefill_chunk)):
+        if val is not None:
+            kw[name] = val
+    return EngineConfig(**kw)
+
+
 def run_continuous(cfg, args, keys, *, source, params=None):
-    from repro.serve import EngineConfig, ServeEngine
+    from repro.serve import ServeEngine
     from repro.serve.engine import serve_openloop
-    ecfg = EngineConfig(
-        max_slots=args.slots, prompt_len=args.prompt_len,
-        max_new_tokens=args.gen, queue_depth=args.queue_depth,
-        temperature=args.temperature, seed=args.seed)
+    ecfg = _engine_cfg(args)
     engine = ServeEngine(cfg, ecfg, params=params, source=source)
     # block until the source delivers a first model (a follower pointed at
     # a run dir that hasn't checkpointed yet)
@@ -176,13 +190,8 @@ def run_live(cfg, args, keys):
     train_some.done = []
 
     # interleave: a few supersteps, then serve a request wave, repeat
-    from repro.serve import EngineConfig, ServeEngine
-    from repro.serve.engine import serve_openloop
-    ecfg = EngineConfig(
-        max_slots=args.slots, prompt_len=args.prompt_len,
-        max_new_tokens=args.gen, queue_depth=args.queue_depth,
-        temperature=args.temperature, seed=args.seed)
-    engine = ServeEngine(cfg, ecfg, source=src)
+    from repro.serve import ServeEngine
+    engine = ServeEngine(cfg, _engine_cfg(args), source=src)
     reqs = _make_requests(cfg, args, keys["prompts"])
     waves = max(1, args.live_steps // 2)
     per = max(1, len(reqs) // waves)
@@ -233,6 +242,19 @@ def main():
     # engine knobs
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--queue-depth", type=int, default=8)
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="paged KV cache (serve/paged.py); default: "
+                         "REPRO_SERVE_PAGED env (off)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV rows per page; default: REPRO_SERVE_PAGE_SIZE "
+                         "env (8)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="global page-pool size; 0 = every lane at full "
+                         "capacity (no saving, no deferral)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="tokens per prefill chunk (0 = blocking "
+                         "admission); default: REPRO_PREFILL_CHUNK env (0)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--arrival-gap-ms", type=float, default=10.0)
     ap.add_argument("--wait-s", type=float, default=30.0)

@@ -526,8 +526,12 @@ def main():
                 from repro.core import pipeline_epilogue
                 ck_state = pipeline_epilogue(scfg, ck_state)
             tree = codec_checkpoint_tree(ck_state)
+            # compress_state changes the SHAPE of the saved `prev` (codec
+            # wire tuple vs dense stacked tree) — followers need the flag
+            # to build the right template (serve/source.py)
             meta["codec"] = {"spec": args.codec or "q8",
-                             "state": sorted(tree)}
+                             "state": sorted(tree),
+                             "compress_state": bool(scfg.compress_state)}
             save_checkpoint(path, jax.device_get(tree), meta)
         else:
             save_checkpoint(path, jax.device_get(ck_state.params), meta)

@@ -12,6 +12,13 @@ attention stays jnp per the kernels policy):
   O(S * (W + C)) not O(S^2).
 * ``attention_decode``  — one query token over a (possibly ring-buffered or
   sequence-sharded) KV cache.
+* ``attention_chunk_decode`` — a T-token chunk of queries over a cache plus
+  itself (causal within the chunk): the compute path of chunked prefill
+  (DESIGN.md §Serving) — T=1 degenerates to ``attention_decode``.
+* ``gather_pages``      — paged-KV reconstruction: a lane's page table over a
+  global page pool back to the CONTIGUOUS [S, KVH, hd] cache layout. Because
+  the gather is exact (same rows, same order, same shape), every decode
+  variant above runs bitwise-identically on paged and dense caches.
 """
 from __future__ import annotations
 
@@ -142,6 +149,53 @@ def _windowed_dense(q, k, v, *, window: int, q_offset: int, chunk_q: int):
     logits = jnp.where(mask[None, None], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def gather_pages(pool, pages):
+    """Reconstruct a lane's contiguous KV cache from a page pool.
+
+    pool:[n_pages, page, KVH, hd], pages:[n_pp] int32 (a lane's page table
+    row) -> [1, n_pp*page, KVH, hd]: row ``i`` of the result is row
+    ``i % page`` of page ``pages[i // page]`` — exactly the contiguous
+    cache layout, so downstream attention is BITWISE the dense path.
+    Unallocated table entries (-1) wrap-read an arbitrary page; every
+    position they cover is beyond the lane's length and masked to NEG_INF
+    before the softmax, so the garbage never reaches the output."""
+    n_pp, (page, kvh, hd) = pages.shape[0], pool.shape[1:]
+    out = pool[pages]                          # [n_pp, page, KVH, hd]
+    return out.reshape(1, n_pp * page, kvh, hd)
+
+
+def attention_chunk_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                           min_kpos=0, shard=None):
+    """T-query chunk decode: q:[B,T,H,hd] at absolute positions
+    ``cache_len + t`` over a cache whose rows [0, cache_len + T) are
+    populated (the chunk's own k/v already written). Query t attends keys
+    at positions <= cache_len + t (causal within the chunk, everything
+    before it); ``window`` > 0 additionally bounds the lookback and
+    ``min_kpos`` invalidates rows below it (the not-yet-written prefix of
+    an unrolled ring buffer). T=1 is the classic single-token decode
+    (same mask, same math)."""
+    B, T, H, hd = q.shape
+    Sc, KVH = k_cache.shape[1], k_cache.shape[2]
+    n_rep = H // KVH
+    kf = repeat_kv(k_cache, n_rep)
+    vf = repeat_kv(v_cache, n_rep)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kf,
+                        preferred_element_type=jnp.float32) * _scale(hd)
+    if shard is not None:
+        logits = shard(logits, "attn_logits")
+    qpos = cache_len + jnp.arange(T)                     # [T] absolute
+    kpos = jnp.arange(Sc)                                # cache row == pos
+    valid = (kpos[None, :] <= qpos[:, None]) & \
+            (kpos[None, :] >= min_kpos)                  # [T,Sc]
+    if window:
+        valid = valid & (qpos[:, None] - kpos[None, :] < window)
+    logits = jnp.where(valid[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
 
 
 def attention_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,

@@ -62,10 +62,15 @@ def _conv_causal(xBC, conv_w):
     return jax.nn.silu(out)
 
 
-def ssd_chunked(x, dt, A, B, C, chunk: int):
+def ssd_chunked(x, dt, A, B, C, chunk: int, state0=None):
     """SSD scan. x:[b,S,nh,hd] dt:[b,S,nh] A:[nh] B,C:[b,S,G,N].
 
-    Returns y:[b,S,nh,hd] and final state [b,nh,hd,N].
+    Returns y:[b,S,nh,hd] and final state [b,nh,hd,N]. ``state0`` seeds
+    the carried state (default zeros) — chunked prefill (DESIGN.md
+    §Serving) resumes the recurrence from the previous chunk's state.
+    A token with dt == 0 is an exact no-op on the state (decay
+    exp(0·A)=1, update dt·B·x=0), which is how length-masked chunks keep
+    ragged prompts from polluting the recurrence.
     """
     b, S, nh, hd = x.shape
     G, N = B.shape[2], B.shape[3]
@@ -105,7 +110,8 @@ def ssd_chunked(x, dt, A, B, C, chunk: int):
         new_state = state * cd[:, :, None, None] + cs
         return new_state, y_intra + y_inter
 
-    init = jnp.zeros((b, nh, hd, N), x.dtype)
+    init = jnp.zeros((b, nh, hd, N), x.dtype) if state0 is None \
+        else state0.astype(x.dtype)
     xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
           jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
     final, ys = U.scan(step, init, xs)
@@ -113,9 +119,13 @@ def ssd_chunked(x, dt, A, B, C, chunk: int):
     return y, final
 
 
-def apply_mamba(cfg, p, x, *, state=None, mode: str = "train"):
+def apply_mamba(cfg, p, x, *, state=None, mode: str = "train",
+                n_valid=None):
     """x:[B,S,D]. mode train/prefill: chunked SSD (returns final state for
-    prefill). mode decode: S==1 single-step update using `state`."""
+    prefill). mode decode: S==1 single-step update using `state`.
+    mode chunk: S==T tokens extend `state` in one step (chunked prefill);
+    only the first ``n_valid`` tokens are real — the rest are exact
+    no-ops on both the conv window and the SSD recurrence."""
     s = cfg.ssm
     d_in, nh, conv_dim = dims(cfg)
     zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
@@ -151,6 +161,39 @@ def apply_mamba(cfg, p, x, *, state=None, mode: str = "train"):
         out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
         new_state = {"conv": window[:, 1:, :], "ssm": ssm_new}
         return out, new_state
+
+    if mode == "chunk":
+        assert state is not None and n_valid is not None
+        conv_st, ssm_st = state["conv"], state["ssm"]
+        bsz, T = x.shape[0], x.shape[1]
+        K = s.conv_kernel
+        xBC = jnp.concatenate([xs, B, C], axis=-1)            # [B,T,Cd]
+        ext = jnp.concatenate([conv_st.astype(xBC.dtype), xBC], axis=1)
+        conv = sum(ext[:, i:i + T, :] * p["conv_w"][i][None, None, :]
+                   for i in range(K))
+        conv = jax.nn.silu(conv)                              # [B,T,Cd]
+        xs2, B2, C2 = jnp.split(conv, [d_in, d_in + s.n_groups * s.d_state],
+                                axis=-1)
+        xh = xs2.reshape(bsz, T, nh, s.head_dim)
+        Bg = B2.reshape(bsz, T, s.n_groups, s.d_state)
+        Cg = C2.reshape(bsz, T, s.n_groups, s.d_state)
+        # length mask AFTER softplus: dt==0 => exact state no-op in SSD
+        dt = jnp.where(jnp.arange(T)[None, :, None] < n_valid, dt, 0.0)
+        y, final = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                               Bg.astype(jnp.float32), Cg.astype(jnp.float32),
+                               T, state0=ssm_st.astype(jnp.float32))
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+            xh.astype(jnp.float32)
+        y = y.reshape(bsz, T, d_in).astype(x.dtype)
+        y = rms_norm_simple(
+            y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+            p["gate_norm"])
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+        # conv window ending at the last VALID token: ext rows
+        # [n_valid, n_valid+K-2]. n_valid==0 passes conv_st through.
+        new_conv = jax.lax.dynamic_slice_in_dim(ext, n_valid, K - 1, axis=1)
+        return out, {"conv": new_conv.astype(conv_st.dtype),
+                     "ssm": final.astype(ssm_st.dtype)}
 
     xBC = jnp.concatenate([xs, B, C], axis=-1)
     conv = _conv_causal(xBC, p["conv_w"])

@@ -56,6 +56,34 @@ def _cache_write(cache_arr, new, idx):
     return jnp.where(onehot, new.astype(cache_arr.dtype), cache_arr)
 
 
+def _cache_write_chunk(cache_arr, new, start):
+    """Write a T-row chunk at rows [start, start+T). cache:[B,S,kv,hd],
+    new:[B,T,kv,hd], start traced. Masked one-hot (the sharding-safe
+    write discipline of _cache_write): each hit row receives exactly one
+    ``1.0 * new[t]`` term plus zeros — exact, so chunked prefill stays
+    bitwise on the cache contents."""
+    S, T = cache_arr.shape[1], new.shape[1]
+    sel = (jnp.arange(S)[None, :] == (start + jnp.arange(T))[:, None])
+    scat = jnp.einsum("ts,btkh->bskh", sel.astype(cache_arr.dtype),
+                      new.astype(cache_arr.dtype))
+    return jnp.where(sel.any(axis=0)[None, :, None, None], scat, cache_arr)
+
+
+def _ring_write_chunk(ring, new, start, n_valid):
+    """Sliding-window variant of :func:`_cache_write_chunk`: token t lands
+    in ring slot ``(start + t) % w``, and ONLY the first ``n_valid`` tokens
+    write — a padded token's slot may wrap onto a still-in-window row, so
+    ragged chunks must mask here, not rely on later overwrites."""
+    w, T = ring.shape[1], new.shape[1]
+    assert T <= w, (T, w)              # distinct slots per chunk
+    tpos = start + jnp.arange(T)
+    sel = (tpos[:, None] % w == jnp.arange(w)[None, :]) & \
+          (jnp.arange(T)[:, None] < n_valid)
+    scat = jnp.einsum("ts,btkh->bskh", sel.astype(ring.dtype),
+                      new.astype(ring.dtype))
+    return jnp.where(sel.any(axis=0)[None, :, None, None], scat, ring)
+
+
 def _pick_chunk(s: int, cap: int = 1024) -> int:
     c = 1
     while c < cap and s % (c * 2) == 0:
@@ -167,7 +195,8 @@ def init_cache(cfg, batch: int, cache_size: int, dtype=None):
 # ---------------------------------------------------------------------------
 
 
-def _attn_layer(cfg, p, x, *, mixer: str, mode: str, cache, positions, shard):
+def _attn_layer(cfg, p, x, *, mixer: str, mode: str, cache, positions, shard,
+                pool=None, n_valid=None):
     B, S, D = x.shape
     hd = cfg.resolved_head_dim
     theta = cfg.rope_theta
@@ -184,23 +213,54 @@ def _attn_layer(cfg, p, x, *, mixer: str, mode: str, cache, positions, shard):
     q, k, v = shard(q, "qkv"), shard(k, "qkv"), shard(v, "qkv")
     new_cache = cache
 
-    if mode == "decode":
-        plen = cache["len"] if isinstance(cache, dict) and "len" in cache else None
-        # cache handling: write this token's k/v, then attend
-        kc, vc, clen = cache["k"], cache["v"], cache["len"]
-        if mixer == "swa":
-            w = kc.shape[1]
-            slot = clen % w
-            kc = _cache_write(kc, k, slot)
-            vc = _cache_write(vc, v, slot)
-            out = attn_lib.attention_decode(q, kc, vc, clen + 1,
-                                            window=cfg.sliding_window,
-                                            shard=shard)
+    if mode in ("decode", "chunk"):
+        clen = cache["len"]
+        # paged full-attention lanes: reconstruct the CONTIGUOUS cache from
+        # the lane's page table (an exact gather — attention below is
+        # bitwise the dense path), attend on the copy, and hand the new
+        # k/v rows back for the engine to scatter into the pools.
+        paged = pool is not None and mixer == "attn"
+        if paged:
+            kc = attn_lib.gather_pages(pool["k"], cache["_pages"])
+            vc = attn_lib.gather_pages(pool["v"], cache["_pages"])
         else:
-            kc = _cache_write(kc, k, clen)
-            vc = _cache_write(vc, v, clen)
-            out = attn_lib.attention_decode(q, kc, vc, clen + 1, shard=shard)
-        new_cache = {"k": kc, "v": vc, "len": clen}
+            kc, vc = cache["k"], cache["v"]
+        if mode == "decode":
+            # cache handling: write this token's k/v, then attend
+            if mixer == "swa":
+                w = kc.shape[1]
+                kc = _cache_write(kc, k, clen % w)
+                vc = _cache_write(vc, v, clen % w)
+                out = attn_lib.attention_decode(q, kc, vc, clen + 1,
+                                                window=cfg.sliding_window,
+                                                shard=shard)
+            else:
+                kc = _cache_write(kc, k, clen)
+                vc = _cache_write(vc, v, clen)
+                out = attn_lib.attention_decode(q, kc, vc, clen + 1,
+                                                shard=shard)
+        else:  # chunk: S tokens at positions clen..clen+S-1, then attend
+            if mixer == "swa":
+                w = kc.shape[1]
+                assert S <= w, \
+                    f"prefill chunk {S} exceeds sliding window ring {w}"
+                # unroll the ring to position order, append the chunk:
+                # gathered row j holds absolute position clen - w + j
+                idx = (clen - w + jnp.arange(w)) % w
+                kg = jnp.concatenate([kc[:, idx], k], axis=1)
+                vg = jnp.concatenate([vc[:, idx], v], axis=1)
+                out = attn_lib.attention_chunk_decode(
+                    q, kg, vg, w, window=cfg.sliding_window,
+                    min_kpos=jnp.maximum(w - clen, 0), shard=shard)
+                kc = _ring_write_chunk(kc, k, clen, n_valid)
+                vc = _ring_write_chunk(vc, v, clen, n_valid)
+            else:
+                kc = _cache_write_chunk(kc, k, clen)
+                vc = _cache_write_chunk(vc, v, clen)
+                out = attn_lib.attention_chunk_decode(q, kc, vc, clen,
+                                                      shard=shard)
+        new_cache = {"new_k": k, "new_v": v} if paged \
+            else {"k": kc, "v": vc, "len": clen}
     else:
         cq = _pick_chunk(S)
         if mixer == "swa":
@@ -227,17 +287,20 @@ def _attn_layer(cfg, p, x, *, mixer: str, mode: str, cache, positions, shard):
                       preferred_element_type=row_parallel_pet(x.dtype)), new_cache
 
 
-def _apply_layer(cfg, p, x, *, mixer, ffn, mode, cache, positions, shard):
+def _apply_layer(cfg, p, x, *, mixer, ffn, mode, cache, positions, shard,
+                 pool=None, n_valid=None):
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(cfg, p["norm1"], x)
     if mixer == "mamba":
         mix_out, new_state = ssm_lib.apply_mamba(cfg, p["mamba"], h,
-                                                 state=cache, mode=mode)
+                                                 state=cache, mode=mode,
+                                                 n_valid=n_valid)
         new_cache = new_state if new_state is not None else cache
     else:
         mix_out, new_cache = _attn_layer(cfg, p["attn"], h, mixer=mixer,
                                          mode=mode, cache=cache,
-                                         positions=positions, shard=shard)
+                                         positions=positions, shard=shard,
+                                         pool=pool, n_valid=n_valid)
     x = x + mix_out
     if ffn != "none":
         h = apply_norm(cfg, p["norm2"], x)
@@ -249,24 +312,31 @@ def _apply_layer(cfg, p, x, *, mixer, ffn, mode, cache, positions, shard):
     return shard(x, "act"), new_cache, aux
 
 
-def _block_fn(cfg, pattern, mode, positions, shard):
-    """Returns f(x, block_params, block_cache) -> (x, new_cache, aux)."""
-    def f(x, bp, bc):
+def _block_fn(cfg, pattern, mode, positions, shard, n_valid=None):
+    """Returns f(x, block_params, block_cache, block_pools) ->
+    (x, new_cache, aux)."""
+    def f(x, bp, bc, pb=None):
         aux_total = jnp.zeros((), jnp.float32)
         new_bc = {}
         for i, (mixer, ffn) in enumerate(pattern):
             key = f"layer_{i}"
             layer_cache = None if bc is None else bc.get(key)
-            if layer_cache is not None and mode == "decode" and mixer != "mamba":
+            if layer_cache is not None and mode in ("decode", "chunk") \
+                    and mixer != "mamba":
                 layer_cache = dict(layer_cache)
                 layer_cache["len"] = bc["_len"]
+                if "_pages" in bc:
+                    layer_cache["_pages"] = bc["_pages"]
+            pool = None if pb is None else pb.get(key)
             x, nc, aux = _apply_layer(
                 cfg, bp[key], x, mixer=mixer, ffn=ffn, mode=mode,
-                cache=layer_cache, positions=positions, shard=shard)
-            if nc is not None and mode in ("prefill", "decode"):
+                cache=layer_cache, positions=positions, shard=shard,
+                pool=pool, n_valid=n_valid)
+            if nc is not None and mode in ("prefill", "decode", "chunk"):
                 nc = dict(nc) if isinstance(nc, dict) else nc
                 if isinstance(nc, dict):
                     nc.pop("len", None)
+                    nc.pop("_pages", None)
                 new_bc[key] = nc
             aux_total = aux_total + aux
         return x, (new_bc if new_bc else None), aux_total
@@ -279,23 +349,35 @@ def _block_fn(cfg, pattern, mode, positions, shard):
 
 
 def forward(cfg, params, tokens, *, mode: str = "train",
-            cache=None, prefix_embeds=None, shard: Callable = Identity):
+            cache=None, prefix_embeds=None, shard: Callable = Identity,
+            n_valid=None, pools=None):
     """Returns (hidden [B,S',D], new_cache, aux_loss).
 
     mode="train": full causal pass, no cache.
     mode="prefill": full pass, builds cache.
     mode="decode": tokens is [B,1]; requires cache; S'=1.
+    mode="chunk": tokens is [B,T] — a fixed-shape prefill chunk extending
+    the cache at positions [len, len+T); only the first ``n_valid``
+    (traced scalar) tokens are real, the tail is length masking for
+    ragged prompts. ``len`` advances by n_valid.
+
+    ``pools`` (paged KV, DESIGN.md §Serving): {"blocks"/"tail": {layer_i:
+    {"k","v": [..., n_pages, page, KVH, hd]}}} global page pools for
+    full-attention layers; the per-lane page table rides in
+    ``cache["pages"]``. With pools, those layers return {"new_k","new_v"}
+    rows in new_cache instead of a written cache — the caller owns the
+    pool scatter (serve/paged.py).
     """
     dtype = jnp.dtype(cfg.dtype)
     x = params["embed"][tokens].astype(dtype)
     x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
-    if prefix_embeds is not None and mode != "decode":
+    if prefix_embeds is not None and mode in ("train", "prefill"):
         pref = mm_lib.project_prefix(params["frontend"], prefix_embeds, dtype)
         x = jnp.concatenate([pref, x], axis=1)
     x = shard(x, "act")
     B, S = x.shape[0], x.shape[1]
 
-    if mode == "decode":
+    if mode in ("decode", "chunk"):
         positions = (cache["len"] + jnp.arange(S))[None, :]
     else:
         positions = jnp.arange(S)[None, :]
@@ -303,45 +385,59 @@ def forward(cfg, params, tokens, *, mode: str = "train",
 
     aux_total = jnp.zeros((), jnp.float32)
     clen = None if cache is None else cache["len"]
+    pages = None if cache is None else cache.get("pages")
 
     # scanned full blocks
     if cfg.n_full_blocks > 0:
-        bf = _block_fn(cfg, cfg.pattern, mode, positions, shard)
+        bf = _block_fn(cfg, cfg.pattern, mode, positions, shard,
+                       n_valid=n_valid)
 
         def scan_body(carry, xs):
             xc, aux = carry
-            bp, bc = xs
-            if bc is not None and mode == "decode":
+            bp, bc, pb = xs
+            if bc is not None and mode in ("decode", "chunk"):
                 bc = dict(bc)
                 bc["_len"] = clen
-            xc, new_bc, a = bf(xc, bp, bc)
+                if pages is not None:
+                    bc["_pages"] = pages
+            xc, new_bc, a = bf(xc, bp, bc, pb)
             return (xc, aux + a), new_bc
 
         if cfg.remat and mode == "train":
             scan_body = jax.checkpoint(scan_body)
         cache_blocks = None if cache is None else cache.get("blocks")
+        pool_blocks = None if pools is None else pools.get("blocks")
         (x, aux_total), new_blocks = U.scan(
-            scan_body, (x, aux_total), (params["blocks"], cache_blocks))
+            scan_body, (x, aux_total),
+            (params["blocks"], cache_blocks, pool_blocks))
     else:
         new_blocks = None
 
     # unrolled tail
     new_tail = None
     if cfg.tail_pattern:
-        bf = _block_fn(cfg, cfg.tail_pattern, mode, positions, shard)
+        bf = _block_fn(cfg, cfg.tail_pattern, mode, positions, shard,
+                       n_valid=n_valid)
         tc = None if cache is None else cache.get("tail")
-        if tc is not None and mode == "decode":
+        if tc is not None and mode in ("decode", "chunk"):
             tc = dict(tc)
             tc["_len"] = clen
-        x, new_tail, a = bf(x, params["tail"], tc)
+            if pages is not None:
+                tc["_pages"] = pages
+        x, new_tail, a = bf(x, params["tail"], tc,
+                            None if pools is None else pools.get("tail"))
         aux_total = aux_total + a
 
     x = apply_norm(cfg, params["final_norm"], x)
     x = shard(x, "act")
 
     new_cache = None
-    if mode in ("prefill", "decode"):
-        new_cache = {"len": (clen + S) if clen is not None else jnp.asarray(S, jnp.int32)}
+    if mode in ("prefill", "decode", "chunk"):
+        adv = n_valid if mode == "chunk" else S
+        new_cache = {"len": (clen + adv) if clen is not None
+                     else jnp.asarray(S, jnp.int32)}
+        if pages is not None:
+            new_cache["pages"] = pages
         if new_blocks is not None:
             new_cache["blocks"] = new_blocks
         if new_tail is not None:

@@ -178,11 +178,20 @@ class CheckpointFollower:
             # fp32 next to the comm copy / EF residual — only the params
             # matter for serving
             like = {"params": stacked}
+            codec = make_codec(meta["codec"]["spec"])
+            layout = B.build_layout(stacked, block=codec.block)
             if "prev" in meta["codec"]["state"]:
-                like["prev"] = self._stacked_like()
+                if meta["codec"].get("compress_state"):
+                    # --compress-state runs checkpoint `prev` as the codec
+                    # WIRE tuple (core/swarm.py codec_checkpoint_tree), not
+                    # a dense stacked tree: node-contiguous blocked rows
+                    rows = self.n_nodes * (layout.n_padded // codec.block)
+                    like["prev"] = tuple(
+                        jnp.zeros(s.shape, s.dtype)
+                        for s in codec.wire_layout().wire_sds(rows))
+                else:
+                    like["prev"] = self._stacked_like()
             if "residual" in meta["codec"]["state"]:
-                codec = make_codec(meta["codec"]["spec"])
-                layout = B.build_layout(stacked, block=codec.block)
                 like["residual"] = jnp.zeros(
                     (self.n_nodes, layout.n_padded), jnp.float32)
             tree = load_checkpoint(base, like)

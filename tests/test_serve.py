@@ -360,6 +360,126 @@ def test_train_ckpt_every_then_serve_follow_cli(tmp_path, capsys,
     assert rec["swaps_adopted"] >= 1
 
 
+# ---------------------------------------------------------------------------
+# Paged KV + chunked prefill: bitwise vs the dense blocking oracle
+# (unit-level coverage in tests/test_paged_kv.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "olmo-1b"])
+@pytest.mark.parametrize("chunk", [0, 4])
+def test_paged_engine_bitwise_vs_dense_across_hot_swap(arch, chunk):
+    """The paged engine's SAMPLED token stream is bit-for-bit the dense
+    engine's under the same keys — across admissions, retirements and a
+    mid-run hot swap — with zero decode recompiles. Paired per prefill
+    schedule: blocking-vs-blocking and chunked-vs-chunked (the two prefill
+    paths reduce softmax in different shapes, so cross-schedule equality
+    is only guaranteed greedy; temperature sampling makes this pairing a
+    STRONG bitwise check). page_size divides kv_capacity so both layouts
+    share the attention reduction shape."""
+    cfg = _cfg(arch)
+    pA, pB = _params(cfg, 0), _params(cfg, 1)
+    prompts = _prompts(cfg, 6, 8)
+    kw = dict(max_slots=2, prompt_len=8, max_new_tokens=8,
+              temperature=0.7, prefill_chunk=chunk)
+
+    def run(**extra):
+        eng = ServeEngine(cfg, EngineConfig(**kw, **extra), params=pA)
+        for i in range(4):
+            eng.submit(Request(i, prompts[i]))
+        eng.step(); eng.step()
+        eng.swap.publish(pB, tag="B")
+        eng.submit(Request(4, prompts[4]))
+        eng.submit(Request(5, prompts[5]))
+        eng.drain()
+        return eng
+
+    # pin both sides (a REPRO_SERVE_PAGED=1 session would otherwise flip
+    # the oracle paged too and the comparison would be trivial)
+    dense = run(paged=False)
+    paged = run(paged=True, page_size=4)     # 4 divides kv_capacity 16
+    got_d = {c.rid: (c.tokens.tolist(), c.gen) for c in dense.completions}
+    got_p = {c.rid: (c.tokens.tolist(), c.gen) for c in paged.completions}
+    assert got_p == got_d and len(got_p) == 6
+    for eng in (dense, paged):
+        s = eng.metrics.summary()
+        assert s["decode_cache_misses"] == 0
+        assert s["prefill_cache_misses"] == 0
+        assert s["dropped_in_flight"] == 0 and s["swaps_adopted"] == 2
+    if paged.allocator is not None:          # pure-SSM archs run dense:
+        assert paged.allocator.in_use == 0   # every retire freed its pages
+    # the TTFT/queue-wait series exist and prefill cost never leaks into
+    # the decode-latency series as a giant outlier (the old _admit bug
+    # recorded blocking prefill wall time as a decode-step latency)
+    assert len(dense.metrics.ttft_s) == 6
+    assert len(dense.metrics.queue_wait_s) == 6
+
+
+# ---------------------------------------------------------------------------
+# CheckpointFollower on --compress-state runs (wire-tuple `prev`)
+# ---------------------------------------------------------------------------
+
+
+def test_follower_compress_state_checkpoint(tmp_path):
+    """A --compress-state checkpoint stores `prev` as the codec WIRE tuple
+    (core/swarm.py), not a dense stacked tree; the follower must build the
+    matching template from the metadata flag instead of crashing on a
+    structure mismatch."""
+    from repro.quant.codecs import make_codec
+    cfg = _cfg()
+    params = _params(cfg)
+    stacked = _stacked(params)
+    codec = make_codec("q8")
+    layout = B.build_layout(stacked, block=codec.block)
+    prev = codec.encode_state(B.pack(layout, stacked),
+                              jax.random.PRNGKey(3))
+    save_checkpoint(str(tmp_path / "step_000002"),
+                    jax.device_get({"params": stacked, "prev": prev}),
+                    {"arch": cfg.name, "nodes": N_NODES,
+                     "codec": {"spec": "q8", "state": ["params", "prev"],
+                               "compress_state": True}})
+    fol = CheckpointFollower(str(tmp_path), params, N_NODES)
+    upd = fol.poll()
+    assert upd is not None
+    assert _trees_equal(upd.params, mean_model_tree(stacked))
+
+
+def test_train_compress_state_then_serve_follow_cli(tmp_path, capsys,
+                                                    monkeypatch):
+    """End to end: a hierarchical --compress-state run checkpoints its
+    wire-tuple codec state; serve --follow materializes the mean and
+    serves — the exact combination that used to crash the follower."""
+    from repro.launch.serve import main as serve_main
+    from repro.launch.train import main as train_main
+    run_dir = str(tmp_path / "run")
+    monkeypatch.delenv("REPRO_AVAIL_PROFILE", raising=False)
+    monkeypatch.delenv("REPRO_TOPOLOGY", raising=False)
+    monkeypatch.setattr(sys, "argv", [
+        "train", "--arch", "mamba2-780m", "--reduced", "--layers", "1",
+        "--d-model", "32", "--nodes", "4", "--steps", "4", "--batch", "1",
+        "--seq", "16", "--quantize", "--codec", "q8", "--compress-state",
+        "--topology", "hier:2", "--ckpt", run_dir, "--ckpt-every", "2",
+        "--log-every", "2"])
+    train_main()
+    capsys.readouterr()
+    meta = json.loads(
+        (tmp_path / "run" / "step_000004.json").read_text())["metadata"]
+    assert meta["codec"]["compress_state"] is True
+    assert "prev" in meta["codec"]["state"]
+
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--arch", "mamba2-780m", "--reduced", "--layers", "1",
+        "--d-model", "32", "--source", "follow", "--follow", run_dir,
+        "--nodes", "4", "--prompt-len", "8", "--gen", "4",
+        "--requests", "2", "--slots", "2", "--wait-s", "10"])
+    serve_main()
+    out = capsys.readouterr().out
+    rec = json.loads([ln for ln in out.splitlines()
+                      if ln.startswith("{\"serve\"")][0])["serve"]
+    assert rec["completed"] == 2 and rec["dropped_in_flight"] == 0
+    assert rec["swaps_adopted"] >= 1
+
+
 def test_serve_cli_weights_roundtrip(tmp_path, capsys, monkeypatch):
     """--weights feeds a codec serving checkpoint into the one-shot path;
     generation under the decoded weights is deterministic (greedy)."""
